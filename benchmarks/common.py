@@ -1,0 +1,114 @@
+"""Shared benchmark utilities: worlds, timing, tables, result persistence.
+
+Scale note (DESIGN.md §5): the paper runs 60k tweets / 2.3M stream triples
+against DBpedia (368M triples) on 48 cores; this container is one CPU core,
+so sizes here are scaled so each experiment finishes in seconds while
+preserving every *relationship* the paper measures (KB-access dominance,
+~linear used-KB scaling, split-query speedup).  Compile time is excluded —
+the paper reports steady-state processing time per window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.rdf import Vocab
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "bench_results")
+
+
+@dataclasses.dataclass
+class BenchWorld:
+    vocab: Vocab
+    kbd: object
+    tweets: TweetSchema
+    chunks: list
+
+
+def build_world(
+    num_tweets: int = 256,
+    num_artists: int = 64,
+    num_shows: int = 32,
+    filler: int = 2000,
+    chunk_capacity: int = 1024,
+    co_mention: bool = True,
+    seed: int = 0,
+) -> BenchWorld:
+    vocab = Vocab()
+    kbd = generate_kb(
+        vocab,
+        KBConfig(num_artists=num_artists, num_shows=num_shows,
+                 filler_triples=filler, seed=seed),
+    )
+    tweets = TweetSchema.create(vocab)
+    pool = (
+        np.concatenate([kbd.artist_ids, kbd.show_ids])
+        if co_mention else kbd.artist_ids
+    )
+    rows = generate_tweets(
+        vocab, tweets, pool,
+        TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                          mentions_max=4, seed=seed),
+    )
+    return BenchWorld(vocab, kbd, tweets, list(stream_chunks(rows, chunk_capacity)))
+
+
+def _block(x):
+    return jax.tree.map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a, x
+    )
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> Dict[str, float]:
+    """Median/min wall time of ``fn(*args)`` with compile excluded."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return {
+        "median_s": float(np.median(times)),
+        "min_s": float(np.min(times)),
+        "mean_s": float(np.mean(times)),
+        "iters": iters,
+    }
+
+
+# --------------------------------------------------------------------------
+# reporting
+# --------------------------------------------------------------------------
+
+def format_table(title: str, headers: List[str], rows: List[List]) -> str:
+    widths = [
+        max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+        for i, h in enumerate(headers)
+    ]
+    def fmt_row(vals):
+        return " | ".join(str(v).ljust(w) for v, w in zip(vals, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    lines = [f"== {title} ==", fmt_row(headers), sep] + [fmt_row(r) for r in rows]
+    return "\n".join(lines)
+
+
+def save_results(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def ms(x: float) -> str:
+    return f"{x * 1e3:.1f} ms"

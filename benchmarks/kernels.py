@@ -1,0 +1,156 @@
+"""Pallas kernel micro-benchmarks: fidelity + shape sweeps vs ref oracles.
+
+This container executes kernels in ``interpret=True`` mode (Python on CPU),
+so wall-clock here is NOT TPU performance — the numbers that matter for the
+kernels are the roofline terms in EXPERIMENTS.md §Roofline.  What this bench
+certifies per kernel: (a) allclose vs the pure-jnp oracle at benchmark
+shapes, (b) the jnp fallback's wall time (the path XLA actually runs on CPU),
+(c) arithmetic-intensity bookkeeping used by the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kb import kb_from_triples
+from repro.core.pattern import Bindings, CompiledPattern, Slot
+
+from repro.kernels.closure import ops as cl_ops
+from repro.kernels.closure.ref import closure_ref
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_join import ops as hj_ops
+from repro.kernels.hash_join.ref import match_matrix_ref
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd.ref import ssd_ref
+
+from .common import format_table, ms, save_results, time_fn
+
+
+def bench_flash_attention():
+    rows, out = [], {}
+    for (b, hq, hk, t, d), win in [((1, 4, 2, 256, 64), None),
+                                   ((2, 8, 2, 512, 64), None),
+                                   ((1, 4, 4, 512, 64), 128)]:
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(t), 3)
+        q = jax.random.normal(k1, (b, hq, t, d), jnp.float32)
+        k = jax.random.normal(k2, (b, hk, t, d), jnp.float32)
+        v = jax.random.normal(k3, (b, hk, t, d), jnp.float32)
+        got = fa_ops.flash_attention(q, k, v, causal=True, window=win)
+        want = attention_ref(q, k, v, causal=True, window=win)
+        err = float(jnp.max(jnp.abs(got - want)))
+        ref_fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True,
+                                                       window=win))
+        tt = time_fn(ref_fn, q, k, v, iters=3)
+        flops = 4 * b * hq * t * t * d   # qk + av
+        key = f"b{b}h{hq}/{hk}t{t}d{d}" + (f"w{win}" if win else "")
+        out[key] = {"max_err": err, "jnp_s": tt["median_s"], "flops": flops}
+        rows.append(["flash_attention", key, f"{err:.2e}", ms(tt["median_s"])])
+    return out, rows
+
+
+def bench_decode_attention():
+    rows, out = [], {}
+    for b, hq, hk, s, d in [(4, 8, 2, 1024, 64), (8, 8, 8, 4096, 128)]:
+        ks = jax.random.split(jax.random.PRNGKey(s), 3)
+        q = jax.random.normal(ks[0], (b, hq, 1, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hk, s, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hk, s, d), jnp.float32)
+        lengths = jnp.asarray(
+            np.random.default_rng(s).integers(s // 2, s + 1, size=b), jnp.int32)
+        got = da_ops.decode_attention(q, k, v, lengths)
+        want = decode_attention_ref(q, k, v, lengths)
+        err = float(jnp.max(jnp.abs(got - want)))
+        ref_fn = jax.jit(decode_attention_ref)
+        tt = time_fn(ref_fn, q, k, v, lengths, iters=3)
+        key = f"b{b}h{hq}/{hk}s{s}d{d}"
+        out[key] = {"max_err": err, "jnp_s": tt["median_s"]}
+        rows.append(["decode_attention", key, f"{err:.2e}", ms(tt["median_s"])])
+    return out, rows
+
+
+def bench_ssd():
+    rows, out = [], {}
+    for b, t, nh, hd, s in [(1, 256, 4, 32, 32), (2, 512, 8, 32, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(b + t), 5)
+        x = jax.random.normal(ks[0], (b, t, nh, hd), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, nh), jnp.float32))
+        A = -jnp.exp(jax.random.normal(ks[2], (nh,), jnp.float32) * 0.3)
+        B = jax.random.normal(ks[3], (b, t, 1, s), jnp.float32)
+        C = jax.random.normal(ks[4], (b, t, 1, s), jnp.float32)
+        D = jnp.ones((nh,), jnp.float32)
+        got = ssd_ops.ssd(x, dt, A, B, C, D, use_pallas=True)
+        want, _ = ssd_ref(x, dt, A, B, C, D)
+        err = float(jnp.max(jnp.abs(got - want)))
+        ref_fn = jax.jit(lambda *a: ssd_ref(*a)[0])
+        tt = time_fn(ref_fn, x, dt, A, B, C, D, iters=3)
+        key = f"b{b}t{t}h{nh}p{hd}s{s}"
+        out[key] = {"max_err": err, "jnp_s": tt["median_s"]}
+        rows.append(["ssd_chunk_scan", key, f"{err:.2e}", ms(tt["median_s"])])
+    return out, rows
+
+
+def bench_closure():
+    rows, out = [], {}
+    for n in [128, 256, 512]:
+        rng = np.random.default_rng(n)
+        adj = jnp.asarray((rng.random((n, n)) < 0.02).astype(np.float32))
+        got = cl_ops.transitive_closure(adj, max_depth=n, use_pallas=True)
+        want = closure_ref(adj, steps=int(np.ceil(np.log2(n))))
+        ok = bool(jnp.all(got == (want > 0.5)))
+        ref_fn = jax.jit(lambda a: closure_ref(a, steps=int(np.ceil(np.log2(n)))))
+        tt = time_fn(ref_fn, adj, iters=3)
+        out[f"n{n}"] = {"exact": ok, "jnp_s": tt["median_s"]}
+        rows.append(["closure", f"n{n}", "exact" if ok else "MISMATCH",
+                     ms(tt["median_s"])])
+    return out, rows
+
+
+def bench_hash_join():
+    rows, out = [], {}
+    for m, n in [(128, 1024), (256, 4096), (512, 8192)]:
+        rng = np.random.default_rng(m + n)
+        base = 5000
+        cols = rng.integers(base, base + 200, size=(m, 2)).astype(np.uint32)
+        kb_rows = [
+            (int(rng.integers(base, base + 200)), 1,
+             int(rng.integers(base, base + 200)))
+            for _ in range(n - 8)
+        ]
+        kb = kb_from_triples(kb_rows, capacity=n)
+        bind = Bindings(jnp.asarray(cols), jnp.ones((m,), bool),
+                        jnp.zeros((), bool))
+        pat = CompiledPattern(Slot.bound(0), Slot.const_(1), Slot.free(1))
+        got = hj_ops.match_matrix(bind, kb, pat)
+        want = match_matrix_ref(bind.cols, bind.valid, kb.s_ps, kb.p_ps,
+                                kb.o_ps, kb.valid, pat)
+        ok = bool(jnp.all(got == want))
+        ref_fn = jax.jit(lambda c, v: match_matrix_ref(
+            c, v, kb.s_ps, kb.p_ps, kb.o_ps, kb.valid, pat))
+        tt = time_fn(ref_fn, bind.cols, bind.valid, iters=3)
+        out[f"m{m}xn{n}"] = {"exact": ok, "jnp_s": tt["median_s"]}
+        rows.append(["hash_join", f"{m}x{n}", "exact" if ok else "MISMATCH",
+                     ms(tt["median_s"])])
+    return out, rows
+
+
+def run() -> dict:
+    all_rows, results = [], {}
+    for fn in (bench_hash_join, bench_closure, bench_flash_attention,
+               bench_decode_attention, bench_ssd):
+        out, rows = fn()
+        results[fn.__name__] = out
+        all_rows += rows
+    print(format_table(
+        "Pallas kernels — fidelity sweeps (interpret mode) + jnp-path wall time",
+        ["kernel", "shape", "vs ref", "jnp time"], all_rows,
+    ))
+    save_results("kernels", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

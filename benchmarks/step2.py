@@ -1,0 +1,149 @@
+"""Paper Tables 2-3 (second step): CQuery1 monolithic vs decomposed (Fig. 4).
+
+Table 2: the whole CQuery1 in ONE operator against the full KB.
+Table 3: the automatic decomposition — artist-KB operator (QueryA), show-KB
+operator (QueryB) each against their pruned used-KB slice, plus the
+aggregation operator (QueryG).  The paper's headline: 29% (scan) / 23%
+(probe) processing-time reduction with identical results.
+
+We report both the paper-faithful *critical path* (operators on separate
+machines: ``max(QueryA, QueryB) + QueryG`` — upstream operators run in
+parallel, Fig. 4) and the fused single-program time (beyond-paper: the whole
+DAG traced into one XLA program, our TPU-native deployment mode).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import paper_queries as PQ
+from repro.core.planner import decompose
+from repro.core.rdf import to_host_rows
+from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+
+from .common import BenchWorld, build_world, format_table, ms, save_results, time_fn
+
+WINDOW_CAP = 256
+MAX_WINDOWS = 4
+
+
+def _cfg(method: str) -> RuntimeConfig:
+    return RuntimeConfig(
+        window_capacity=WINDOW_CAP, max_windows=MAX_WINDOWS,
+        bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=method,
+    )
+
+
+def _results(out):
+    return sorted(set((r[0], r[1], r[2]) for r in to_host_rows(out)))
+
+
+def run(world: BenchWorld = None, iters: int = 5) -> dict:
+    world = world or build_world(num_tweets=160, num_artists=64, num_shows=32,
+                                 filler=3000, co_mention=True)
+    q = PQ.cquery1(world.vocab, world.tweets, world.kbd.schema)
+    chunk = world.chunks[0]
+    total_kb = int(np.asarray(world.kbd.kb.count()))
+    results = {}
+
+    for method in ("scan", "probe"):
+        cfg = _cfg(method)
+        mono = MonolithicRuntime(q, world.kbd.kb, cfg)
+        dag = decompose(q, world.vocab)
+        split = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
+
+        # -- results must be identical (paper: "All results are the same")
+        res_m = _results(mono.process_chunk(chunk)[0])
+        res_s = _results(split.process_chunk(chunk)[0])
+        assert res_m == res_s and len(res_m) > 0, "decomposition changed results!"
+
+        # -- Table 2: monolithic
+        t_mono = time_fn(lambda c: mono.process_chunk(c)[0], chunk, iters=iters)
+
+        # -- Table 3: per-operator steady-state times (operators as deployed
+        #    units on separate machines — each timed as its own jitted program)
+        import jax
+        from repro.core.stream import merge_streams
+        from repro.core.window import count_windows
+
+        merged = merge_streams([chunk])
+        windows = count_windows(merged, cfg.window_capacity, cfg.max_windows)
+        op_times = {}
+        upstream = {}
+        for name, op in split.operators.items():
+            if name == dag.final:
+                continue
+            fn = jax.jit(lambda w, kb, env, op=op: op.process_windows(w, kb, env))
+            op_times[name] = time_fn(fn, windows, op.kb, op.env, iters=iters)
+            upstream[name] = op.process_windows(windows, op.kb, op.env)[0]
+
+        # aggregation operator on the window-aligned augmented stream
+        import jax.numpy as jnp
+        from repro.core.rdf import TripleBatch
+        from repro.core.window import Windows
+
+        final_op = split.operators[dag.final]
+        parts = [windows.triples] + [
+            upstream[src] for src in dag.subqueries[dag.final].inputs
+            if src != "stream"
+        ]
+        aug = TripleBatch(*(jnp.concatenate(c, axis=-1) for c in zip(*parts)))
+        aug_w = Windows(aug, windows.window_valid)
+        fn_agg = jax.jit(
+            lambda w, kb, env: final_op.process_windows(w, kb, env))
+        op_times[dag.final] = time_fn(fn_agg, aug_w, final_op.kb, final_op.env,
+                                      iters=iters)
+
+        # -- fused whole-DAG single program (beyond-paper deployment)
+        t_fused = time_fn(lambda c: split.process_chunk(c)[0], chunk, iters=iters)
+
+        kb_ops = [n for n in op_times if n != dag.final]
+        critical = max(op_times[n]["median_s"] for n in kb_ops) \
+            + op_times[dag.final]["median_s"]
+        reduction = 1.0 - critical / t_mono["median_s"]
+        fused_reduction = 1.0 - t_fused["median_s"] / t_mono["median_s"]
+
+        used = {
+            n: int(np.asarray(split.operators[n].kb.count()))
+            for n in kb_ops if split.operators[n].kb is not None
+        }
+        results[method] = {
+            "total_kb": total_kb,
+            "used_kb": used,
+            "mono_s": t_mono["median_s"],
+            "op_times_s": {n: t["median_s"] for n, t in op_times.items()},
+            "critical_path_s": critical,
+            "fused_s": t_fused["median_s"],
+            "reduction": reduction,
+            "fused_reduction": fused_reduction,
+            "n_results": len(res_m),
+        }
+
+    rows = []
+    for method, r in results.items():
+        label = "C-SPARQL KB access" if method == "scan" else "SPARQL subquery"
+        rows.append([label, "CQuery1 (mono, Table 2)", r["total_kb"],
+                     ms(r["mono_s"]), "--"])
+        for n, t in r["op_times_s"].items():
+            u = r["used_kb"].get(n, "--")
+            rows.append([label, n, u, ms(t), "--"])
+        rows.append([label, "critical path (Table 3)", "--",
+                     ms(r["critical_path_s"]), f"-{r['reduction'] * 100:.0f}%"])
+        rows.append([label, "fused DAG (beyond paper)", "--",
+                     ms(r["fused_s"]), f"-{r['fused_reduction'] * 100:.0f}%"])
+    table = format_table(
+        "Tables 2-3 — CQuery1: monolithic vs decomposed (per chunk)",
+        ["KB method", "configuration", "used/total KB", "time", "vs mono"],
+        rows,
+    )
+    print(table)
+    print(f"[check] results identical mono vs split: True")
+    print(f"[check] scan reduction (paper: 29%): "
+          f"{results['scan']['reduction'] * 100:.0f}%")
+    print(f"[check] probe reduction (paper: 23%): "
+          f"{results['probe']['reduction'] * 100:.0f}%")
+    save_results("step2_tables2_3", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,22 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+DSCEP pipeline config in :mod:`repro.configs.dscep`)."""
+from . import (  # noqa: F401
+    deepseek_v2_236b,
+    h2o_danube_1_8b,
+    jamba_v0_1_52b,
+    mamba2_130m,
+    minicpm3_4b,
+    mixtral_8x22b,
+    musicgen_large,
+    olmo_1b,
+    qwen2_1_5b,
+    qwen2_vl_7b,
+)
+from .base import ModelConfig, get_config, registered, smoke_variant  # noqa: F401
+from .shapes import ALL_SHAPES, InputShape, get_shape  # noqa: F401
+
+ALL_ARCHS = (
+    "qwen2-vl-7b", "deepseek-v2-236b", "mixtral-8x22b", "h2o-danube-1.8b",
+    "minicpm3-4b", "qwen2-1.5b", "olmo-1b", "mamba2-130m", "jamba-v0.1-52b",
+    "musicgen-large",
+)

@@ -1,0 +1,26 @@
+"""MusicGen-large [arXiv:2306.05284; hf].
+
+Decoder-only over EnCodec tokens: 4 codebooks, vocab 2048 each, per-codebook
+output heads.  The EnCodec/delay-pattern frontend is a stub —
+``input_specs()`` provides token ids (or precomputed frame embeddings).
+RoPE replaces the original sinusoidal embedding (TPU-idiomatic; DESIGN.md).
+"""
+from .base import ModelConfig, register
+
+
+@register("musicgen-large")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        num_codebooks=4,
+        frontend="audio",
+        supports_long_context=False,
+    )

@@ -1,0 +1,35 @@
+"""Assigned input shapes (one set, shared by all 10 LM-family archs).
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers a full-sequence
+``serve_prefill``; ``decode_*``/``long_*`` lower ``serve_step`` (one new token
+against a KV cache of the stated length).  ``long_500k`` requires a
+sub-quadratic attention family (SSM / hybrid / SWA) — pure full-attention
+archs skip it per DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = InputShape("train_4k", "train", 4_096, 256)
+PREFILL_32K = InputShape("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = InputShape("decode_32k", "decode", 32_768, 128)
+LONG_500K = InputShape("long_500k", "decode", 524_288, 1)
+
+ALL_SHAPES: Tuple[InputShape, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def get_shape(name: str) -> InputShape:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

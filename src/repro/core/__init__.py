@@ -1,0 +1,21 @@
+"""DSCEP core: distributed semantic complex event processing in JAX.
+
+Public surface of the paper's contribution:
+
+* :mod:`repro.core.rdf`      — dictionary-encoded triples and streams
+* :mod:`repro.core.window`   — Aggregator window management
+* :mod:`repro.core.kb`      — partitioned, probe-indexed knowledge base
+* :mod:`repro.core.algebra`  — vectorized SPARQL-subset operators
+* :mod:`repro.core.query`    — continuous-query AST
+* :mod:`repro.core.planner`  — compile / decompose / prune-used-KB
+* :mod:`repro.core.engine`   — plan executor (the RSP engine)
+* :mod:`repro.core.operator` — SCEP operator (Aggregator→engine→Publisher)
+* :mod:`repro.core.runtime`  — operator-DAG runtime (mono vs decomposed)
+* :mod:`repro.core.reasoner` — subclass/sameAs reasoning support
+"""
+from . import algebra, engine, kb, pattern, planner, query, rdf, reasoner, runtime, stream, window  # noqa: F401
+
+__all__ = [
+    "algebra", "engine", "kb", "pattern", "planner", "query", "rdf",
+    "reasoner", "runtime", "stream", "window",
+]

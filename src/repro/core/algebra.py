@@ -1,0 +1,351 @@
+"""Vectorized relational algebra over triple windows and KB partitions.
+
+This is the RSP-engine compute core: every SPARQL feature the paper's
+evaluation uses (§4.3 CQuery1 characteristics) has a static-shape, jit-able
+operator here:
+
+* basic graph patterns      -> ``scan_pattern`` + ``join``
+* KB access (two methods)   -> ``kb_join`` (``method="scan" | "probe"``)
+* FILTER (numeric / set)    -> ``filter_num`` / ``filter_in``
+* UNION                     -> ``union``
+* OPTIONAL                  -> ``optional_join``
+* property paths (len<=3)   -> chained ``kb_join`` steps (planner emits them)
+* CONSTRUCT                 -> ``construct``
+* hierarchy reasoning       -> closure sets from :mod:`repro.core.reasoner`
+                               consumed via ``filter_in`` / pruned KBs
+
+Everything is deterministic and order-preserving so that the decomposed and
+monolithic executions of a query produce identical results (paper: "All
+results are the same" — property-tested in tests/test_equivalence.py).
+
+The O(|bind| x |KB|) candidate matrix of the scan method is the compute
+hotspot; :mod:`repro.kernels.hash_join` provides the Pallas TPU kernel with
+identical semantics (``use_pallas=True`` switches the engine over).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kb import KnowledgeBase, gather_matches, probe_range
+from .pattern import Bindings, CompiledPattern, SlotMode, compact_rows
+from .rdf import NUM_BASE, PAD_ID, TripleBatch, composite_key
+
+
+# --------------------------------------------------------------------------
+# pattern scan over a window
+# --------------------------------------------------------------------------
+
+def _slot_match(slot, col_vals, bind_row=None):
+    if slot.mode == SlotMode.CONST:
+        return col_vals == jnp.uint32(slot.const)
+    if slot.mode == SlotMode.BOUND:
+        assert bind_row is not None
+        return col_vals == bind_row[..., slot.var]
+    return jnp.ones_like(col_vals, dtype=bool)
+
+
+def scan_pattern(
+    window: TripleBatch, pat: CompiledPattern, num_vars: int, out_cap: int
+) -> Bindings:
+    """Match one triple pattern against the window; emit fresh bindings."""
+    cols = {0: window.s, 1: window.p, 2: window.o}
+    m = window.valid
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        m = m & _slot_match(slot, cols[i])
+    # repeated free variables inside one pattern must agree
+    slots = (pat.s, pat.p, pat.o)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if (
+                slots[i].mode != SlotMode.CONST
+                and slots[j].mode != SlotMode.CONST
+                and slots[i].var == slots[j].var
+            ):
+                m = m & (cols[i] == cols[j])
+
+    n = window.capacity
+    out = jnp.zeros((n, num_vars), jnp.uint32)
+    for i, slot in enumerate(slots):
+        if slot.mode != SlotMode.CONST:
+            out = out.at[:, slot.var].set(cols[i])
+    rows, valid, overflow = compact_rows(out, m, out_cap)
+    return Bindings(rows, valid, overflow)
+
+
+# --------------------------------------------------------------------------
+# natural join (used by BGP conjunction and by the final aggregation operator)
+# --------------------------------------------------------------------------
+
+def join(a: Bindings, b: Bindings, shared: Tuple[int, ...], out_cap: int) -> Bindings:
+    """Natural join on the static shared-variable columns."""
+    ca, cb = a.capacity, b.capacity
+    m = a.valid[:, None] & b.valid[None, :]
+    for c in shared:
+        m = m & (a.cols[:, None, c] == b.cols[None, :, c])
+    merged = jnp.maximum(a.cols[:, None, :], b.cols[None, :, :])  # PAD=0 ⇒ max merges
+    flat_rows = merged.reshape(ca * cb, a.num_vars)
+    flat_mask = m.reshape(ca * cb)
+    rows, valid, overflow = compact_rows(flat_rows, flat_mask, out_cap)
+    return Bindings(rows, valid, overflow | a.overflow | b.overflow)
+
+
+def union(a: Bindings, b: Bindings, out_cap: int) -> Bindings:
+    rows = jnp.concatenate([a.cols, b.cols], axis=0)
+    mask = jnp.concatenate([a.valid, b.valid], axis=0)
+    out, valid, overflow = compact_rows(rows, mask, out_cap)
+    return Bindings(out, valid, overflow | a.overflow | b.overflow)
+
+
+def optional_join(
+    a: Bindings, b: Bindings, shared: Tuple[int, ...], out_cap: int
+) -> Bindings:
+    """SPARQL OPTIONAL: left outer join; unmatched left rows keep PAD columns."""
+    ca, cb = a.capacity, b.capacity
+    m = a.valid[:, None] & b.valid[None, :]
+    for c in shared:
+        m = m & (a.cols[:, None, c] == b.cols[None, :, c])
+    matched_any = jnp.any(m, axis=1)
+    merged = jnp.maximum(a.cols[:, None, :], b.cols[None, :, :])
+    flat_rows = jnp.concatenate(
+        [merged.reshape(ca * cb, a.num_vars), a.cols], axis=0
+    )
+    flat_mask = jnp.concatenate([m.reshape(ca * cb), a.valid & ~matched_any], axis=0)
+    rows, valid, overflow = compact_rows(flat_rows, flat_mask, out_cap)
+    return Bindings(rows, valid, overflow | a.overflow | b.overflow)
+
+
+# --------------------------------------------------------------------------
+# KB access — the paper's two measured methods
+# --------------------------------------------------------------------------
+
+def _kb_scan_match(bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern):
+    """O(cap x N) candidate matrix — the C-SPARQL "KB access" method."""
+    kcols = {0: kb.s_ps, 1: kb.p_ps, 2: kb.o_ps}
+    m = bind.valid[:, None] & kb.valid[None, :]
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        kv = kcols[i][None, :]
+        if slot.mode == SlotMode.CONST:
+            m = m & (kv == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            m = m & (kv == bind.cols[:, slot.var][:, None])
+    slots = (pat.s, pat.p, pat.o)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if (
+                slots[i].mode != SlotMode.CONST
+                and slots[j].mode != SlotMode.CONST
+                and slots[i].var == slots[j].var
+            ):
+                m = m & (kcols[i][None, :] == kcols[j][None, :])
+    return m
+
+
+def _extend_rows(bind_cols, kb_row_cols, pat: CompiledPattern):
+    """Extend binding rows with the pattern's FREE vars taken from KB rows."""
+    out = bind_cols
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            out = out.at[..., slot.var].set(kb_row_cols[i])
+    return out
+
+
+def kb_join_scan(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    use_pallas: bool = False,
+) -> Bindings:
+    """Join bindings against a KB partition by full scan.
+
+    Cost is linear in the *total* partition size — this is precisely the
+    behaviour of paper Figs. 6/7 (unused triples still cost time), and the
+    reason KB pruning/partitioning wins.
+    """
+    if use_pallas:
+        from repro.kernels.hash_join import ops as hj_ops
+        m = hj_ops.match_matrix(bind, kb, pat)
+    else:
+        m = _kb_scan_match(bind, kb, pat)
+    ca, n = m.shape
+    bind_exp = jnp.broadcast_to(bind.cols[:, None, :], (ca, n, bind.num_vars))
+    kb_rows = (kb.s_ps[None, :], kb.p_ps[None, :], kb.o_ps[None, :])
+    kb_rows = tuple(jnp.broadcast_to(c, (ca, n)) for c in kb_rows)
+    ext = _extend_rows(bind_exp, kb_rows, pat)
+    rows, valid, overflow = compact_rows(
+        ext.reshape(ca * n, bind.num_vars), m.reshape(ca * n), out_cap
+    )
+    return Bindings(rows, valid, overflow | bind.overflow)
+
+
+def kb_join_probe(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    k_max: int = 8,
+) -> Bindings:
+    """Join bindings against the KB via sorted-index probes.
+
+    The SPARQL-subquery/SERVICE analogue: per binding row one O(log N)
+    searchsorted + <= k_max gathers, independent of unused-KB size.  Requires
+    a CONST predicate and at least one CONST/BOUND endpoint (the planner
+    guarantees this or falls back to scan).
+    """
+    assert pat.p.mode == SlotMode.CONST, "probe requires a constant predicate"
+    p_const = jnp.uint32(pat.p.const)
+    ca = bind.capacity
+
+    def anchor_val(slot):
+        if slot.mode == SlotMode.CONST:
+            return jnp.full((ca,), jnp.uint32(slot.const))
+        return bind.cols[:, slot.var]
+
+    if pat.s.mode != SlotMode.FREE:
+        keys = composite_key(p_const, anchor_val(pat.s))
+        sorted_keys, cols = kb.key_ps, (kb.s_ps, kb.p_ps, kb.o_ps)
+        check_slot, check_col = pat.o, 2
+    else:
+        assert pat.o.mode != SlotMode.FREE, "probe needs an anchored endpoint"
+        keys = composite_key(p_const, anchor_val(pat.o))
+        sorted_keys, cols = kb.key_po, (kb.s_po, kb.p_po, kb.o_po)
+        check_slot, check_col = pat.s, 0
+
+    lo, hi = probe_range(sorted_keys, keys)
+    (ms, mp, mo), ok, overflow_rows = gather_matches(cols, lo, hi, k_max)
+    kcols = {0: ms, 1: mp, 2: mo}
+    m = ok & bind.valid[:, None]
+    # verify the non-anchored endpoint (and re-check anchors exactly: the
+    # composite key hashes numeric literals, so equality must be confirmed)
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.CONST:
+            m = m & (kcols[i] == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            m = m & (kcols[i] == bind.cols[:, slot.var][:, None])
+
+    bind_exp = jnp.broadcast_to(bind.cols[:, None, :], (ca, k_max, bind.num_vars))
+    ext = _extend_rows(bind_exp, (ms, mp, mo), pat)
+    rows, valid, overflow = compact_rows(
+        ext.reshape(ca * k_max, bind.num_vars), m.reshape(ca * k_max), out_cap
+    )
+    any_overflow = overflow | jnp.any(overflow_rows & bind.valid) | bind.overflow
+    return Bindings(rows, valid, any_overflow)
+
+
+def kb_join(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    method: str = "scan", k_max: int = 8, use_pallas: bool = False,
+) -> Bindings:
+    if method == "probe" and pat.p.mode == SlotMode.CONST and not (
+        pat.s.mode == SlotMode.FREE and pat.o.mode == SlotMode.FREE
+    ):
+        return kb_join_probe(bind, kb, pat, out_cap, k_max)
+    return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas)
+
+
+# --------------------------------------------------------------------------
+# filters / projection / dedup
+# --------------------------------------------------------------------------
+
+_NUM_OPS = ("lt", "le", "gt", "ge", "eq", "ne")
+
+
+def filter_num(bind: Bindings, var: int, op: str, value_id: int) -> Bindings:
+    """Numeric FILTER — fixed-point literal ids are order-isomorphic to values."""
+    assert op in _NUM_OPS, op
+    v = bind.cols[:, var]
+    t = jnp.uint32(value_id)
+    is_num = v >= jnp.uint32(NUM_BASE)
+    cmp = {
+        "lt": v < t, "le": v <= t, "gt": v > t,
+        "ge": v >= t, "eq": v == t, "ne": v != t,
+    }[op]
+    return bind._replace(valid=bind.valid & is_num & cmp)
+
+
+def filter_in(bind: Bindings, var: int, sorted_ids: jax.Array) -> Bindings:
+    """Set-membership FILTER (e.g. subclass-closure sets from the reasoner)."""
+    v = bind.cols[:, var]
+    pos = jnp.searchsorted(sorted_ids, v)
+    pos = jnp.minimum(pos, sorted_ids.shape[0] - 1)
+    member = jnp.take(sorted_ids, pos) == v
+    return bind._replace(valid=bind.valid & member)
+
+
+def filter_bound(bind: Bindings, var: int) -> Bindings:
+    return bind._replace(valid=bind.valid & (bind.cols[:, var] != PAD_ID))
+
+
+def project(bind: Bindings, keep: Tuple[int, ...]) -> Bindings:
+    mask = jnp.zeros((bind.num_vars,), bool).at[jnp.asarray(keep, jnp.int32)].set(True)
+    return bind._replace(cols=jnp.where(mask[None, :], bind.cols, jnp.uint32(PAD_ID)))
+
+
+def distinct(bind: Bindings, out_cap: Optional[int] = None) -> Bindings:
+    """Deduplicate valid rows (order of first occurrence preserved)."""
+    out_cap = out_cap or bind.capacity
+    nv = bind.num_vars
+    # lexsort by columns with invalids last, stable on original index
+    keys = [bind.cols[:, c] for c in range(nv - 1, -1, -1)]
+    inv = (~bind.valid).astype(jnp.uint32)
+    order = jnp.lexsort(tuple(keys) + (inv,))
+    sorted_cols = jnp.take(bind.cols, order, axis=0)
+    sorted_valid = jnp.take(bind.valid, order)
+    prev = jnp.concatenate([jnp.zeros((1, nv), jnp.uint32), sorted_cols[:-1]], axis=0)
+    first_at0 = jnp.arange(bind.capacity) == 0
+    is_new = jnp.any(sorted_cols != prev, axis=1) | first_at0
+    keep = sorted_valid & is_new
+    # restore original order for determinism
+    restore = jnp.argsort(order)
+    keep_orig = jnp.take(keep, restore)
+    rows, valid, overflow = compact_rows(bind.cols, keep_orig, out_cap)
+    return Bindings(rows, valid, overflow | bind.overflow)
+
+
+# --------------------------------------------------------------------------
+# CONSTRUCT — derive the output RDF stream
+# --------------------------------------------------------------------------
+
+def construct(
+    bind: Bindings,
+    templates: Sequence[Tuple],   # ((mode,val), (mode,val), (mode,val)) per triple
+    ts: jax.Array,
+    out_cap: int,
+    graph_base: jax.Array | int = 0,
+) -> Tuple[TripleBatch, jax.Array]:
+    """Emit one RDF-graph event per binding row from CONSTRUCT templates.
+
+    Template slots are ``("const", id)`` or ``("var", col)``.  The Publisher
+    stamps every produced triple with ``ts`` (paper §2: the Publisher adds
+    timestamps when the engine's output lacks them) and assigns graph ids so
+    downstream operators see well-formed graph events.  Returns the output
+    batch plus an overflow flag (set when ``out_cap`` clipped valid rows).
+    """
+    cap = bind.capacity
+    t = len(templates)
+
+    def slot_vals(spec):
+        kind, val = spec
+        if kind == "const":
+            return jnp.full((cap,), jnp.uint32(val))
+        if kind == "row":     # synthetic per-binding row node (ROW_BASE band,
+            from .rdf import ROW_BASE           # val = operator namespace)
+            return (jnp.arange(cap, dtype=jnp.uint32) + jnp.uint32(val)
+                    + jnp.uint32(graph_base) + ROW_BASE)
+        return bind.cols[:, val]
+
+    s_list, p_list, o_list = [], [], []
+    for spec_s, spec_p, spec_o in templates:
+        s_list.append(slot_vals(spec_s))
+        p_list.append(slot_vals(spec_p))
+        o_list.append(slot_vals(spec_o))
+    s = jnp.stack(s_list, axis=1).reshape(cap * t)      # row-major: graph-contiguous
+    p = jnp.stack(p_list, axis=1).reshape(cap * t)
+    o = jnp.stack(o_list, axis=1).reshape(cap * t)
+    graph = (jnp.arange(cap, dtype=jnp.uint32)[:, None] + jnp.uint32(graph_base))
+    graph = jnp.broadcast_to(graph, (cap, t)).reshape(cap * t)
+    mask = jnp.repeat(bind.valid, t)
+    rows = jnp.stack([s, p, o, jnp.broadcast_to(jnp.uint32(ts), s.shape), graph], axis=1)
+    out, valid, overflow = compact_rows(rows, mask, out_cap)
+    return TripleBatch(
+        s=out[:, 0], p=out[:, 1], o=out[:, 2], ts=out[:, 3], graph=out[:, 4],
+        valid=valid,
+    ), overflow

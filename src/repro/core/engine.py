@@ -1,0 +1,191 @@
+"""The vectorized RSP engine: executes compiled plans over triple windows.
+
+A :class:`Plan` is a static list of steps (python-level control flow only);
+executing it traces pure jnp ops, so a plan jit-compiles once per
+(window-shape, KB-shape) and is ``vmap``-ed over the window axis — the
+intra-operator parallel unit the runtime shards across the ``data`` mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import algebra
+from .kb import KnowledgeBase
+from .pattern import Bindings, CompiledPattern, universe_bindings
+from .rdf import TripleBatch
+from .window import Windows
+
+
+# --------------------------------------------------------------------------
+# plan steps (static dataclasses — hashable, traceable control flow)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScanJoin:
+    """Scan a stream pattern in the window, natural-join into the state."""
+
+    pat: CompiledPattern
+    shared: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class KBJoin:
+    pat: CompiledPattern
+    method: str = "scan"          # "scan" | "probe"  (paper's two methods)
+    k_max: int = 8
+    use_pallas: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterNumStep:
+    var: int
+    op: str
+    value_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterInStep:
+    var: int
+    set_name: str                 # env key holding a sorted uint32 id array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptionalSteps:
+    sub: Tuple["Step", ...]
+    shared: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionSteps:
+    left: Tuple["Step", ...]
+    right: Tuple["Step", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistinctStep:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectStep:
+    keep: Tuple[int, ...]
+
+
+Step = Union[
+    ScanJoin, KBJoin, FilterNumStep, FilterInStep, OptionalSteps, UnionSteps,
+    DistinctStep, ProjectStep,
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A compiled continuous query."""
+
+    name: str
+    num_vars: int
+    var_names: Tuple[str, ...]            # col index -> variable name
+    steps: Tuple[Step, ...]
+    templates: Tuple[Tuple, ...]          # compiled construct templates
+    scan_cap: int = 128                   # pattern-scan result capacity
+    bind_cap: int = 256                   # working binding-table capacity
+    out_cap: int = 512                    # constructed-triples capacity
+
+    def var_col(self, name: str) -> int:
+        return self.var_names.index(name)
+
+
+# --------------------------------------------------------------------------
+# execution
+# --------------------------------------------------------------------------
+
+Env = Dict[str, jax.Array]
+
+
+def _apply(
+    step: Step, cur: Bindings, window: TripleBatch, kb: Optional[KnowledgeBase],
+    env: Env, plan: Plan,
+) -> Bindings:
+    if isinstance(step, ScanJoin):
+        b = algebra.scan_pattern(window, step.pat, plan.num_vars, plan.scan_cap)
+        return algebra.join(cur, b, step.shared, plan.bind_cap)
+    if isinstance(step, KBJoin):
+        assert kb is not None, "plan %s touches the KB but none attached" % plan.name
+        return algebra.kb_join(
+            cur, kb, step.pat, plan.bind_cap, method=step.method,
+            k_max=step.k_max, use_pallas=step.use_pallas,
+        )
+    if isinstance(step, FilterNumStep):
+        return algebra.filter_num(cur, step.var, step.op, step.value_id)
+    if isinstance(step, FilterInStep):
+        return algebra.filter_in(cur, step.var, env[step.set_name])
+    if isinstance(step, OptionalSteps):
+        sub = universe_bindings(plan.bind_cap, plan.num_vars)
+        for s in step.sub:
+            sub = _apply(s, sub, window, kb, env, plan)
+        return algebra.optional_join(cur, sub, step.shared, plan.bind_cap)
+    if isinstance(step, UnionSteps):
+        left = cur
+        for s in step.left:
+            left = _apply(s, left, window, kb, env, plan)
+        right = cur
+        for s in step.right:
+            right = _apply(s, right, window, kb, env, plan)
+        return algebra.union(left, right, plan.bind_cap)
+    if isinstance(step, DistinctStep):
+        return algebra.distinct(cur)
+    if isinstance(step, ProjectStep):
+        return algebra.project(cur, step.keep)
+    raise TypeError("unknown step %r" % (step,))
+
+
+def run_plan(
+    plan: Plan, window: TripleBatch, kb: Optional[KnowledgeBase], env: Env,
+    graph_base: jax.Array | int = 0,
+) -> Tuple[TripleBatch, Bindings, jax.Array]:
+    """Execute ``plan`` on one window.
+
+    Returns (constructed stream, final bindings, overflow flag).  Before
+    CONSTRUCT the bindings are projected onto the template variables and
+    deduplicated — SPARQL CONSTRUCT emits a *graph* (set semantics), so
+    join multiplicities in non-output variables must not inflate the output
+    (they previously could silently exceed ``out_cap``).
+    """
+    cur = universe_bindings(plan.bind_cap, plan.num_vars)
+    for step in plan.steps:
+        cur = _apply(step, cur, window, kb, env, plan)
+    out_vars = tuple(sorted({
+        val for tpl in plan.templates for kind, val in tpl if kind == "var"
+    }))
+    emit = cur
+    if out_vars:
+        emit = algebra.distinct(algebra.project(cur, out_vars))
+    ts = jnp.max(jnp.where(window.valid, window.ts, 0))
+    out, c_ovf = algebra.construct(emit, plan.templates, ts, plan.out_cap,
+                                   graph_base)
+    return out, cur, cur.overflow | emit.overflow | c_ovf
+
+
+def run_plan_windows(
+    plan: Plan, windows: Windows, kb: Optional[KnowledgeBase], env: Env
+) -> Tuple[TripleBatch, jax.Array]:
+    """vmap the plan over a window batch.
+
+    Returns a ``[W, out_cap]``-leaf TripleBatch plus a ``[W]`` overflow flag
+    (monitoring hook: a set flag means capacities clipped that window).
+    """
+    w = windows.num_windows
+
+    def one(window, wid, wvalid):
+        out, _, ovf = run_plan(
+            plan, window, kb, env, graph_base=wid.astype(jnp.uint32) * plan.bind_cap
+        )
+        out = out._replace(valid=out.valid & wvalid)
+        return out, ovf
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(
+        windows.triples, jnp.arange(w), windows.window_valid
+    )

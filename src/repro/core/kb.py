@@ -1,0 +1,211 @@
+"""Partitioned background knowledge base (the paper's central object).
+
+The paper's evaluation (§4.4, Figs. 5-7) shows that query processing time is
+dominated by KB access and scales ~linearly with the number of KB triples the
+engine scans.  DSCEP's answer is to split queries so each sub-query touches
+only its "used KB" slice.  This module provides:
+
+* :class:`KnowledgeBase` — an immutable sorted triple store with two probe
+  views (``(p,s)``-sorted and ``(p,o)``-sorted) so lookups cost O(log N)
+  searchsorted + bounded gather instead of an O(N) scan,
+* ``prune`` — plan-time used-KB extraction by predicate/object signature
+  (the paper's future-work "automatic KB division", delivered),
+* ``pad_to`` / ``shard_rows`` — padding + row-sharding so a KB partition can
+  be distributed across the ``model`` mesh axis with ``shard_map``.
+
+Two access methods mirror the paper's two measured methods:
+
+* ``method="scan"``  ≙ C-SPARQL *KB access* (the engine scans the whole
+  attached KB slice per window) — cost grows with *total* partition size;
+* ``method="probe"`` ≙ *SPARQL subquery/SERVICE* (indexed endpoint lookup)
+  — cost ~independent of unused triples.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rdf import PAD_ID, TERM_BITS, TripleBatch, composite_key
+
+
+class KnowledgeBase(NamedTuple):
+    """Immutable KB partition. All row arrays share shape ``[N]``.
+
+    ``*_ps`` arrays are row-sorted by the composite key ``(p, s)``;
+    ``*_po`` by ``(p, o)``.  Both views store full rows (s, p, o) so a probe
+    gathers everything it needs from one view.
+    """
+
+    s_ps: jax.Array
+    p_ps: jax.Array
+    o_ps: jax.Array
+    key_ps: jax.Array   # uint32 composite (p << TERM_BITS) | enc(s)
+    s_po: jax.Array
+    p_po: jax.Array
+    o_po: jax.Array
+    key_po: jax.Array   # uint32 composite (p << TERM_BITS) | enc(o)
+    valid: jax.Array    # [N] bool (same count in both views; pads sort last)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[-1])
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+
+_PAD_KEY = np.uint32(0xFFFFFFFF)
+
+
+def build_kb(s: np.ndarray, p: np.ndarray, o: np.ndarray, capacity: Optional[int] = None) -> KnowledgeBase:
+    """Host-side constructor from raw id columns (plan-time, not jitted)."""
+    s = np.asarray(s, np.uint32)
+    p = np.asarray(p, np.uint32)
+    o = np.asarray(o, np.uint32)
+    n = len(s)
+    cap = capacity if capacity is not None else max(n, 1)
+    if n > cap:
+        raise ValueError("KB rows (%d) exceed capacity (%d)" % (n, cap))
+
+    def padded(col, fill=0):
+        out = np.full((cap,), fill, np.uint32)
+        out[:n] = col
+        return out
+
+    valid = np.zeros((cap,), bool)
+    valid[:n] = True
+
+    key_ps = np.array(composite_key(padded(p), padded(s)), copy=True)
+    key_po = np.array(composite_key(padded(p), padded(o)), copy=True)
+    key_ps[~valid] = _PAD_KEY
+    key_po[~valid] = _PAD_KEY
+
+    ps_order = np.argsort(key_ps, kind="stable")
+    po_order = np.argsort(key_po, kind="stable")
+
+    sp, pp, op_ = padded(s), padded(p), padded(o)
+    return KnowledgeBase(
+        s_ps=jnp.asarray(sp[ps_order]),
+        p_ps=jnp.asarray(pp[ps_order]),
+        o_ps=jnp.asarray(op_[ps_order]),
+        key_ps=jnp.asarray(key_ps[ps_order]),
+        s_po=jnp.asarray(sp[po_order]),
+        p_po=jnp.asarray(pp[po_order]),
+        o_po=jnp.asarray(op_[po_order]),
+        key_po=jnp.asarray(key_po[po_order]),
+        # pad keys sort last in both views, so valid rows occupy the first n slots
+        valid=jnp.asarray(np.arange(cap) < n),
+    )
+
+
+def kb_from_triples(rows: Sequence[Tuple[int, int, int]], capacity: Optional[int] = None) -> KnowledgeBase:
+    if rows:
+        arr = np.asarray(rows, np.uint32)
+        return build_kb(arr[:, 0], arr[:, 1], arr[:, 2], capacity)
+    return build_kb(np.zeros(0), np.zeros(0), np.zeros(0), capacity or 1)
+
+
+def host_rows(kb: KnowledgeBase) -> np.ndarray:
+    """Valid (s,p,o) rows in (p,s)-sorted order — plan-time helper."""
+    v = np.asarray(kb.valid)
+    return np.stack(
+        [np.asarray(kb.s_ps)[v], np.asarray(kb.p_ps)[v], np.asarray(kb.o_ps)[v]], axis=1
+    )
+
+
+# --------------------------------------------------------------------------
+# The paper's technique: used-KB pruning (plan-time, host-side)
+# --------------------------------------------------------------------------
+
+def prune(
+    kb: KnowledgeBase,
+    predicates: Sequence[int],
+    objects_by_pred: Optional[dict] = None,
+    capacity: Optional[int] = None,
+) -> KnowledgeBase:
+    """Extract the "used KB" for a sub-query signature.
+
+    ``predicates``: predicate ids the sub-query's KB patterns mention.
+    ``objects_by_pred``: optional ``{pred_id: set(object_ids)}`` narrowing —
+    e.g. `rdf:type` restricted to a subclass-closure set.  Rows with a listed
+    predicate but non-matching object are dropped; predicates without an
+    entry keep all their rows.
+    """
+    rows = host_rows(kb)
+    if len(rows) == 0:
+        return kb_from_triples([], capacity or 1)
+    mask = np.isin(rows[:, 1], np.asarray(sorted(predicates), np.uint32))
+    if objects_by_pred:
+        for pid, objs in objects_by_pred.items():
+            prow = rows[:, 1] == np.uint32(pid)
+            ok = np.isin(rows[:, 2], np.asarray(sorted(objs), np.uint32))
+            mask &= ~prow | ok
+    kept = rows[mask]
+    return build_kb(kept[:, 0], kept[:, 1], kept[:, 2], capacity)
+
+
+def pad_to(kb: KnowledgeBase, capacity: int) -> KnowledgeBase:
+    """Pad every row array to ``capacity`` (pads carry the max sort key)."""
+    cur = kb.capacity
+    if cur == capacity:
+        return kb
+    if cur > capacity:
+        raise ValueError("cannot shrink KB %d -> %d" % (cur, capacity))
+    ext = capacity - cur
+
+    def pad_col(col, fill):
+        return jnp.concatenate([col, jnp.full((ext,), fill, col.dtype)])
+
+    return KnowledgeBase(
+        s_ps=pad_col(kb.s_ps, 0), p_ps=pad_col(kb.p_ps, 0), o_ps=pad_col(kb.o_ps, 0),
+        key_ps=pad_col(kb.key_ps, jnp.uint32(_PAD_KEY)),
+        s_po=pad_col(kb.s_po, 0), p_po=pad_col(kb.p_po, 0), o_po=pad_col(kb.o_po, 0),
+        key_po=pad_col(kb.key_po, jnp.uint32(_PAD_KEY)),
+        valid=pad_col(kb.valid, False),
+    )
+
+
+def shard_rows(kb: KnowledgeBase, num_shards: int) -> KnowledgeBase:
+    """Reshape ``[N] -> [num_shards, N/num_shards]`` row-block layout.
+
+    Because both views are key-sorted, contiguous row blocks are contiguous
+    key ranges: a probe on shard k either fully hits or fully misses, and a
+    `searchsorted` per shard stays correct.  Used with ``shard_map`` over the
+    ``model`` axis (each device owns one block = the paper's "divide the KB
+    through different machines").
+    """
+    cap = kb.capacity
+    if cap % num_shards:
+        kb = pad_to(kb, ((cap + num_shards - 1) // num_shards) * num_shards)
+        cap = kb.capacity
+    per = cap // num_shards
+    return jax.tree.map(lambda col: col.reshape(num_shards, per), kb)
+
+
+# --------------------------------------------------------------------------
+# jit-side probes
+# --------------------------------------------------------------------------
+
+def probe_range(keys_sorted: jax.Array, query_key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[lo, hi) row range whose composite key equals ``query_key``."""
+    lo = jnp.searchsorted(keys_sorted, query_key, side="left")
+    hi = jnp.searchsorted(keys_sorted, query_key, side="right")
+    return lo, hi
+
+
+def gather_matches(
+    kb_cols: Tuple[jax.Array, jax.Array, jax.Array],
+    lo: jax.Array,
+    hi: jax.Array,
+    k_max: int,
+) -> Tuple[Tuple[jax.Array, jax.Array, jax.Array], jax.Array, jax.Array]:
+    """Gather up to ``k_max`` rows from [lo, hi); returns (cols, valid, overflow)."""
+    idx = lo[..., None] + jnp.arange(k_max, dtype=lo.dtype)
+    ok = idx < hi[..., None]
+    idx_safe = jnp.minimum(idx, kb_cols[0].shape[-1] - 1)
+    cols = tuple(jnp.take(c, idx_safe, axis=-1) for c in kb_cols)
+    overflow = (hi - lo) > k_max
+    return cols, ok, overflow

@@ -1,0 +1,95 @@
+"""SCEP Operator = Aggregator -> RSP engine(s) -> Publisher (paper §2, Fig 2a).
+
+The operator owns a compiled plan, its pruned KB partition and the static
+window geometry.  ``process`` is the jit-compiled whole-operator step:
+merge/order input chunks, window them, vmap the engine over windows
+(intra-operator parallelism), and publish the constructed output stream.
+
+When a mesh is attached, windows are sharded across the ``data`` axis and the
+KB partition is replicated or row-sharded across ``model`` (see
+:mod:`repro.core.runtime` for the distributed wiring).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .engine import Plan, run_plan_windows
+from .kb import KnowledgeBase, pad_to
+from .rdf import TripleBatch
+from .stream import merge_streams
+from .window import Windows, count_windows
+
+
+@dataclasses.dataclass
+class OperatorConfig:
+    window_capacity: int = 1000      # paper: "window size is a maximum of 1000 RDF triples"
+    max_windows: int = 8             # windows per processed chunk
+    out_stream_cap: int = 2048       # published stream chunk capacity
+
+
+class SCEPOperator:
+    """One deployable SCEP operator."""
+
+    def __init__(
+        self,
+        name: str,
+        plan: Plan,
+        kb: Optional[KnowledgeBase],
+        env: Dict[str, jax.Array],
+        config: OperatorConfig = OperatorConfig(),
+    ):
+        self.name = name
+        self.plan = plan
+        self.kb = kb
+        self.env = dict(env)
+        self.config = config
+        self._step = jax.jit(self._process_impl)
+
+    # -- the jitted operator step -------------------------------------------
+    def _process_impl(
+        self, chunks: Tuple[TripleBatch, ...], kb: Optional[KnowledgeBase],
+        env: Dict[str, jax.Array],
+    ) -> Tuple[TripleBatch, jax.Array]:
+        cfg = self.config
+        merged = merge_streams(chunks)                       # Aggregator: merge+order
+        windows = count_windows(merged, cfg.window_capacity, cfg.max_windows)
+        out_w, overflow = run_plan_windows(self.plan, windows, kb, env)  # engines
+        return self._publish(out_w), overflow
+
+    def process_windows(
+        self, windows: Windows, kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None,
+    ) -> Tuple[TripleBatch, jax.Array]:
+        """Window-aligned engine step: ``[W, C]`` in -> ``[W, out_cap]`` out.
+
+        Used by the DAG runtime so downstream operators see upstream results
+        in the *same* window (the paper pipelines whole windows between
+        operators; re-windowing intermediates would break result equivalence).
+        """
+        return run_plan_windows(
+            self.plan, windows, kb if kb is not None else self.kb,
+            env if env is not None else self.env,
+        )
+
+    def _publish(self, out_w: TripleBatch) -> TripleBatch:
+        """Publisher: flatten [W, cap] window outputs into one ordered chunk."""
+        flat = jax.tree.map(lambda col: col.reshape(-1), out_w)
+        # order-preserving compaction of valid triples to the front
+        from .pattern import compact_rows
+
+        rows = jnp.stack([flat.s, flat.p, flat.o, flat.ts, flat.graph], axis=1)
+        out, valid, _ = compact_rows(rows, flat.valid, self.config.out_stream_cap)
+        return TripleBatch(
+            s=out[:, 0], p=out[:, 1], o=out[:, 2], ts=out[:, 3], graph=out[:, 4],
+            valid=valid,
+        )
+
+    # -- public API -----------------------------------------------------------
+    def process(self, chunks: Sequence[TripleBatch]) -> Tuple[TripleBatch, jax.Array]:
+        """Process one round of input chunks; returns (output chunk, overflow[W])."""
+        return self._step(tuple(chunks), self.kb, self.env)

@@ -1,0 +1,116 @@
+"""The paper's evaluation queries (§4.3) as Query ASTs.
+
+* ``q15`` / ``q16`` — SRBench-adapted first-step queries: hierarchy reasoning
+  (rdfs:subClassOf) and a length-3 property path, respectively (Table 1).
+* ``cquery1`` — the second-step complex query: "how television-show entities
+  affect the sentiment analysis of each musical artist when mentioned on the
+  same tweet", exercising every SPARQL characteristic the paper lists —
+  property path (len 3), CONSTRUCT, UNION, OPTIONAL, hierarchy reasoning and
+  KB access (Tables 2-3, Fig. 4).
+
+Builders take the shared vocabulary plus the stream/KB schemas so tests,
+benchmarks and examples all use the identical queries.
+"""
+from __future__ import annotations
+
+from repro.core import query as Q
+from repro.core.rdf import Vocab
+from repro.data.dbpedia import KBSchema
+from repro.data.tweets import TweetSchema
+
+
+def q15(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
+    """All tweets mentioning any entity that is a subclass of MusicalArtist."""
+    return Q.Query(
+        name="q15",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
+            Q.FilterSubclass("ent", kbs.rdf_type, kbs.subclass_of,
+                             kbs.musical_artist),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"),
+                                Q.Const(vocab.pred("out:artistTweet")),
+                                Q.Var("ent")),
+        ),
+    )
+
+
+def q16(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
+    """For tweets mentioning a musical artist: birthplace -> country -> code."""
+    return Q.Query(
+        name="q16",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
+            Q.PathKB(Q.Var("ent"), (kbs.birth_place, kbs.country, kbs.country_code),
+                     Q.Var("cc")),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"), Q.Const(vocab.pred("out:code")),
+                                Q.Var("cc")),
+        ),
+    )
+
+
+def cquery1(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
+    """The paper's CQuery1 (§4.3, second step).
+
+    Correlates musical artists with television shows co-mentioned on the same
+    tweet, carrying the tweet's sentiment, the artist's country code (property
+    path of length 3), engagement from likes OR shares (UNION), and the
+    optional share count (OPTIONAL).  The automatic decomposition
+    (:func:`repro.core.planner.decompose`) splits it into the paper's Fig. 4
+    shape: an artist-anchored KB operator (QueryA analogue — subclass
+    reasoning + property path, the large used-KB slice), a show-anchored KB
+    operator (QueryB analogue — subclass reasoning only), and a final
+    aggregation operator (QueryG) joining the intermediate binding streams
+    with the sentiment/engagement stream patterns (the QueryC-F analogues run
+    as dataflow branches inside the aggregator's compiled plan).
+    """
+    return Q.Query(
+        name="cquery1",
+        where=(
+            # -- stream side: co-mention + sentiment --------------------------
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("artist"), Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("show"), Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_pos), Q.Var("pos"), Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_neg), Q.Var("neg"), Q.STREAM),
+            # -- KB side: hierarchy reasoning for both classes ----------------
+            Q.FilterSubclass("artist", kbs.rdf_type, kbs.subclass_of,
+                             kbs.musical_artist),
+            Q.FilterSubclass("show", kbs.rdf_type, kbs.subclass_of,
+                             kbs.television_show),
+            # -- KB side: property path of length 3 ---------------------------
+            Q.PathKB(Q.Var("artist"),
+                     (kbs.birth_place, kbs.country, kbs.country_code),
+                     Q.Var("cc")),
+            # -- UNION: engagement signal from likes or shares ----------------
+            Q.UnionGroup(
+                left=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.likes),
+                                Q.Var("eng"), Q.STREAM),),
+                right=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
+                                 Q.Var("eng"), Q.STREAM),),
+            ),
+            # -- OPTIONAL: share count may be absent ---------------------------
+            Q.OptionalGroup(
+                patterns=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
+                                    Q.Var("sh"), Q.STREAM),),
+            ),
+            # -- FILTER: meaningful sentiment only -----------------------------
+            Q.FilterNum("pos", "ge", Vocab.number(0.0)),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:coMentionedWith")),
+                                Q.Var("show")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:posSentiment")),
+                                Q.Var("pos")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:negSentiment")),
+                                Q.Var("neg")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:countryCode")),
+                                Q.Var("cc")),
+        ),
+    )

@@ -1,0 +1,120 @@
+"""Triple patterns and binding tables (the engine's relations).
+
+A *compiled* plan fixes the variable universe: every variable gets a column in
+a fixed-width binding table.  ``PAD_ID`` (0) doubles as SPARQL's *unbound*
+value, which makes OPTIONAL's outer join a ``jnp.maximum`` merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .rdf import PAD_ID
+
+
+class SlotMode(enum.IntEnum):
+    CONST = 0       # slot is a fixed term id
+    BOUND = 1       # slot is a variable already bound at this plan step
+    FREE = 2        # slot is a variable first bound by this pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    mode: SlotMode
+    const: int = 0      # term id when CONST
+    var: int = -1       # variable column when BOUND/FREE
+
+    @staticmethod
+    def const_(term_id: int) -> "Slot":
+        return Slot(SlotMode.CONST, const=int(term_id))
+
+    @staticmethod
+    def bound(var_col: int) -> "Slot":
+        return Slot(SlotMode.BOUND, var=int(var_col))
+
+    @staticmethod
+    def free(var_col: int) -> "Slot":
+        return Slot(SlotMode.FREE, var=int(var_col))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPattern:
+    """One triple pattern with slot modes resolved against the plan state."""
+
+    s: Slot
+    p: Slot
+    o: Slot
+
+    def free_vars(self) -> Tuple[int, ...]:
+        return tuple(
+            sl.var for sl in (self.s, self.p, self.o) if sl.mode == SlotMode.FREE
+        )
+
+    def predicates(self) -> Tuple[int, ...]:
+        return (self.p.const,) if self.p.mode == SlotMode.CONST else ()
+
+
+class Bindings(NamedTuple):
+    """Fixed-capacity solution-mapping table.
+
+    ``cols``: ``[cap, num_vars]`` uint32, PAD_ID = unbound.
+    ``valid``: ``[cap]`` bool.
+    ``overflow``: scalar bool — capacity was exceeded somewhere upstream, so
+    the result is a (deterministic, prefix-preserving) under-approximation.
+    """
+
+    cols: jax.Array
+    valid: jax.Array
+    overflow: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return int(self.cols.shape[-2])
+
+    @property
+    def num_vars(self) -> int:
+        return int(self.cols.shape[-1])
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+
+def empty_bindings(capacity: int, num_vars: int) -> Bindings:
+    return Bindings(
+        cols=jnp.zeros((capacity, num_vars), jnp.uint32),
+        valid=jnp.zeros((capacity,), bool),
+        overflow=jnp.zeros((), bool),
+    )
+
+
+def universe_bindings(capacity: int, num_vars: int) -> Bindings:
+    """A single all-unbound solution (the BGP identity element)."""
+    b = empty_bindings(capacity, num_vars)
+    return b._replace(valid=b.valid.at[0].set(True))
+
+
+def compact_rows(
+    rows: jax.Array, mask: jax.Array, out_cap: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Order-preserving compaction of masked ``[n, ...]`` rows into ``out_cap``.
+
+    Returns ``(rows_out [out_cap, ...], valid [out_cap], overflow [])``.
+    """
+    n = rows.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    total = jnp.sum(mask.astype(jnp.int32))
+    tgt = jnp.where(mask & (pos < out_cap), pos, out_cap)
+    idx = jnp.full((out_cap + 1,), -1, jnp.int32)
+    idx = idx.at[tgt].set(jnp.where(mask, jnp.arange(n, dtype=jnp.int32), -1), mode="drop")
+    idx = idx[:out_cap]
+    safe = jnp.maximum(idx, 0)
+    out = jnp.take(rows, safe, axis=0)
+    valid = idx >= 0
+    out = jnp.where(
+        valid.reshape((out_cap,) + (1,) * (rows.ndim - 1)), out, jnp.zeros_like(out)
+    )
+    return out, valid, total > out_cap

@@ -1,0 +1,474 @@
+"""Query compiler, decomposer and KB pruner.
+
+Three responsibilities, mirroring the paper:
+
+* ``compile_query``  — Query AST -> executable :class:`~repro.core.engine.Plan`
+  (variable numbering, bound-mode resolution, filter placement).
+* ``decompose``      — one query -> a DAG of sub-queries (inter-operator
+  parallelism, paper Fig. 4): every KB-touching enrichment chain becomes its
+  own operator; a final aggregation operator joins the intermediate streams.
+* ``prune_kb_for``   — the "used KB" extraction per sub-query (the paper's
+  future-work automatic KB division): predicate signature + subclass-closure
+  narrowing of ``rdf:type`` objects.
+
+Intermediate streams use the *binding-graph protocol*: each result row of a
+sub-query is published as one RDF-graph event ``(row_node, var_pred_v, value)``
+so any DSCEP operator (or external client) can consume it — §2's requirement
+that "an output stream of one SCEP engine should be ready to be an input of
+another SCEP engine".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from . import query as Q
+from .engine import (
+    DistinctStep, FilterInStep, FilterNumStep, KBJoin, OptionalSteps, Plan,
+    ProjectStep, ScanJoin, Step, UnionSteps,
+)
+from .kb import KnowledgeBase, prune
+from .pattern import CompiledPattern, Slot, SlotMode
+from .rdf import Vocab
+from .reasoner import descendants, subclass_edges
+
+
+# --------------------------------------------------------------------------
+# compilation
+# --------------------------------------------------------------------------
+
+class _VarTable:
+    def __init__(self) -> None:
+        self.names: List[str] = []
+
+    def col(self, name: str) -> int:
+        if name not in self.names:
+            self.names.append(name)
+        return self.names.index(name)
+
+
+def _slot(term: Q.Term, vt: _VarTable, bound: Set[int]) -> Slot:
+    if isinstance(term, Q.Const):
+        return Slot.const_(term.id)
+    c = vt.col(term.name)
+    return Slot.bound(c) if c in bound else Slot.free(c)
+
+
+def _compile_pattern(
+    pat: Q.Pattern, vt: _VarTable, bound: Set[int], scan: bool = False
+) -> CompiledPattern:
+    """Resolve slot modes.
+
+    ``scan=True`` compiles a *window scan* pattern: every variable slot is
+    FREE (the scan matches independently; equality with earlier bindings is
+    enforced by the natural join on the shared columns).  KB patterns keep
+    BOUND slots so the join condition is evaluated inside the KB probe/scan.
+    """
+    s = _slot(pat.s, vt, bound)
+    p = _slot(pat.p, vt, bound)
+    o = _slot(pat.o, vt, bound)
+    if scan:
+        s, p, o = (
+            Slot.free(sl.var) if sl.mode != SlotMode.CONST else sl
+            for sl in (s, p, o)
+        )
+    for sl in (s, p, o):
+        if sl.mode == SlotMode.FREE:
+            bound.add(sl.var)
+    return CompiledPattern(s, p, o)
+
+
+def compile_query(
+    q: Q.Query,
+    kb_method: str = "scan",
+    scan_cap: int = 128,
+    bind_cap: int = 256,
+    out_cap: int = 512,
+    k_max: int = 8,
+    use_pallas: bool = False,
+) -> Plan:
+    """Compile the AST into a Plan.
+
+    Ordering heuristic: stream patterns in listed order (they are selective —
+    windows are small), then KB items anchored by already-bound variables,
+    then filters as soon as their variable is bound, then OPTIONAL/UNION
+    groups, preserving SPARQL's left-biased semantics for the shapes the
+    paper uses.
+    """
+    vt = _VarTable()
+    bound: Set[int] = set()
+    steps: List[Step] = []
+    pending_filters: List[Q.WhereItem] = []
+    aux = [0]
+
+    def fresh_aux() -> str:
+        aux[0] += 1
+        return "__aux%d" % aux[0]
+
+    def flush_filters():
+        for item in list(pending_filters):
+            if isinstance(item, Q.FilterNum) and vt.col(item.var) in bound:
+                steps.append(FilterNumStep(vt.col(item.var), item.op, item.value_id))
+                pending_filters.remove(item)
+
+    # pass 1: stream patterns, greedily ordered so every pattern (after the
+    # first) shares a variable with the already-joined set — avoids cross
+    # joins that would blow the binding capacity (a standard join-order
+    # optimization; keeps listed order among equally-connected candidates)
+    remaining = [
+        it for it in q.where if isinstance(it, Q.Pattern) and it.src == Q.STREAM
+    ]
+    for item in q.where:
+        if isinstance(item, Q.FilterNum):
+            pending_filters.append(item)
+    bound_names: Set[str] = set()
+    while remaining:
+        pick = next(
+            (p for p in remaining if set(p.vars()) & bound_names), remaining[0]
+        )
+        remaining.remove(pick)
+        shared_before = set(bound)
+        cp = _compile_pattern(pick, vt, bound, scan=True)
+        bound_names |= set(pick.vars())
+        shared = tuple(
+            sorted(
+                {sl.var for sl in (cp.s, cp.p, cp.o) if sl.mode != SlotMode.CONST}
+                & shared_before
+            )
+        )
+        steps.append(ScanJoin(cp, shared))
+        flush_filters()
+
+    # pass 2: KB patterns / paths / subclass reasoning
+    for item in q.where:
+        if isinstance(item, Q.Pattern) and item.src == Q.KB:
+            cp = _compile_pattern(item, vt, bound)
+            steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+        elif isinstance(item, Q.PathKB):
+            cur: Q.Term = item.start
+            for i, pid in enumerate(item.preds):
+                nxt = item.end if i == len(item.preds) - 1 else Q.Var(fresh_aux())
+                cp = _compile_pattern(
+                    Q.Pattern(cur, Q.Const(pid), nxt, Q.KB), vt, bound
+                )
+                steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                cur = nxt
+        elif isinstance(item, Q.FilterSubclass):
+            cls_var = Q.Var(fresh_aux())
+            cp = _compile_pattern(
+                Q.Pattern(Q.Var(item.var), Q.Const(item.type_pred), cls_var, Q.KB),
+                vt, bound,
+            )
+            steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+            steps.append(
+                FilterInStep(vt.col(cls_var.name), "closure:%d" % item.super_class)
+            )
+        flush_filters()
+
+    # pass 3: optional / union groups
+    for item in q.where:
+        if isinstance(item, Q.OptionalGroup):
+            shared_before = set(bound)
+            sub_steps: List[Step] = []
+            sub_bound: Set[int] = set()
+            for p in item.patterns:
+                if p.src == Q.KB:
+                    cp = _compile_pattern(p, vt, sub_bound)
+                    sub_steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                else:
+                    before = set(sub_bound)
+                    cp = _compile_pattern(p, vt, sub_bound, scan=True)
+                    sub_shared = tuple(
+                        sorted(
+                            {sl.var for sl in (cp.s, cp.p, cp.o) if sl.mode != SlotMode.CONST}
+                            & before
+                        )
+                    )
+                    sub_steps.append(ScanJoin(cp, sub_shared))
+            bound |= sub_bound
+            shared = tuple(
+                sorted(
+                    shared_before
+                    & {vt.col(v) for p in item.patterns for v in p.vars()}
+                )
+            )
+            steps.append(OptionalSteps(tuple(sub_steps), shared))
+        elif isinstance(item, Q.UnionGroup):
+            union_before = set(bound)
+
+            def _branch(pats: Tuple[Q.Pattern, ...]) -> Tuple[Step, ...]:
+                bs: List[Step] = []
+                br_bound = set(union_before)
+                for p in pats:
+                    if p.src == Q.KB:
+                        cp = _compile_pattern(p, vt, br_bound)
+                        bs.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                    else:
+                        before = set(br_bound)
+                        cp = _compile_pattern(p, vt, br_bound, scan=True)
+                        shared = tuple(
+                            sorted(
+                                {sl.var for sl in (cp.s, cp.p, cp.o) if sl.mode != SlotMode.CONST}
+                                & before
+                            )
+                        )
+                        bs.append(ScanJoin(cp, shared))
+                bound.update(br_bound)
+                return tuple(bs)
+
+            steps.append(UnionSteps(_branch(item.left), _branch(item.right)))
+        flush_filters()
+
+    # any filters whose variables only appear in construct scope
+    for item in pending_filters:
+        steps.append(FilterNumStep(vt.col(item.var), item.op, item.value_id))
+
+    # construct templates
+    def tslot(t):
+        if isinstance(t, Q.RowId):
+            return ("row", t.ns * (1 << 18))   # per-operator id namespace
+        if isinstance(t, Q.Const):
+            return ("const", t.id)
+        return ("var", vt.col(t.name))
+
+    templates = tuple(
+        (tslot(t.s), tslot(t.p), tslot(t.o)) for t in q.construct
+    )
+    return Plan(
+        name=q.name,
+        num_vars=max(1, len(vt.names)),
+        var_names=tuple(vt.names) or ("_",),
+        steps=tuple(steps),
+        templates=templates,
+        scan_cap=scan_cap,
+        bind_cap=bind_cap,
+        out_cap=out_cap,
+    )
+
+
+# --------------------------------------------------------------------------
+# environment (closure sets) and KB pruning — the "used KB" machinery
+# --------------------------------------------------------------------------
+
+def prepare_env(q: Q.Query, kb: KnowledgeBase) -> Dict[str, np.ndarray]:
+    """Compute closure sets required by the query's reasoning filters."""
+    import jax.numpy as jnp
+
+    env: Dict[str, np.ndarray] = {}
+    for item in q.where:
+        if isinstance(item, Q.FilterSubclass):
+            edges = subclass_edges(kb, item.subclass_pred)
+            key = "closure:%d" % item.super_class
+            env[key] = jnp.asarray(descendants(edges, item.super_class))
+    return env
+
+
+def kb_signature(q: Q.Query) -> Tuple[Tuple[int, ...], Dict[int, Set[int]]]:
+    """(predicates, {pred: allowed objects}) this query can ever touch."""
+    preds = tuple(q.kb_predicates())
+    narrow: Dict[int, Set[int]] = {}
+    return preds, narrow
+
+
+def prune_kb_for(q: Q.Query, kb: KnowledgeBase, capacity: Optional[int] = None,
+                 closure_narrow: bool = True) -> KnowledgeBase:
+    """Extract this query's used KB (paper §6 future work, implemented).
+
+    Keeps only triples whose predicate the query mentions; for
+    ``FilterSubclass`` reasoning, ``rdf:type`` rows are additionally narrowed
+    to the subclass closure of the filter's super-class.
+    """
+    preds, _ = kb_signature(q)
+    objects_by_pred: Dict[int, Set[int]] = {}
+    if closure_narrow:
+        for item in q.where:
+            if isinstance(item, Q.FilterSubclass):
+                edges = subclass_edges(kb, item.subclass_pred)
+                cls = set(int(c) for c in descendants(edges, item.super_class))
+                objects_by_pred.setdefault(item.type_pred, set()).update(cls)
+    return prune(kb, preds, objects_by_pred or None, capacity)
+
+
+# --------------------------------------------------------------------------
+# decomposition into an operator DAG (paper Fig. 4)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SubQuery:
+    """One SCEP operator's query + its used-KB signature."""
+
+    query: Q.Query
+    inputs: Tuple[str, ...] = ("stream",)   # upstream operator names
+    touches_kb: bool = False
+
+
+@dataclasses.dataclass
+class OperatorDAG:
+    name: str
+    subqueries: Dict[str, SubQuery]
+    final: str                              # name of the aggregation sub-query
+    var_preds: Dict[str, int]               # binding-graph protocol predicates
+    row_base: int                           # term id base for row nodes
+
+
+def _var_pred(vocab: Vocab, name: str) -> int:
+    return vocab.pred("?:%s" % name)
+
+
+def decompose(q: Q.Query, vocab: Vocab) -> OperatorDAG:
+    """Split a query into KB-touching enrichment operators + an aggregator.
+
+    Every KB item group (grouped by anchor variable — the stream variable the
+    KB chain hangs off) becomes a sub-query that (a) scans the minimal stream
+    patterns binding its anchor, (b) runs its KB chain, and (c) publishes its
+    bindings on the binding-graph protocol.  Stream-only items stay in the
+    final aggregation operator, which joins all intermediate streams on their
+    shared variables (QueryG in the paper's Fig. 4: "only aggregates the
+    resulting streams and correlates").
+    """
+    stream_pats = [
+        it for it in q.where if isinstance(it, Q.Pattern) and it.src == Q.STREAM
+    ]
+    kb_items: List[Q.WhereItem] = [
+        it for it in q.where
+        if (isinstance(it, Q.Pattern) and it.src == Q.KB)
+        or isinstance(it, (Q.PathKB, Q.FilterSubclass))
+    ]
+    other_items = [
+        it for it in q.where if it not in stream_pats and it not in kb_items
+    ]
+
+    def item_vars(it: Q.WhereItem) -> Set[str]:
+        if isinstance(it, Q.Pattern):
+            return set(it.vars())
+        if isinstance(it, Q.PathKB):
+            return {t.name for t in (it.start, it.end) if isinstance(t, Q.Var)}
+        if isinstance(it, Q.FilterSubclass):
+            return {it.var}
+        return set()
+
+    stream_vars: Set[str] = set()
+    for p in stream_pats:
+        stream_vars |= set(p.vars())
+
+    # group KB items into *connected components* (shared variables), so a
+    # chain that hangs off the stream only transitively — e.g. cell -(KB)->
+    # street -(KB)-> district, where only `cell` is a stream variable — stays
+    # in one operator and its correlations survive.  Each component is
+    # anchored at the first stream variable any of its members touches.
+    n_items = len(kb_items)
+    parent = list(range(n_items))
+
+    def find(i: int) -> int:
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    for i in range(n_items):
+        for j in range(i + 1, n_items):
+            if item_vars(kb_items[i]) & item_vars(kb_items[j]):
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[max(ri, rj)] = min(ri, rj)
+
+    components: Dict[int, List[int]] = {}
+    for i in range(n_items):
+        components.setdefault(find(i), []).append(i)
+
+    groups: Dict[str, List[int]] = {}
+    for root, idxs in sorted(components.items()):
+        comp_vars: Set[str] = set()
+        for i in idxs:
+            comp_vars |= item_vars(kb_items[i])
+        anchors = sorted(comp_vars & stream_vars)
+        anchor = anchors[0] if anchors else "__global"
+        groups.setdefault(anchor, []).extend(idxs)
+
+    subqueries: Dict[str, SubQuery] = {}
+    var_preds: Dict[str, int] = {}
+    row_base = int(vocab.term("row:base"))
+
+    def binding_templates(out_vars: Sequence[str], anchor: str,
+                          op_index: int) -> Tuple[Q.ConstructTemplate, ...]:
+        # one RDF-graph event per binding row, keyed by a synthetic row node
+        # (rdf.ROW_BASE band, namespaced per operator): the aggregator joins
+        # the published variables of the SAME row — exact correlation, no
+        # cross products and no aliasing between operators
+        ordered = [v for v in out_vars if v == anchor] + [
+            v for v in out_vars if v != anchor
+        ]
+        tpls = []
+        for v in ordered:
+            var_preds.setdefault(v, _var_pred(vocab, v))
+            tpls.append(
+                Q.ConstructTemplate(Q.RowId(ns=op_index + 1),
+                                    Q.Const(var_preds[v]), Q.Var(v))
+            )
+        return tuple(tpls)
+
+    # enrichment operators (QueryA / QueryB analogues).  Each publishes ALL
+    # variables of the stream patterns it consumed (paper Fig. 4: QueryA's
+    # output carries the tweet id), so the aggregator can skip re-scanning
+    # and re-joining those patterns — join elimination.
+    covered_pats: List[Q.Pattern] = []
+    for i, (anchor, idxs) in enumerate(sorted(groups.items())):
+        items = [kb_items[j] for j in sorted(idxs)]   # preserve listed order
+        name = "%s_kb%d_%s" % (q.name, i, anchor.strip("?_"))
+        needed_vars = set()
+        for it in items:
+            needed_vars |= item_vars(it)
+        anchor_pats = [
+            p for p in stream_pats if set(p.vars()) & (needed_vars | {anchor})
+        ]
+        pat_vars = set()
+        for p in anchor_pats:
+            pat_vars |= set(p.vars())
+        out_vars = sorted(
+            (needed_vars | pat_vars | {anchor}) & set(q.variables())
+        )
+        where: List[Q.WhereItem] = list(anchor_pats) + list(items)
+        sub_q = Q.Query(
+            name=name,
+            where=tuple(where),
+            construct=binding_templates(out_vars, anchor, i),
+        )
+        subqueries[name] = SubQuery(sub_q, inputs=("stream",), touches_kb=True)
+        # a stream pattern is fully covered if this operator consumed it and
+        # republishes every one of its variables
+        for p in anchor_pats:
+            if set(p.vars()) <= set(out_vars):
+                covered_pats.append(p)
+
+    # final aggregation operator (QueryG): skips stream patterns whose
+    # bindings arrive fully materialized on an intermediate stream
+    final_name = "%s_agg" % q.name
+    agg_where: List[Q.WhereItem] = [
+        p for p in stream_pats if p not in covered_pats
+    ] + list(other_items)
+    # consume intermediate binding streams: (?row_i, var_pred, ?v)
+    for name, sub in subqueries.items():
+        row_var = "__row_%s" % name
+        for tpl in sub.query.construct:
+            assert isinstance(tpl.p, Q.Const)
+            agg_where.append(
+                Q.Pattern(Q.Var(row_var), Q.Const(tpl.p.id), tpl.o, Q.STREAM)
+            )
+    final_q = Q.Query(name=final_name, where=tuple(agg_where), construct=q.construct)
+    # KB patterns nested inside OPTIONAL/UNION groups stay with the
+    # aggregator (their semantics are join-order dependent), so it needs its
+    # own (pruned) KB slice when any are present
+    subqueries[final_name] = SubQuery(
+        final_q,
+        inputs=tuple(sorted(subqueries)) + ("stream",),
+        touches_kb=bool(final_q.kb_predicates()),
+    )
+    return OperatorDAG(
+        name=q.name,
+        subqueries=subqueries,
+        final=final_name,
+        var_preds=var_preds,
+        row_base=row_base,
+    )

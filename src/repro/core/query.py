@@ -1,0 +1,167 @@
+"""Continuous-query AST (the user-facing query surface).
+
+Covers every SPARQL characteristic the paper's CQuery1 exercises (§4.3):
+property paths (len <= 3), CONSTRUCT, UNION, OPTIONAL, hierarchy reasoning
+(rdfs:subClassOf via closure sets), and KB access.  Patterns are tagged with
+their source: the windowed stream or the background KB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Const:
+    id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RowId:
+    """CONSTRUCT subject that materializes a fresh per-binding row node.
+
+    Used by the decomposer's binding-graph protocol: each result row of a
+    sub-query is published as one RDF-graph event keyed by a synthetic node
+    (``rdf.ROW_BASE + ns·2^18 + row index``), so the aggregation operator
+    joins the published variables of the SAME binding row — never a cross
+    product of independently published values.  ``ns`` namespaces the id
+    range per operator: two operators publishing the same variable must not
+    alias each other's rows.
+    """
+
+    ns: int = 0
+
+
+Term = Union[Var, Const]
+
+STREAM = "stream"
+KB = "kb"
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    s: Term
+    p: Term
+    o: Term
+    src: str = STREAM      # STREAM or KB
+
+    def vars(self) -> Tuple[str, ...]:
+        return tuple(t.name for t in (self.s, self.p, self.o) if isinstance(t, Var))
+
+
+@dataclasses.dataclass(frozen=True)
+class PathKB:
+    """Property path of fixed length <= 3 through the KB: start -p1/p2/p3-> end."""
+
+    start: Term
+    preds: Tuple[int, ...]
+    end: Term
+
+    def __post_init__(self):
+        assert 1 <= len(self.preds) <= 3, "paper paths have max length 3"
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterNum:
+    var: str
+    op: str           # lt | le | gt | ge | eq | ne
+    value_id: int     # fixed-point numeric literal id
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSubclass:
+    """var rdf:type / rdfs:subClassOf* super_class — hierarchy reasoning."""
+
+    var: str
+    type_pred: int
+    subclass_pred: int
+    super_class: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OptionalGroup:
+    patterns: Tuple[Pattern, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionGroup:
+    left: Tuple[Pattern, ...]
+    right: Tuple[Pattern, ...]
+
+
+WhereItem = Union[Pattern, PathKB, FilterNum, FilterSubclass, OptionalGroup, UnionGroup]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstructTemplate:
+    s: Term
+    p: Term
+    o: Term
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """CONSTRUCT query over (stream window, KB)."""
+
+    name: str
+    where: Tuple[WhereItem, ...]
+    construct: Tuple[ConstructTemplate, ...]
+
+    def variables(self) -> List[str]:
+        out: List[str] = []
+
+        def add(t: Term):
+            if isinstance(t, Var) and t.name not in out:
+                out.append(t.name)
+
+        for item in self.where:
+            if isinstance(item, Pattern):
+                for t in (item.s, item.p, item.o):
+                    add(t)
+            elif isinstance(item, PathKB):
+                add(item.start)
+                add(item.end)
+            elif isinstance(item, (FilterNum,)):
+                if item.var not in out:
+                    out.append(item.var)
+            elif isinstance(item, FilterSubclass):
+                if item.var not in out:
+                    out.append(item.var)
+            elif isinstance(item, OptionalGroup):
+                for p in item.patterns:
+                    for t in (p.s, p.p, p.o):
+                        add(t)
+            elif isinstance(item, UnionGroup):
+                for p in item.left + item.right:
+                    for t in (p.s, p.p, p.o):
+                        add(t)
+        for tpl in self.construct:
+            for t in (tpl.s, tpl.p, tpl.o):
+                add(t)
+        return out
+
+    def kb_predicates(self) -> List[int]:
+        preds: List[int] = []
+
+        def visit(item):
+            if isinstance(item, Pattern) and item.src == KB and isinstance(item.p, Const):
+                preds.append(item.p.id)
+            elif isinstance(item, PathKB):
+                preds.extend(item.preds)
+            elif isinstance(item, FilterSubclass):
+                preds.extend([item.type_pred, item.subclass_pred])
+            elif isinstance(item, OptionalGroup):
+                for p in item.patterns:
+                    visit(p)
+            elif isinstance(item, UnionGroup):
+                for p in item.left + item.right:
+                    visit(p)
+
+        for item in self.where:
+            visit(item)
+        return sorted(set(preds))

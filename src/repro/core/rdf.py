@@ -1,0 +1,203 @@
+"""Dictionary-encoded RDF terms and triple tensors.
+
+DSCEP streams RDF triples annotated with timestamps (paper §2).  On TPU we
+cannot move strings; every term (URI, blank node, literal) is interned into a
+``uint32`` id space by :class:`Vocab`.  The id space is split so that composite
+sort keys fit in 32 bits without requiring x64:
+
+* predicates:      ``[1, PRED_SPACE)``            (< 2**12 ids)
+* URIs / strings:  ``[PRED_SPACE, NUM_BASE)``     (< 2**20 ids)
+* numeric literals: ``[NUM_BASE, 2**31)`` encoded as ``NUM_BASE + round(v * NUM_SCALE)``
+
+id 0 is the reserved PAD/NULL term (also the SPARQL unbound value produced by
+OPTIONAL).  Composite probe keys are ``(p << TERM_BITS) | term`` which fits in
+an unsigned 32-bit integer because predicates use 12 bits and terms 20 bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_ID = 0
+PRED_BITS = 12
+TERM_BITS = 20
+PRED_SPACE = 1 << PRED_BITS          # predicate ids live in [1, 4096)
+TERM_SPACE = 1 << TERM_BITS          # term ids live in [PRED_SPACE, 2**20)
+NUM_BASE = np.uint32(1 << 30)        # numeric literals live above this
+NUM_SCALE = 100.0                    # fixed-point scale for numeric literals
+# synthetic per-binding row nodes (the binding-graph protocol between SCEP
+# operators) live in the free band between URI terms and numeric literals
+ROW_BASE = np.uint32(1 << 21)
+
+TermLike = Union[str, int, float]
+
+
+class VocabError(ValueError):
+    pass
+
+
+class Vocab:
+    """Bidirectional interning of RDF terms into the split uint32 id space."""
+
+    def __init__(self) -> None:
+        self._pred_to_id: Dict[str, int] = {}
+        self._term_to_id: Dict[str, int] = {}
+        self._id_to_str: Dict[int, str] = {PAD_ID: "<pad>"}
+        self._next_pred = 1
+        self._next_term = PRED_SPACE
+
+    # -- encoding ----------------------------------------------------------
+    def pred(self, name: str) -> int:
+        pid = self._pred_to_id.get(name)
+        if pid is None:
+            if self._next_pred >= PRED_SPACE:
+                raise VocabError("predicate space exhausted (max %d)" % PRED_SPACE)
+            pid = self._next_pred
+            self._next_pred += 1
+            self._pred_to_id[name] = pid
+            self._id_to_str[pid] = name
+        return pid
+
+    def term(self, name: TermLike) -> int:
+        if isinstance(name, (int, float)) and not isinstance(name, bool):
+            return self.number(float(name))
+        tid = self._term_to_id.get(name)
+        if tid is None:
+            if self._next_term >= PRED_SPACE + TERM_SPACE:
+                raise VocabError("term space exhausted (max %d)" % TERM_SPACE)
+            tid = self._next_term
+            self._next_term += 1
+            self._term_to_id[name] = tid
+            self._id_to_str[tid] = name
+        return tid
+
+    @staticmethod
+    def number(value: float) -> int:
+        """Encode a numeric literal as a fixed-point id."""
+        q = int(round(value * NUM_SCALE))
+        if q < 0:
+            raise VocabError("negative literals unsupported: %r" % value)
+        return int(NUM_BASE) + q
+
+    @staticmethod
+    def is_number(term_id: int) -> bool:
+        return int(term_id) >= int(NUM_BASE)
+
+    @staticmethod
+    def decode_number(term_id: int) -> float:
+        return (int(term_id) - int(NUM_BASE)) / NUM_SCALE
+
+    # -- decoding ----------------------------------------------------------
+    def to_str(self, term_id: int) -> str:
+        term_id = int(term_id)
+        if term_id >= int(NUM_BASE):
+            return repr(self.decode_number(term_id))
+        return self._id_to_str.get(term_id, "<unk:%d>" % term_id)
+
+    @property
+    def num_preds(self) -> int:
+        return self._next_pred
+
+    @property
+    def num_terms(self) -> int:
+        return self._next_term - PRED_SPACE
+
+
+def composite_key(p, term):
+    """``(p << TERM_BITS) | low_bits(term)`` probe key, uint32-safe.
+
+    Terms are offset by PRED_SPACE so they fit in TERM_BITS bits; numeric
+    literals are hashed into the same width (probes on numeric objects are
+    never used for KB access in the shipped query plans, but collisions only
+    cost verification work — the join always re-checks equality exactly).
+    """
+    p = jnp.asarray(p, jnp.uint32)
+    t = jnp.asarray(term, jnp.uint32)
+    low = jnp.where(
+        t >= jnp.uint32(NUM_BASE),
+        (t ^ (t >> jnp.uint32(TERM_BITS))) & jnp.uint32(TERM_SPACE - 1),
+        (t - jnp.uint32(PRED_SPACE)) & jnp.uint32(TERM_SPACE - 1),
+    )
+    low = jnp.where(t == jnp.uint32(PAD_ID), jnp.uint32(0), low)
+    return (p << jnp.uint32(TERM_BITS)) | low
+
+
+class TripleBatch(NamedTuple):
+    """Struct-of-arrays batch of timestamped triples (a stream chunk).
+
+    All arrays share shape ``[N]``; ``valid`` masks real rows.  ``graph``
+    groups triples into RDF-graph events (paper §2: graph events carry a
+    timestamp on every member triple).
+    """
+
+    s: jax.Array      # uint32 subject ids
+    p: jax.Array      # uint32 predicate ids
+    o: jax.Array      # uint32 object ids
+    ts: jax.Array     # uint32 event timestamps (monotonic per stream)
+    graph: jax.Array  # uint32 graph/event ids
+    valid: jax.Array  # bool
+
+    @property
+    def capacity(self) -> int:
+        return int(self.s.shape[-1])
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+
+def empty_triples(capacity: int) -> TripleBatch:
+    z = jnp.zeros((capacity,), jnp.uint32)
+    return TripleBatch(z, z, z, z, z, jnp.zeros((capacity,), bool))
+
+
+def make_triples(
+    rows: Sequence[Tuple[int, int, int, int, int]], capacity: Optional[int] = None
+) -> TripleBatch:
+    """Build a TripleBatch from host-side ``(s, p, o, ts, graph)`` rows."""
+    n = len(rows)
+    cap = capacity if capacity is not None else max(n, 1)
+    if n > cap:
+        raise ValueError("rows (%d) exceed capacity (%d)" % (n, cap))
+    arr = np.zeros((cap, 5), np.uint32)
+    if n:
+        arr[:n] = np.asarray(rows, np.uint32)
+    valid = np.zeros((cap,), bool)
+    valid[:n] = True
+    return TripleBatch(
+        jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]), jnp.asarray(arr[:, 2]),
+        jnp.asarray(arr[:, 3]), jnp.asarray(arr[:, 4]), jnp.asarray(valid),
+    )
+
+
+def concat_triples(batches: Sequence[TripleBatch]) -> TripleBatch:
+    return TripleBatch(*(jnp.concatenate(cols, axis=-1) for cols in zip(*batches)))
+
+
+def sort_by_timestamp(batch: TripleBatch) -> TripleBatch:
+    """Stable sort by (invalid-last, ts, graph) — the Aggregator's merge order."""
+    big = jnp.uint32(0xFFFFFFFF)
+    ts_key = jnp.where(batch.valid, batch.ts, big)
+    order = jnp.lexsort((batch.graph, ts_key))
+    return jax.tree.map(lambda col: jnp.take(col, order, axis=-1), batch)
+
+
+def take_rows(batch: TripleBatch, idx: jax.Array) -> TripleBatch:
+    """Gather rows by index; idx == -1 yields an invalid PAD row."""
+    safe = jnp.where(idx < 0, 0, idx)
+    out = jax.tree.map(lambda col: jnp.take(col, safe, axis=-1), batch)
+    ok = (idx >= 0) & out.valid
+    return out._replace(valid=ok)
+
+
+def to_host_rows(batch: TripleBatch) -> List[Tuple[int, int, int, int, int]]:
+    """Debug/Publisher helper: valid rows as python tuples."""
+    s, p, o, ts, g, v = (np.asarray(x) for x in batch)
+    return [
+        (int(s[i]), int(p[i]), int(o[i]), int(ts[i]), int(g[i]))
+        for i in range(len(v))
+        if v[i]
+    ]

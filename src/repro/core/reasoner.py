@@ -1,0 +1,111 @@
+"""Ontology reasoning support: rdfs:subClassOf hierarchies and owl:sameAs.
+
+The paper's Q15/CQuery1 use hierarchical reasoning ("all tweets that mention
+any entity that is a subclass of MusicalArtist").  Two complementary forms:
+
+* **plan-time**: host-side closure sets (sorted id arrays) consumed by
+  ``filter_in`` and by KB pruning — this is how DSCEP distributes reasoning
+  work into each operator's used-KB slice;
+* **jit-time**: transitive closure as iterated boolean matrix product —
+  MXU-shaped; :mod:`repro.kernels.closure` provides the Pallas kernel and
+  ``closure_matmul`` is the jnp oracle used by default.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kb import KnowledgeBase, host_rows
+
+
+# --------------------------------------------------------------------------
+# plan-time closure sets
+# --------------------------------------------------------------------------
+
+def subclass_edges(kb: KnowledgeBase, subclass_pred: int) -> List[Tuple[int, int]]:
+    rows = host_rows(kb)
+    m = rows[:, 1] == np.uint32(subclass_pred)
+    return [(int(s), int(o)) for s, _, o in rows[m]]
+
+
+def descendants(
+    edges: Sequence[Tuple[int, int]], root: int, include_root: bool = True
+) -> np.ndarray:
+    """All classes c with c rdfs:subClassOf* root — sorted uint32 ids."""
+    children: Dict[int, List[int]] = defaultdict(list)
+    for child, parent in edges:
+        children[parent].append(child)
+    seen: Set[int] = {root} if include_root else set()
+    frontier = [root]
+    while frontier:
+        nxt = []
+        for node in frontier:
+            for ch in children.get(node, ()):  # DAG-safe BFS
+                if ch not in seen:
+                    seen.add(ch)
+                    nxt.append(ch)
+        frontier = nxt
+    return np.asarray(sorted(seen), np.uint32)
+
+
+def same_as_canonical(kb: KnowledgeBase, sameas_pred: int) -> Dict[int, int]:
+    """Union-find canonicalization map for owl:sameAs cliques (plan-time)."""
+    rows = host_rows(kb)
+    m = rows[:, 1] == np.uint32(sameas_pred)
+    parent: Dict[int, int] = {}
+
+    def find(x: int) -> int:
+        while parent.get(x, x) != x:
+            parent[x] = parent.get(parent[x], parent[x])
+            x = parent[x]
+        return x
+
+    for s, _, o in rows[m]:
+        rs, ro = find(int(s)), find(int(o))
+        if rs != ro:
+            parent[max(rs, ro)] = min(rs, ro)
+    return {x: find(x) for x in list(parent)}
+
+
+# --------------------------------------------------------------------------
+# jit-time transitive closure (boolean matmul fixpoint)
+# --------------------------------------------------------------------------
+
+def closure_matmul(adj: jax.Array, max_depth: int | None = None) -> jax.Array:
+    """Reflexive-transitive closure of a boolean adjacency matrix.
+
+    Repeated squaring: log2(diameter) boolean matmuls, each an MXU-friendly
+    ``float32`` product + threshold.  ``adj[i, j]`` = class i subClassOf j.
+    """
+    n = adj.shape[-1]
+    reach = adj.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32)
+    steps = max(1, int(np.ceil(np.log2(max(2, max_depth or n)))))
+    for _ in range(steps):
+        reach = jnp.minimum(reach @ reach, 1.0)
+    return reach > 0.5
+
+
+def closure_set_from_matrix(reach: jax.Array, root_index: int) -> jax.Array:
+    """Row mask of classes reaching ``root_index`` (i.e. its descendants)."""
+    return reach[:, root_index]
+
+
+def build_class_index(edges: Sequence[Tuple[int, int]]) -> Tuple[Dict[int, int], np.ndarray]:
+    """Dense index for class ids appearing in subclass edges."""
+    ids = sorted({x for e in edges for x in e})
+    idx = {cid: i for i, cid in enumerate(ids)}
+    return idx, np.asarray(ids, np.uint32)
+
+
+def adjacency_from_edges(
+    edges: Sequence[Tuple[int, int]], idx: Dict[int, int]
+) -> np.ndarray:
+    n = len(idx)
+    adj = np.zeros((max(n, 1), max(n, 1)), np.float32)
+    for child, parent in edges:
+        adj[idx[child], idx[parent]] = 1.0
+    return adj

@@ -1,0 +1,228 @@
+"""Distributed DSCEP runtime: operator DAG execution over a device mesh.
+
+Maps the paper's deployment (Docker containers + Kafka topics) onto SPMD:
+
+* **inter-query parallelism** — independent `DSCEPRuntime`s (or operator
+  subsets) run independent queries;
+* **inter-operator parallelism** — sub-queries of one decomposed query are
+  traced into one XLA program as independent dataflow branches (XLA's
+  scheduler runs them concurrently) and/or placed on submeshes;
+* **intra-operator parallelism** — the window batch of each operator is
+  sharded across the ``data`` mesh axis; every device runs the identical
+  engine program on its window slice (TPU analogue of Kafka consumer groups).
+
+The runtime also provides the *straggler mitigation* hook: window packing is
+load-aware (``balance_windows``) so devices receive equal triple counts, the
+SPMD equivalent of work-stealing from a backlog.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import Plan, run_plan_windows
+from .kb import KnowledgeBase, pad_to
+from .operator import OperatorConfig, SCEPOperator
+from .planner import OperatorDAG, SubQuery, compile_query, prepare_env, prune_kb_for
+from .rdf import TripleBatch, Vocab, empty_triples
+from .stream import merge_streams
+from .window import Windows, count_windows
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    window_capacity: int = 1000
+    max_windows: int = 8
+    out_stream_cap: int = 2048
+    kb_method: str = "scan"          # paper method: "scan" | "probe"
+    kb_capacity: Optional[int] = None
+    scan_cap: int = 128
+    bind_cap: int = 256
+    out_cap: int = 512
+    # capacity of window-aligned intermediate binding streams between
+    # operators: the aggregator's scan cost grows with the augmented window
+    # width (window_capacity + sum of upstream caps), so intermediates are
+    # kept tighter than the final output (overflow is flagged per operator)
+    intermediate_cap: int = 512
+    use_pallas: bool = False
+
+
+class DSCEPRuntime:
+    """Executes a decomposed query DAG over chunked input streams.
+
+    The whole DAG traces into **one** XLA program per chunk shape: upstream
+    sub-queries are independent dataflow branches (inter-operator parallelism
+    — XLA schedules them concurrently), windows are the vmapped/shardable
+    unit (intra-operator parallelism), and intermediate results stay
+    **window-aligned**: operator G sees upstream outputs appended to the very
+    window that produced them, which is what makes decomposed and monolithic
+    results identical (paper: "All results are the same").
+    """
+
+    def __init__(
+        self,
+        dag: OperatorDAG,
+        kb: KnowledgeBase,
+        vocab: Vocab,
+        config: RuntimeConfig = RuntimeConfig(),
+        mesh: Optional[Mesh] = None,
+        data_axis: str = "data",
+    ):
+        self.dag = dag
+        self.config = config
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.vocab = vocab
+        self.operators: Dict[str, SCEPOperator] = {}
+        op_cfg = OperatorConfig(
+            window_capacity=config.window_capacity,
+            max_windows=config.max_windows,
+            out_stream_cap=config.out_stream_cap,
+        )
+        for name, sub in dag.subqueries.items():
+            plan = compile_query(
+                sub.query,
+                kb_method=config.kb_method,
+                scan_cap=config.scan_cap,
+                bind_cap=config.bind_cap,
+                out_cap=(config.out_cap if name == dag.final
+                         else min(config.intermediate_cap, config.out_cap)),
+                use_pallas=config.use_pallas,
+            )
+            # the paper's core move: each operator gets its own used-KB slice
+            op_kb = (
+                prune_kb_for(sub.query, kb, capacity=config.kb_capacity)
+                if sub.touches_kb
+                else None
+            )
+            env = prepare_env(sub.query, kb)
+            self.operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
+        self._jit_chunk = jax.jit(self._dag_impl)
+
+    # -- the single-program DAG step -----------------------------------------
+    def _dag_impl(
+        self, chunk: TripleBatch, kbs: Dict[str, Optional[KnowledgeBase]],
+        envs: Dict[str, Dict[str, jax.Array]],
+    ) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
+        cfg = self.config
+        merged = merge_streams([chunk])
+        windows = count_windows(merged, cfg.window_capacity, cfg.max_windows)
+        if self.mesh is not None:
+            windows = shard_windows(windows, self.mesh, self.data_axis)
+
+        overflow: Dict[str, jax.Array] = {}
+        final = self.dag.final
+        upstream_out: Dict[str, TripleBatch] = {}
+        for name in self.dag.subqueries:
+            if name == final:
+                continue
+            out_w, ovf = self.operators[name].process_windows(
+                windows, kbs[name], envs[name]
+            )
+            upstream_out[name] = out_w
+            overflow[name] = ovf
+
+        # window-aligned augmentation for the aggregation operator
+        parts = [windows.triples] + [
+            upstream_out[src]
+            for src in self.dag.subqueries[final].inputs
+            if src != "stream"
+        ]
+        aug = TripleBatch(
+            *(jnp.concatenate(cols, axis=-1) for cols in zip(*parts))
+        )
+        aug_windows = Windows(aug, windows.window_valid)
+        out_w, ovf = self.operators[final].process_windows(
+            aug_windows, kbs[final], envs[final]
+        )
+        overflow[final] = ovf
+        return self.operators[final]._publish(out_w), overflow
+
+    # -- orchestration ---------------------------------------------------------
+    def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
+        """Push one stream chunk through the DAG; returns (final output, overflow)."""
+        kbs = {n: op.kb for n, op in self.operators.items()}
+        envs = {n: op.env for n, op in self.operators.items()}
+        return self._jit_chunk(chunk, kbs, envs)
+
+    def process_stream(
+        self, chunks: Sequence[TripleBatch]
+    ) -> List[TripleBatch]:
+        return [self.process_chunk(c)[0] for c in chunks]
+
+
+# --------------------------------------------------------------------------
+# monolithic reference runtime (paper's "one C-SPARQL query" baseline)
+# --------------------------------------------------------------------------
+
+class MonolithicRuntime:
+    """Single-operator execution of the *whole* query against the *full* KB.
+
+    This is the paper's Table-2 baseline: one engine, no decomposition, no
+    KB pruning.  Result equivalence with :class:`DSCEPRuntime` is the paper's
+    "All results are the same" claim (tested in tests/test_equivalence.py).
+    """
+
+    def __init__(self, q, kb: KnowledgeBase, config: RuntimeConfig = RuntimeConfig()):
+        plan = compile_query(
+            q, kb_method=config.kb_method, scan_cap=config.scan_cap,
+            bind_cap=config.bind_cap, out_cap=config.out_cap,
+            use_pallas=config.use_pallas,
+        )
+        env = prepare_env(q, kb)
+        if config.kb_capacity:
+            kb = pad_to(kb, config.kb_capacity)
+        self.operator = SCEPOperator(
+            q.name, plan, kb, env,
+            OperatorConfig(config.window_capacity, config.max_windows,
+                           config.out_stream_cap),
+        )
+
+    def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, jax.Array]:
+        return self.operator.process([chunk])
+
+
+# --------------------------------------------------------------------------
+# SPMD window sharding (intra-operator parallelism on a mesh)
+# --------------------------------------------------------------------------
+
+def shard_windows(windows: Windows, mesh: Mesh, axis: str = "data") -> Windows:
+    """Constrain a window batch to live across a mesh axis (jit-side).
+
+    Each device gets a window slice and runs the identical engine program —
+    the SPMD version of the paper's consumer-group load balancing.
+    """
+    return jax.tree.map(
+        lambda leaf: jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, P(*((axis,) + (None,) * (leaf.ndim - 1)))),
+        ),
+        windows,
+    )
+
+
+def balance_windows(stream: TripleBatch, num_engines: int, window_capacity: int,
+                    max_windows: int) -> Windows:
+    """Straggler-aware packing: windows padded to equal triple counts so every
+    engine (device) receives balanced work before sharding."""
+    w = count_windows(stream, window_capacity, max_windows)
+    # count-based packing already equalizes triple counts up to one graph;
+    # round window count up to a multiple of the engine count so the shard
+    # axis divides evenly.
+    W = w.num_windows
+    if W % num_engines:
+        pad = num_engines - (W % num_engines)
+        w = Windows(
+            triples=jax.tree.map(
+                lambda col: jnp.concatenate(
+                    [col, jnp.zeros((pad,) + col.shape[1:], col.dtype)]
+                ),
+                w.triples,
+            ),
+            window_valid=jnp.concatenate([w.window_valid, jnp.zeros((pad,), bool)]),
+        )
+    return w

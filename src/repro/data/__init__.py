@@ -1,0 +1,1 @@
+from . import dbpedia, tokens, tweets  # noqa: F401

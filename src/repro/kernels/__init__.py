@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three files:
+
+* ``kernel.py`` — ``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling
+  (TPU is the target; ``interpret=True`` validates on CPU),
+* ``ops.py``    — the jit'd public wrapper (padding, dtype policy, vmap),
+* ``ref.py``    — the pure-jnp oracle every test sweeps against.
+
+Kernels:
+
+* ``hash_join``       — DSCEP's window-vs-KB match matrix (the scan-method
+  hotspot: slot-mode equality compares tiled over the KB partition),
+* ``closure``         — boolean-matmul transitive-closure step (RDFS
+  subclass reasoning on the MXU),
+* ``flash_attention`` — GQA flash attention fwd (causal / sliding-window),
+* ``ssd``             — Mamba-2 state-space-duality chunked scan.
+"""

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: boolean matrix product (transitive-closure step).
+
+RDFS subclass reasoning is pointer-chasing on a CPU engine; on TPU the class
+hierarchy becomes a dense boolean adjacency matrix and closure is log(depth)
+repeated squarings — each squaring one MXU matmul with a saturating cast.
+
+Classic three-loop tiling: grid ``(n/bm, n/bn, n/bk)`` with the K dimension
+innermost so the f32 accumulator tile stays resident in VMEM; matmul tiles
+are 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bool_matmul_kernel(nk: int, a_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _saturate():
+        out_ref[...] = jnp.minimum(out_ref[...], 1.0)
+
+
+def closure_step_pallas(
+    reach: jax.Array,           # [n, n] f32 in {0, 1}, n multiple of block
+    bm: int = 128, bn: int = 128, bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    n = reach.shape[0]
+    assert reach.shape == (n, n) and n % bm == 0 and n % bn == 0 and n % bk == 0
+    nk = n // bk
+    kern = functools.partial(_bool_matmul_kernel, nk)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(reach, reach)

@@ -1,0 +1,40 @@
+"""Public wrapper: padded transitive closure with early-exit fixpoint."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _pad_square(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, rem), (0, rem)))
+
+
+def transitive_closure(
+    adj: jax.Array, max_depth: int | None = None, block: int = 128,
+    use_pallas: bool = True, interpret: bool = True,
+) -> jax.Array:
+    """Reflexive-transitive closure of ``adj`` (bool/float in {0,1}).
+
+    ``log2(max_depth)`` squaring steps; each step a Pallas boolean matmul
+    (or the jnp oracle when ``use_pallas=False``).
+    """
+    n = adj.shape[0]
+    steps = max(1, int(np.ceil(np.log2(max(2, max_depth or n)))))
+    reach = jnp.minimum(
+        adj.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32), 1.0
+    )
+    reach = _pad_square(reach, block)
+    for _ in range(steps):
+        if use_pallas:
+            reach = kernel.closure_step_pallas(reach, interpret=interpret)
+        else:
+            reach = ref.closure_step_ref(reach)
+    return reach[:n, :n] > 0.5

@@ -1,0 +1,18 @@
+"""jnp oracle: one boolean-matmul squaring step and the full closure."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def closure_step_ref(reach: jnp.ndarray) -> jnp.ndarray:
+    """One repeated-squaring step: reach | reach @ reach (boolean)."""
+    r = reach.astype(jnp.float32)
+    return jnp.minimum(r @ r, 1.0).astype(reach.dtype)
+
+
+def closure_ref(adj: jnp.ndarray, steps: int) -> jnp.ndarray:
+    n = adj.shape[-1]
+    reach = jnp.minimum(adj.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32), 1.0)
+    for _ in range(steps):
+        reach = jnp.minimum(reach @ reach, 1.0)
+    return reach

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: GQA decode attention (one query token vs a KV cache).
+
+The serving hot loop: every decode step attends ONE query row per sequence
+against a long cached KV prefix.  Tiling for the TPU memory hierarchy:
+
+* grid = ``(B*Hq, S/bk)`` — the KV axis is the innermost (sequential) grid
+  dimension, so each ``[bk, d]`` cache block is DMA'd HBM->VMEM once while
+  the single query row and the f32 online-softmax statistics live in VMEM
+  scratch across the whole KV sweep;
+* GQA maps query head -> kv head inside the BlockSpec index_map (the cache
+  is never repeated in HBM);
+* per-sequence valid lengths: blocks entirely past ``len`` are skipped with
+  ``pl.when`` (no DMA wasted on dead cache tail), partial blocks are masked.
+
+``ref.py`` holds the jnp oracle; ``ops.py`` the padding/jit wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    scale: float, bk: int, nk: int,
+    q_ref, k_ref, v_ref, len_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_pos = kb * bk + jax.lax.iota(jnp.int32, bk)                 # [bk]
+
+    @pl.when(k_pos[0] < length)                                    # block skip
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale                # [1, d]
+        k = k_ref[0, 0].astype(jnp.float32)                        # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)    # [1, bk]
+        mask = (k_pos < length)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)               # [1, bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = l_prev * alpha + jnp.sum(p)
+        m_ref[0, 0] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = l_ref[0, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,           # [B, Hq, 1, D]
+    k: jax.Array,           # [B, Hk, S, D]
+    v: jax.Array,           # [B, Hk, S, D]
+    lengths: jax.Array,     # [B] int32 — valid cache prefix per sequence
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,  # CPU container: interpret; flip off on real TPU
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    _, hk, s, _ = k.shape
+    assert tq == 1 and hq % hk == 0 and s % bk == 0, (tq, hq, hk, s, bk)
+    group = hq // hk
+    nk = s // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_decode_kernel, scale, bk, nk)
+    grid = (b * hq, nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda h, j: (h // hq, h % hq, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda h, j: (h // hq, (h % hq) // group, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda h, j: (h // hq, (h % hq) // group, j, 0)
+            ),
+            pl.BlockSpec((1,), lambda h, j: (h // hq,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda h, j: (h // hq, h % hq, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),     # output accumulator
+            pltpu.VMEM((1, 1), jnp.float32),     # running max
+            pltpu.VMEM((1, 1), jnp.float32),     # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths.astype(jnp.int32))

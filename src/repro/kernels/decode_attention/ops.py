@@ -1,0 +1,30 @@
+"""Public wrapper: cache-length padding and layout adaptation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def decode_attention(
+    q: jax.Array,           # [B, Hq, 1, D]
+    k: jax.Array,           # [B, Hk, S, D]
+    v: jax.Array,           # [B, Hk, S, D]
+    lengths: jax.Array,     # [B] int32
+    bk: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """GQA decode attention; pads S to a block multiple and dispatches."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, lengths)
+    s = k.shape[2]
+    bk = bk or min(kernel.DEFAULT_BK, max(8, s))
+    pad = (-s) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # padded tail positions sit at index >= s >= length: masked by `lengths`
+    return kernel.decode_attention_pallas(q, k, v, lengths, bk=bk,
+                                          interpret=interpret)

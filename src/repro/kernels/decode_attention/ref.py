@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for GQA decode attention with per-sequence lengths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,           # [B, Hq, 1, D]
+    k: jax.Array,           # [B, Hk, S, D]
+    v: jax.Array,           # [B, Hk, S, D]
+    lengths: jax.Array,     # [B] int32
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    _, hk, s, _ = k.shape
+    group = hq // hk
+    qf = q.reshape(b, hk, group, tq, d).astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qf,
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]            # [B, S]
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (length 0) must produce zeros, not NaNs
+    probs = jnp.where(mask[:, None, None, None, :], probs, 0.0)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, tq, d).astype(q.dtype)

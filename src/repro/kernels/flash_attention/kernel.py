@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash attention forward (GQA, causal, sliding window).
+
+Online-softmax tiling for the TPU memory hierarchy: the KV sequence is a
+*grid dimension* (TPU grids execute sequentially on a core, innermost axis
+fastest), so each ``[bk, d]`` KV block is DMA'd HBM->VMEM by the BlockSpec
+machinery while the ``[bq, d]`` query tile and the f32 running statistics
+(max / denominator / accumulator) persist in VMEM scratch across the KV loop.
+GQA maps query head -> kv head inside the index_map (no KV repeat in HBM).
+
+Grid: ``(B*Hq, Tq/bq, Tk/bk)``.  Fully-masked (causal / sliding-window) KV
+blocks are skipped with ``pl.when`` — block-level mask skipping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    causal: bool, window: int | None, q_offset: int, scale: float,
+    bq: int, bk: int, nk: int,
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+):
+    qi = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)          # [bq]
+    k_pos = kb * bk + jax.lax.iota(jnp.int32, bk)                     # [bk]
+
+    # block-level skipping: causal => kv block must start at/before last q pos;
+    # sliding window => kv block must end inside the window of the first q pos
+    live = jnp.asarray(True)
+    if causal:
+        live &= k_pos[0] <= q_pos[bq - 1]
+    if window is not None:
+        live &= k_pos[bk - 1] > q_pos[0] - window
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale                   # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                           # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)       # [bq, bk]
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, 0]                                     # [bq]
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_prev * alpha + jnp.sum(p, axis=-1))[:, None]
+        m_ref[...] = m_new[:, None]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,           # [B, Hq, Tq, D]
+    k: jax.Array,           # [B, Hk, Tk, D]
+    v: jax.Array,           # [B, Hk, Tk, D]
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,  # CPU container: interpret; flip off on real TPU
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    _, hk, tk, _ = k.shape
+    assert hq % hk == 0 and tq % bq == 0 and tk % bk == 0, (hq, hk, tq, bq, tk, bk)
+    group = hq // hk
+    nk = tk // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(
+        _flash_kernel, causal, window, q_offset, scale, bq, bk, nk
+    )
+    grid = (b * hq, tq // bq, nk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda h, i, j: (h // hq, h % hq, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda h, i, j: (h // hq, (h % hq) // group, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda h, i, j: (h // hq, (h % hq) // group, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda h, i, j: (h // hq, h % hq, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: GQA scaled-dot-product attention with causal and
+sliding-window masking, f32 softmax accumulation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,            # [B, Hq, Tq, D]
+    k: jax.Array,            # [B, Hk, Tk, D]
+    v: jax.Array,            # [B, Hk, Tk, D]
+    causal: bool = True,
+    window: int | None = None,   # sliding window size (keys >= qpos-window+1)
+    q_offset: int = 0,           # absolute position of q[0] (decode: Tk - Tq)
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    hk = k.shape[1]
+    assert hq % hk == 0
+    group = hq // hk
+    kg = jnp.repeat(k, group, axis=1)
+    vg = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) * scale
+    qpos = jnp.arange(tq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((tq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)   # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vg.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: tiled window-vs-KB match matrix.
+
+TPU adaptation of DSCEP's KB-scan join.  A CPU engine (C-SPARQL) walks hash
+maps pointer-by-pointer; the TPU-native formulation streams the KB partition
+through VMEM in ``bn``-wide blocks and evaluates all ``bm x bn`` slot-equality
+predicates as vector compares (VPU), emitting an int8 candidate matrix that
+the caller compacts.  Arithmetic intensity is low (compare-bound), so block
+shapes are chosen to keep the KB stream resident: one ``[bm]`` binding column
+per BOUND slot and three ``[bn]`` KB columns per block.
+
+Grid: ``(M / bm, N / bn)``; each program writes one ``[bm, bn]`` output tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pattern import CompiledPattern, SlotMode
+
+DEFAULT_BM = 128
+DEFAULT_BN = 1024
+
+
+def _match_kernel(pat: CompiledPattern, cols_ref, bvalid_ref, ks_ref, kp_ref,
+                  ko_ref, kvalid_ref, out_ref):
+    """One [bm, bn] tile: all-slot equality under the static pattern."""
+    kcols = {0: ks_ref[...], 1: kp_ref[...], 2: ko_ref[...]}      # each [bn]
+    m = bvalid_ref[...][:, None] & kvalid_ref[...][None, :]       # [bm, bn]
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        kv = kcols[i][None, :]
+        if slot.mode == SlotMode.CONST:
+            m = m & (kv == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            m = m & (kv == cols_ref[:, slot.var][:, None])
+    slots = (pat.s, pat.p, pat.o)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if (
+                slots[i].mode != SlotMode.CONST
+                and slots[j].mode != SlotMode.CONST
+                and slots[i].var == slots[j].var
+            ):
+                m = m & (kcols[i][None, :] == kcols[j][None, :])
+    out_ref[...] = m.astype(jnp.int8)
+
+
+def match_matrix_pallas(
+    cols: jax.Array,        # [M, NV] uint32 (M multiple of bm)
+    bvalid: jax.Array,      # [M] bool
+    ks: jax.Array, kp: jax.Array, ko: jax.Array,   # [N] uint32 (N mult of bn)
+    kvalid: jax.Array,      # [N] bool
+    pat: CompiledPattern,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,  # CPU container: interpret; flip off on real TPU
+) -> jax.Array:
+    m, nv = cols.shape
+    n = ks.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_match_kernel, pat)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, nv), lambda i, j: (i, 0)),    # binding tile
+            pl.BlockSpec((bm,), lambda i, j: (i,)),         # binding validity
+            pl.BlockSpec((bn,), lambda i, j: (j,)),         # KB subject block
+            pl.BlockSpec((bn,), lambda i, j: (j,)),         # KB predicate block
+            pl.BlockSpec((bn,), lambda i, j: (j,)),         # KB object block
+            pl.BlockSpec((bn,), lambda i, j: (j,)),         # KB validity block
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(cols, bvalid, ks, kp, ko, kvalid)

@@ -1,0 +1,44 @@
+"""Public wrapper: pad to block multiples, run the kernel, slice back."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kb import KnowledgeBase
+from repro.core.pattern import Bindings, CompiledPattern
+
+from . import kernel
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def match_matrix(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern,
+    bm: int | None = None, bn: int | None = None, interpret: bool = True,
+) -> jax.Array:
+    """Drop-in replacement for the engine's scan-method match matrix.
+
+    Returns bool ``[bind.capacity, kb.capacity]``; callers compact it exactly
+    as with the jnp path.
+    """
+    m, n = bind.capacity, kb.capacity
+    bm = bm or min(kernel.DEFAULT_BM, max(8, m))
+    bn = bn or min(kernel.DEFAULT_BN, max(128, n))
+    cols = _pad_to(bind.cols, bm, axis=0)
+    bvalid = _pad_to(bind.valid, bm, axis=0, fill=False)
+    ks = _pad_to(kb.s_ps, bn)
+    kp = _pad_to(kb.p_ps, bn)
+    ko = _pad_to(kb.o_ps, bn)
+    kvalid = _pad_to(kb.valid, bn, fill=False)
+    out = kernel.match_matrix_pallas(
+        cols, bvalid, ks, kp, ko, kvalid, pat, bm=bm, bn=bn, interpret=interpret
+    )
+    return out[:m, :n].astype(bool)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the window-vs-KB match matrix.
+
+Semantics (shared with the kernel): given a binding table ``cols [M, NV]``
+with row validity ``bvalid [M]``, KB columns ``(s, p, o) [N]`` with validity
+``kvalid [N]``, and a static :class:`CompiledPattern`, produce the boolean
+candidate matrix ``match [M, N]`` where entry (i, r) is True iff KB row r
+satisfies the pattern under binding row i.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.pattern import CompiledPattern, SlotMode
+
+
+def match_matrix_ref(cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern):
+    kcols = {0: ks, 1: kp, 2: ko}
+    m = bvalid[:, None] & kvalid[None, :]
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        kv = kcols[i][None, :]
+        if slot.mode == SlotMode.CONST:
+            m = m & (kv == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            m = m & (kv == cols[:, slot.var][:, None])
+    slots = (pat.s, pat.p, pat.o)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if (
+                slots[i].mode != SlotMode.CONST
+                and slots[j].mode != SlotMode.CONST
+                and slots[i].var == slots[j].var
+            ):
+                m = m & (kcols[i][None, :] == kcols[j][None, :])
+    return m

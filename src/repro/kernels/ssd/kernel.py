@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+The SSD insight is that the scalar-decay SSM recurrence factorizes into
+chunk-local *matmuls* (the "duality" with masked attention) plus a tiny
+cross-chunk state recurrence — exactly the decomposition the MXU wants:
+
+  per chunk c of length L (all f32, per (batch, head) grid cell):
+    la          = cumsum(dt * A)                       # [L] log-decay
+    intra       = ((C B^T) ∘ Γ) @ (dt * x)             # [L,L]@[L,P] matmuls
+                  Γ[t,s] = exp(la_t - la_s) for s<=t (causal decay mask)
+    inter       = (C ∘ exp(la)) @ S_prev               # [L,S]@[S,P]
+    S_next      = exp(la_L) S_prev + (B ∘ dt ∘ exp(la_L - la))^T @ x
+
+Grid ``(B*H, T/L)``: the chunk axis is the innermost sequential grid dim, so
+the ``[S, P]`` state lives in VMEM scratch across chunks; each chunk's x/dt/
+B/C blocks are DMA'd by BlockSpec.  All chunk math is 128-alignable matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(
+    nl: int, L: int,
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+    state_ref,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [L]
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    Bc = b_ref[0, :, 0, :].astype(jnp.float32)       # [L, S]
+    Cc = c_ref[0, :, 0, :].astype(jnp.float32)       # [L, S]
+
+    la = jnp.cumsum(dt * A)                          # [L] (non-increasing)
+    la_last = la[L - 1]
+
+    # intra-chunk: masked decay attention
+    scores = jnp.dot(Cc, Bc.T, preferred_element_type=jnp.float32)   # [L, L]
+    t_idx = jax.lax.iota(jnp.int32, L)
+    causal = t_idx[:, None] >= t_idx[None, :]
+    gamma = jnp.where(causal, jnp.exp(la[:, None] - la[None, :]), 0.0)
+    y_intra = jnp.dot(scores * gamma * dt[None, :], x,
+                      preferred_element_type=jnp.float32)            # [L, P]
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                                           # [S, P]
+    y_inter = jnp.dot(Cc * jnp.exp(la)[:, None], state,
+                      preferred_element_type=jnp.float32)            # [L, P]
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state recurrence
+    w = jnp.exp(la_last - la) * dt                                   # [L]
+    state_ref[...] = jnp.exp(la_last) * state + jnp.dot(
+        (Bc * w[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ci == nl - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_pallas(
+    x: jax.Array,    # [B, T, H, P]
+    dt: jax.Array,   # [B, T, H]
+    A: jax.Array,    # [H]
+    Bm: jax.Array,   # [B, T, G, S]
+    Cm: jax.Array,   # [B, T, G, S]
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,  # CPU container: interpret; flip off on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,P], final_state [B,H,S,P]). T % chunk == 0."""
+    b, t, h, p = x.shape
+    g, s = Bm.shape[2], Bm.shape[3]
+    assert t % chunk == 0 and h % g == 0
+    nl = t // chunk
+    rep = h // g
+    kern = functools.partial(_ssd_kernel, nl, chunk)
+    grid = (b * h, nl)
+    y, state = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda i, c: (i // h, c, i % h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i // h, c, i % h)),
+            pl.BlockSpec((1,), lambda i, c: (i % h,)),
+            pl.BlockSpec((1, chunk, 1, s), lambda i, c: (i // h, c, (i % h) // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, s), lambda i, c: (i // h, c, (i % h) // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda i, c: (i // h, c, i % h, 0)),
+            pl.BlockSpec((1, 1, s, p), lambda i, c: (i // h, i % h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, s, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((s, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, state

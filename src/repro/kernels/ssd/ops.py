@@ -1,0 +1,32 @@
+"""Public wrapper: padding to chunk multiples, D skip-connection, dtype."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def ssd(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    D: jax.Array | None = None, chunk: int | None = None,
+    use_pallas: bool = True, interpret: bool = True,
+) -> jax.Array:
+    """Mamba-2 SSD scan; returns y [B,T,H,P]."""
+    b, t, h, p = x.shape
+    if not use_pallas:
+        y, _ = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+        return y
+    chunk = chunk or min(kernel.DEFAULT_CHUNK, t)
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 => a=1, no update
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, _ = kernel.ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    y = y[:, :t]
+    if D is not None:
+        y = y + (D.astype(jnp.float32)[None, None, :, None]
+                 * x[:, :t].astype(jnp.float32)).astype(y.dtype)
+    return y

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence (sequential scan).
+
+State-space model with scalar-identity A per head (the SSD restriction):
+
+    a_t      = exp(dt_t * A_h)                      (decay, A_h < 0)
+    S_t      = a_t * S_{t-1} + dt_t * B_t x_t^T     (state [dstate, headdim])
+    y_t      = C_t^T S_t + D_h * x_t
+
+B/C are shared across the heads of a group (G groups, H heads, H % G == 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,    # [B, T, H, P]
+    dt: jax.Array,   # [B, T, H]  (positive)
+    A: jax.Array,    # [H]        (negative)
+    Bm: jax.Array,   # [B, T, G, S]
+    Cm: jax.Array,   # [B, T, G, S]
+    D: jax.Array | None = None,   # [H]
+    init_state: jax.Array | None = None,  # [B, H, S, P]
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,H,P], final_state [B,H,S,P])."""
+    b, t, h, p = x.shape
+    g, s = Bm.shape[2], Bm.shape[3]
+    assert h % g == 0
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2)   # [B,T,H,S]
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bh.astype(jnp.float32)
+    Cf = Ch.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def scan_one(state, inputs):
+        xt, dtt, bt, ct = inputs            # [H,P], [H], [H,S], [H,S]
+        a = jnp.exp(dtt * Af)               # [H]
+        upd = (dtt[:, None] * bt)[..., None] * xt[:, None, :]   # [H,S,P]
+        state = a[:, None, None] * state + upd
+        y = jnp.einsum("hs,hsp->hp", ct, state)
+        return state, y
+
+    def per_batch(xb, dtb, bb, cb, s0):
+        state0 = s0
+        final, ys = jax.lax.scan(scan_one, state0, (xb, dtb, bb, cb))
+        return ys, final
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, s, p), jnp.float32)
+    )
+    ys, final = jax.vmap(per_batch)(xf, dtf, Bf, Cf, s0)
+    if D is not None:
+        ys = ys + D.astype(jnp.float32)[None, None, :, None] * xf
+    return ys.astype(x.dtype), final

@@ -1,0 +1,523 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU v5e pods, the
+production meshes are built exactly as they would be on the pod, and every
+cell's ``train_step`` / ``serve_step`` must ``.lower().compile()`` under its
+in/out shardings.  ``memory_analysis()`` (bytes per device) and
+``cost_analysis()`` (FLOPs / bytes) are recorded per cell into a JSON
+artifact that benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 2x16x16 mesh
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config, get_shape
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ALL_SHAPES, InputShape
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.sharding.partition import (
+    batch_sharding, cache_shardings, param_shardings,
+)
+from repro.train.optimizer import (
+    AdamWConfig, OptState, init_opt_state, opt_state_shardings,
+)
+from repro.train.train_loop import TrainConfig, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts/dryrun")
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no device allocation anywhere)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    t = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend:  # vlm/audio: frontend stub provides embeddings
+            d = {
+                "embeds": jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct(
+                    (b, t, cfg.num_codebooks) if cfg.num_codebooks else (b, t), i32),
+            }
+            if cfg.mrope_sections:
+                d["positions"] = jax.ShapeDtypeStruct((3, b, t), i32)
+            return d
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32),
+            "labels": jax.ShapeDtypeStruct((b, t), i32),
+        }
+    if shape.kind == "prefill":
+        tok_shape = (b, t, cfg.num_codebooks) if cfg.num_codebooks else (b, t)
+        return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+    # decode: one new token against a cache of seq_len
+    tok_shape = (b, 1, cfg.num_codebooks) if cfg.num_codebooks else (b, 1)
+    return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    params, spec = jax.eval_shape(
+        functools.partial(lm.init_model, cfg=cfg), jax.random.PRNGKey(0)
+    )
+    # eval_shape returns ShapeDtypeStructs but ParamSpec is a real object
+    # captured during tracing; re-run init in eval_shape can't return it, so
+    # build it via a side channel:
+    return params, spec
+
+
+def abstract_params_with_spec(cfg: ModelConfig):
+    from repro.models.common import ParamSpec
+    holder = {}
+
+    def build(key):
+        params, spec = lm.init_model(key, cfg)
+        holder["spec"] = spec
+        return params
+
+    params = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return params, holder["spec"]
+
+
+# --------------------------------------------------------------------------
+# collective-bytes accounting from post-SPMD HLO
+# --------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(?:[a-z]+\d*)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8": 1,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every tensor shape literal in ``text``."""
+    total = 0
+    for m in re.finditer(r"([a-z]+\d*)\[([\d,]*)\]", text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\(?[a-z]+\d*\[[\d,]*\](?:\{[\d,]*\})?(?:,\s*)?)+\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device) from HLO text.
+
+    Matches sync and async ``-start`` forms (``-done`` just consumes the
+    started op's result and is skipped to avoid double counting); shape
+    literals may carry layout suffixes like ``{2,1,0}``.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_text, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_text)
+        out["count"] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+
+def _ep_combine_axes(cfg: ModelConfig, mesh, moe_groups: int):
+    """EP combine all-to-all axes: only when experts shard the model axis."""
+    if (moe_groups > 1 and cfg.moe is not None
+            and "model" in mesh.shape
+            and cfg.moe.num_experts % mesh.shape["model"] == 0):
+        return ("model",)
+    return None
+
+
+def should_skip(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return "SKIP(long-context policy: pure full-attention arch)"
+    return None
+
+
+def lower_train_cell(cfg: ModelConfig, shape: InputShape, mesh, zero1=True,
+                     microbatches: int = 1, remat: str = "dots",
+                     scan_unroll: int = 1, profile: str = "tp",
+                     seq_parallel: bool = False, moe_groups: int = 1,
+                     ep_combine: bool = True):
+    from repro.sharding.partition import PROFILES
+    prof = PROFILES[profile]
+    dp_axes = tuple(a for a in prof.batch_axes if a in mesh.shape)
+    act_shard = (dp_axes, "model", None) if seq_parallel else None
+    tcfg = TrainConfig(opt=AdamWConfig(), microbatches=microbatches,
+                       remat=remat, scan_unroll=scan_unroll,
+                       act_shard=act_shard, moe_groups=moe_groups,
+                       moe_group_axes=dp_axes if moe_groups > 1 else None,
+                       moe_combine_axes=(_ep_combine_axes(cfg, mesh, moe_groups)
+                                         if ep_combine else None))
+    train_step = make_train_step(cfg, tcfg)
+    params_s, spec = abstract_params_with_spec(cfg)
+    opt_s = jax.eval_shape(init_opt_state, params_s)
+    batch_s = input_specs(cfg, shape)
+
+    p_shard = param_shardings(spec.axes, params_s, mesh, rules=prof.rules)
+    o_shard = opt_state_shardings(p_shard, params_s, mesh, zero1=zero1,
+                                  data_axes=prof.zero1_axes)
+    b_shard = {
+        k: batch_sharding(mesh, v.shape,
+                          batch_dim=1 if k == "positions" else 0,
+                          batch_axes=prof.batch_axes)
+        for k, v in batch_s.items()
+    }
+
+    with mesh:
+        jf = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        lowered = jf.lower(params_s, opt_s, batch_s)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_decode_cell(cfg: ModelConfig, shape: InputShape, mesh,
+                      scan_unroll: int = 1, profile: str = "tp",
+                      mla_absorbed: bool = False, moe_groups: int = 1,
+                      loop: str = "scan"):
+    import dataclasses as _dc
+    from repro.sharding.partition import PROFILES
+    prof = PROFILES[profile]
+    if mla_absorbed and cfg.mla is not None:
+        cfg = _dc.replace(cfg, mla_absorbed=True)
+    params_s, spec = abstract_params_with_spec(cfg)
+    cache_len = shape.seq_len
+    caches_s = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.global_batch, cache_len)
+    )
+    batch_s = input_specs(cfg, shape)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    grp_axes = (tuple(a for a in prof.batch_axes if a in mesh.shape)
+                if moe_groups > 1 else None)
+
+    def serve_step(params, batch, caches, pos):
+        return lm.decode_step(params, cfg, batch, caches, pos,
+                              unroll=scan_unroll, moe_groups=moe_groups,
+                              moe_axes=grp_axes,
+                              moe_combine=_ep_combine_axes(cfg, mesh,
+                                                           moe_groups),
+                              loop=loop)
+
+    p_shard = param_shardings(spec.axes, params_s, mesh, rules=prof.rules)
+    c_shard = cache_shardings(cfg, caches_s, mesh)
+    b_shard = {
+        k: batch_sharding(mesh, v.shape,
+                          batch_dim=1 if k == "positions" else 0,
+                          batch_axes=prof.batch_axes)
+        for k, v in batch_s.items()
+    }
+
+    with mesh:
+        jf = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, b_shard, c_shard, NamedSharding(mesh, P())),
+            donate_argnums=(2,),
+        )
+        lowered = jf.lower(params_s, batch_s, caches_s, pos_s)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_prefill_cell(cfg: ModelConfig, shape: InputShape, mesh,
+                       scan_unroll: int = 1, profile: str = "tp",
+                       last_only: bool = False, moe_groups: int = 1):
+    from repro.sharding.partition import PROFILES
+    prof = PROFILES[profile]
+    grp_axes = (tuple(a for a in prof.batch_axes if a in mesh.shape)
+                if moe_groups > 1 else None)
+    params_s, spec = abstract_params_with_spec(cfg)
+    batch_s = input_specs(cfg, shape)
+
+    def prefill(params, batch):
+        if last_only:
+            # serve-time prefill needs the LAST position's logits only:
+            # project [B, 1, d] instead of materializing [B, T, V]
+            h, _ = lm.forward_hidden(params, cfg, batch, unroll=scan_unroll,
+                                     moe_groups=moe_groups, moe_axes=grp_axes,
+                                     moe_combine=_ep_combine_axes(cfg, mesh,
+                                                                  moe_groups))
+            return lm.lm_logits(params, cfg, h[:, -1:])[:, 0]
+        logits, _ = lm.forward(params, cfg, batch, unroll=scan_unroll,
+                               moe_groups=moe_groups, moe_axes=grp_axes,
+                               moe_combine=_ep_combine_axes(cfg, mesh,
+                                                            moe_groups))
+        return logits[:, -1]
+
+    p_shard = param_shardings(spec.axes, params_s, mesh, rules=prof.rules)
+    b_shard = {
+        k: batch_sharding(mesh, v.shape,
+                          batch_dim=1 if k == "positions" else 0,
+                          batch_axes=prof.batch_axes)
+        for k, v in batch_s.items()
+    }
+    with mesh:
+        jf = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        lowered = jf.lower(params_s, batch_s)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+
+
+def _lower_cell(cfg, shape, mesh, overrides, scan_unroll: int):
+    overrides = dict(overrides or {})
+    overrides["scan_unroll"] = scan_unroll
+    if shape.kind == "train":
+        overrides.pop("last_only", None)
+        overrides.pop("mla_absorbed", None)
+        overrides.pop("loop", None)
+        return lower_train_cell(cfg, shape, mesh, **overrides)
+    profile = overrides.get("profile", "tp")
+    groups = overrides.get("moe_groups", 1)
+    if shape.kind == "prefill":
+        return lower_prefill_cell(cfg, shape, mesh, scan_unroll=scan_unroll,
+                                  profile=profile, moe_groups=groups,
+                                  last_only=overrides.get("last_only", False))
+    return lower_decode_cell(cfg, shape, mesh, scan_unroll=scan_unroll,
+                             profile=profile, moe_groups=groups,
+                             mla_absorbed=overrides.get("mla_absorbed", False),
+                             loop=overrides.get("loop", "scan"))
+
+
+def _measure(compiled) -> Dict:
+    cost = compiled.cost_analysis()
+    return {
+        "cost": {
+            k: float(v) for k, v in cost.items()
+            if k in _COST_KEYS or k.startswith("bytes accessed")
+        },
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[Dict] = None) -> Dict:
+    """Lower + compile one (arch x shape x mesh) cell and extract its costs.
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, so a scanned 60-layer stack reports ~1 period of FLOPs.  We lower
+    the cell twice (period-scan ``unroll=1`` and ``unroll=2``): the unroll=2
+    body holds exactly one extra period, so ``per_period = cost(u2) -
+    cost(u1)`` and the corrected whole-step cost is
+    ``cost(u1) + (num_periods - 1) * per_period``.  Memory analysis is taken
+    from the unroll=1 build (the deployable program).
+    """
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    skip = should_skip(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "num_periods": cfg.num_periods,
+    }
+    if skip:
+        result["status"] = skip
+        return result
+    t0 = time.time()
+    lowered, compiled = _lower_cell(cfg, shape, mesh, overrides, scan_unroll=1)
+
+    # a fori_loop body can't be unrolled for the two-point cost correction;
+    # its math is identical to the scan path, so COST terms come from the
+    # scan-equivalent lowering while memory_analysis() keeps the fori build
+    cost_overrides = dict(overrides or {})
+    if cost_overrides.get("loop") == "fori":
+        cost_overrides["loop"] = "scan"
+        _, compiled_cost = _lower_cell(cfg, shape, mesh, cost_overrides,
+                                       scan_unroll=1)
+        m1 = _measure(compiled_cost)
+    else:
+        m1 = _measure(compiled)
+
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+
+    n = cfg.num_periods
+    result["cost_u1"] = m1["cost"]
+    result["collectives_u1"] = m1["collectives"]
+    if n >= 2:
+        _, compiled2 = _lower_cell(cfg, shape, mesh, cost_overrides,
+                                   scan_unroll=2)
+        m2 = _measure(compiled2)
+        result["cost_u2"] = m2["cost"]
+
+        def corrected(d1, d2):
+            out = {}
+            for k, v1 in d1.items():
+                v2 = d2.get(k, v1)
+                per_period = max(0.0, float(v2) - float(v1))
+                out[k] = float(v1) + (n - 1) * per_period
+            return out
+
+        result["cost"] = corrected(m1["cost"], m2["cost"])
+        result["collectives"] = {
+            k: int(v) for k, v in corrected(
+                {k: float(v) for k, v in m1["collectives"].items()},
+                {k: float(v) for k, v in m2["collectives"].items()},
+            ).items()
+        }
+    else:
+        result["cost"] = m1["cost"]
+        result["collectives"] = m1["collectives"]
+
+    result["compile_s"] = round(time.time() - t0, 1)
+    result["status"] = "OK"
+    counts = cfg.param_counts()
+    result["params_total"] = counts["total"]
+    result["params_active"] = counts["active"]
+    return result
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    # hillclimb levers (recorded under --tag so baselines stay untouched)
+    ap.add_argument("--profile", default=None,
+                    help="sharding profile: tp | dp | ep (default tp)")
+    ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--last-only", action="store_true",
+                    help="prefill: project only the last position's logits")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="train: sequence-parallel residual stream")
+    ap.add_argument("--mla-absorbed", action="store_true",
+                    help="decode: latent-space (absorbed) MLA attention")
+    ap.add_argument("--moe-groups", type=int, default=None,
+                    help="hierarchical MoE dispatch groups (align with DP)")
+    ap.add_argument("--decode-fori", action="store_true",
+                    help="decode: in-place fori_loop cache carry")
+    ap.add_argument("--no-ep-combine", action="store_true",
+                    help="train: disable the EP-combine all-to-all constraint")
+    ap.add_argument("--tag", default=None,
+                    help="artifact suffix for perf experiments")
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.normpath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    overrides: Dict = {}
+    if args.profile:
+        overrides["profile"] = args.profile
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    if args.no_zero1:
+        overrides["zero1"] = False
+    if args.last_only:
+        overrides["last_only"] = True
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+    if args.mla_absorbed:
+        overrides["mla_absorbed"] = True
+    if args.moe_groups:
+        overrides["moe_groups"] = args.moe_groups
+    if args.decode_fori:
+        overrides["loop"] = "fori"
+    if args.no_ep_combine:
+        overrides["ep_combine"] = False
+
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = "%s__%s__%s" % (arch, shape_name, "pod2" if multi_pod else "pod1")
+                if args.tag:
+                    tag += "__" + args.tag
+                path = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    print("[cached] %-55s %s" % (tag, prev.get("status")))
+                    continue
+                try:
+                    result = run_cell(arch, shape_name, multi_pod,
+                                      overrides=overrides or None)
+                except Exception as e:  # a failure here is a bug in our system
+                    failures += 1
+                    result = {
+                        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                        "status": "FAIL: %s" % e,
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                result["overrides"] = {**overrides}
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=1)
+                print("[%6.1fs] %-55s %s" % (
+                    result.get("compile_s", 0.0), tag, result["status"][:80]))
+    if failures:
+        print("%d FAILURES" % failures)
+        sys.exit(1)
+    print("dry-run complete: all cells OK")
+
+
+if __name__ == "__main__":
+    main()

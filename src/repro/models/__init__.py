@@ -1,0 +1,1 @@
+from . import attention, common, lm, mamba, mlp, moe  # noqa: F401

@@ -1,0 +1,294 @@
+"""Attention mixers: GQA (optionally SWA / QKV-bias / M-RoPE) and MLA.
+
+Two execution paths share one math definition:
+
+* ``mode="train"``  — full-sequence causal attention (optionally windowed);
+* ``mode="decode"`` — single-step with a KV cache laid out ``[B, S, Hk, D]``
+  (MLA caches the compressed latent ``[B, S, r]`` + shared rope key instead —
+  the paper-pool architectures' serve-memory win).
+
+The jnp path is the default (it lowers/shards cleanly under pjit for the
+dry-run); ``impl="pallas"`` switches the hot loop to the flash kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from .common import (
+    EMBED, HEAD_DIM, HEADS, KV_HEADS, LORA, ParamSpec, apply_mrope, apply_rope,
+    dense, param, zeros_param,
+)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_attention(
+    key: jax.Array, cfg: ModelConfig, spec: ParamSpec, path: str, dtype,
+) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qdim = cfg.num_heads * (m.nope_head_dim + m.rope_head_dim)
+        p: Dict = {}
+        if m.q_lora_rank:
+            p["wq_a"] = param(ks[0], (d, m.q_lora_rank), (EMBED, LORA), spec, path + "/wq_a", dtype)
+            p["wq_b"] = param(ks[1], (m.q_lora_rank, qdim), (LORA, HEADS), spec, path + "/wq_b", dtype)
+        else:
+            p["wq"] = param(ks[0], (d, qdim), (EMBED, HEADS), spec, path + "/wq", dtype)
+        p["wkv_a"] = param(ks[2], (d, m.kv_lora_rank), (EMBED, LORA), spec, path + "/wkv_a", dtype)
+        p["wk_rope"] = param(ks[3], (d, m.rope_head_dim), (EMBED, HEAD_DIM), spec, path + "/wk_rope", dtype)
+        p["wkv_b"] = param(
+            ks[4], (m.kv_lora_rank, cfg.num_heads * (m.nope_head_dim + m.v_head_dim)),
+            (LORA, HEADS), spec, path + "/wkv_b", dtype,
+        )
+        p["wo"] = param(ks[5], (cfg.num_heads * m.v_head_dim, d), (HEADS, EMBED), spec, path + "/wo", dtype)
+        return p
+    p = {
+        "wq": param(ks[0], (d, cfg.num_heads * hd), (EMBED, HEADS), spec, path + "/wq", dtype),
+        "wk": param(ks[1], (d, cfg.num_kv_heads * hd), (EMBED, KV_HEADS), spec, path + "/wk", dtype),
+        "wv": param(ks[2], (d, cfg.num_kv_heads * hd), (EMBED, KV_HEADS), spec, path + "/wv", dtype),
+        "wo": param(ks[3], (cfg.num_heads * hd, d), (HEADS, EMBED), spec, path + "/wo", dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_param((cfg.num_heads * hd,), (HEADS,), spec, path + "/bq", dtype)
+        p["bk"] = zeros_param((cfg.num_kv_heads * hd,), (KV_HEADS,), spec, path + "/bk", dtype)
+        p["bv"] = zeros_param((cfg.num_kv_heads * hd,), (KV_HEADS,), spec, path + "/bv", dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# shared attention math
+# --------------------------------------------------------------------------
+
+def _sdpa(
+    q: jax.Array,            # [B, T, Hq, D]
+    k: jax.Array,            # [B, S, Hk, D]
+    v: jax.Array,            # [B, S, Hk, Dv]
+    causal: bool,
+    window: Optional[int],
+    q_offset,
+    impl: str = "xla",
+) -> jax.Array:
+    b, t, hq, dd = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    if impl == "pallas" and t == 1 and causal and window is None:
+        # decode fast path: one query row against the cache, per-sequence
+        # valid length = q_offset + 1 (the just-written position)
+        from repro.kernels.decode_attention import ops as da_ops
+        off = jnp.asarray(q_offset)
+        lengths = jnp.broadcast_to(off + 1, (b,)).astype(jnp.int32)
+        out = da_ops.decode_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), lengths,
+        )
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            q_offset=int(q_offset),
+        )
+        return out.transpose(0, 2, 1, 3)
+    group = hq // hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dd, jnp.float32))
+    qf = q.reshape(b, t, hk, group, dd).astype(jnp.float32)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qf, k.astype(jnp.float32)) * scale
+    off = jnp.asarray(q_offset)
+    # qpos: [t] when offset is scalar, [B, t] when per-sequence (batcher)
+    qpos = off[..., None] + jnp.arange(t)
+    kpos = jnp.arange(s)
+    mask = jnp.ones(qpos.shape + (s,), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[..., None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[..., None] - window
+    mask_b = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+    logits = jnp.where(mask_b, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, t, hq, v.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA forward (train + decode)
+# --------------------------------------------------------------------------
+
+def gqa_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array,
+    positions: jax.Array,                 # [B, T] (or [3, B, T] for M-RoPE)
+    cache: Optional[Dict] = None,         # {"k": [B,S,Hk,D], "v":..., "len": []}
+    impl: str = "xla",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, t, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, t, cfg.num_heads, hd)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, t, cfg.num_kv_heads, hd)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, t, cfg.num_kv_heads, hd)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        pos1d = positions[0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+
+    if cache is None:
+        out = _sdpa(q, k, v, causal=True, window=cfg.swa_window, q_offset=0,
+                    impl=impl)
+        new_cache = None
+    else:
+        idx = cache["len"]                  # [] shared or [B] per-sequence
+        if idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        else:
+            upd = jax.vmap(
+                lambda c, x, i: jax.lax.dynamic_update_slice(c, x, (i, 0, 0))
+            )
+            ck = upd(cache["k"], k.astype(cache["k"].dtype), idx)
+            cv = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+        out = _sdpa(q, ck, cv, causal=True, window=cfg.swa_window,
+                    q_offset=idx, impl="xla" if idx.ndim else impl)
+        new_cache = {"k": ck, "v": cv, "len": idx + t}
+    return dense(out.reshape(b, t, cfg.num_heads * hd), p["wo"]), new_cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                    per_seq: bool = False) -> Dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), dtype),
+        "len": jnp.zeros((batch,) if per_seq else (), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLA forward (train + decode) — latent-compressed KV cache
+# --------------------------------------------------------------------------
+
+def mla_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,   # {"ckv": [B,S,r], "krope": [B,S,dr], "len"}
+    impl: str = "xla",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    m: MLAConfig = cfg.mla
+    b, t, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+
+    if m.q_lora_rank:
+        q = dense(dense(x, p["wq_a"]), p["wq_b"])
+    else:
+        q = dense(x, p["wq"])
+    q = q.reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = dense(x, p["wkv_a"])                       # [B, T, r] latent
+    k_rope = apply_rope(
+        dense(x, p["wk_rope"]).reshape(b, t, 1, dr), positions, cfg.rope_theta
+    ).reshape(b, t, dr)                              # shared across heads
+
+    if cache is not None:
+        idx = cache["len"]
+        if idx.ndim == 0:
+            ckv_all = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, idx, 0))
+            kr_all = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, idx, 0))
+        else:
+            upd = jax.vmap(
+                lambda c, x, i: jax.lax.dynamic_update_slice(c, x, (i, 0))
+            )
+            ckv_all = upd(cache["ckv"], ckv.astype(cache["ckv"].dtype), idx)
+            kr_all = upd(cache["krope"], k_rope.astype(cache["krope"].dtype), idx)
+        new_cache = {"ckv": ckv_all, "krope": kr_all, "len": idx + t}
+        q_offset = idx
+    else:
+        ckv_all, kr_all = ckv, k_rope
+        new_cache = None
+        q_offset = 0
+
+    if cache is not None and cfg.mla_absorbed:
+        # --- absorbed decode: attention runs IN LATENT SPACE --------------
+        # Naively expanding the cached latent to per-head K/V re-projects the
+        # whole [B, S, r] cache through wkv_b every step: O(S·h·(dn+dv)·r)
+        # FLOPs + an [B, S, h, dn+dv] materialization per layer per token.
+        # Absorption folds wkv_b's key half into the QUERY (q_lat = q_nope @
+        # W_k^T, one O(t·h·dn·r) matmul) and applies the value half AFTER the
+        # [B, h, t, S] x [B, S, r] contraction, so per-step cost is O(S·r)
+        # per head-group and the big expansion disappears.
+        wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, dn + dv)
+        w_k = wkv_b[..., :dn]                                  # [r, h, dn]
+        w_v = wkv_b[..., dn:]                                  # [r, h, dv]
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                           w_k.astype(jnp.float32))            # [B,t,h,r]
+        s = ckv_all.shape[1]
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+        logits = (
+            jnp.einsum("bthr,bsr->bhts", q_lat, ckv_all.astype(jnp.float32))
+            + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                         kr_all.astype(jnp.float32))
+        ) * scale
+        qpos = (jnp.asarray(q_offset)[..., None] + jnp.arange(t))
+        kpos = jnp.arange(s)
+        mask = kpos[None, :] <= qpos[..., None]                # causal
+        mask_b = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        logits = jnp.where(mask_b, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)                # [B,h,t,S]
+        ctx = jnp.einsum("bhts,bsr->bthr", probs,
+                         ckv_all.astype(jnp.float32))          # [B,t,h,r]
+        out = jnp.einsum("bthr,rhd->bthd", ctx, w_v.astype(jnp.float32))
+        out = out.astype(x.dtype)
+        return dense(out.reshape(b, t, h * dv), p["wo"]), new_cache
+
+    # expand latent -> per-head keys/values (training / reference path; the
+    # cache object is still the small latent)
+    kv = dense(ckv_all, p["wkv_b"]).reshape(b, -1, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], k_nope.shape[:3] + (dr,))],
+        axis=-1,
+    )
+    qk = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _sdpa(qk, k, v, causal=True, window=cfg.swa_window,
+                q_offset=q_offset, impl=impl)
+    return dense(out.reshape(b, t, h * dv), p["wo"]), new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                    per_seq: bool = False) -> Dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        "len": jnp.zeros((batch,) if per_seq else (), jnp.int32),
+    }
+
+
+def attn_forward(p, cfg, x, positions, cache=None, impl="xla"):
+    if cfg.mla is not None:
+        return mla_forward(p, cfg, x, positions, cache, impl)
+    return gqa_forward(p, cfg, x, positions, cache, impl)
+
+
+def attn_cache_shape(cfg, batch, max_len, dtype, per_seq: bool = False):
+    if cfg.mla is not None:
+        return mla_cache_shape(cfg, batch, max_len, dtype, per_seq)
+    return gqa_cache_shape(cfg, batch, max_len, dtype, per_seq)

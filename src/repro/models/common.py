@@ -1,0 +1,157 @@
+"""Shared model primitives: norms, RoPE (incl. M-RoPE), init, logical axes.
+
+Weights are plain pytrees (nested dicts of jnp arrays).  Every parameter is
+created through :func:`param` with a *logical axis* tuple; the sharding layer
+(:mod:`repro.sharding.partition`) maps logical axes -> mesh axes, so the same
+model code runs single-device, TP, EP or multi-pod without edits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# logical axis names used across the stack
+EMBED = "embed"          # d_model
+VOCAB = "vocab"
+HEADS = "heads"          # q heads (TP-sharded)
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+FF = "ff"                # MLP intermediate (TP-sharded)
+EXPERT = "expert"        # MoE experts (EP-sharded)
+SSM_INNER = "ssm_inner"  # mamba d_inner (TP-sharded)
+SSM_STATE = "ssm_state"
+LAYERS = "layers"        # stacked scan axis (never sharded)
+LORA = "lora"
+
+
+class ParamSpec:
+    """Accumulates (path -> logical axes) while init builds the pytree."""
+
+    def __init__(self) -> None:
+        self.axes: Dict[str, Tuple[Optional[str], ...]] = {}
+
+    def record(self, path: str, axes: Tuple[Optional[str], ...]):
+        self.axes[path] = axes
+
+
+def param(
+    key: jax.Array, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+    spec: ParamSpec, path: str, dtype=jnp.float32, scale: Optional[float] = None,
+) -> jax.Array:
+    assert len(shape) == len(axes), (path, shape, axes)
+    spec.record(path, tuple(axes))
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, tuple(shape), jnp.float32) * scale).astype(dtype)
+
+
+def zeros_param(shape, axes, spec: ParamSpec, path: str, dtype=jnp.float32):
+    spec.record(path, tuple(axes))
+    return jnp.zeros(tuple(shape), dtype)
+
+
+def ones_param(shape, axes, spec: ParamSpec, path: str, dtype=jnp.float32):
+    spec.record(path, tuple(axes))
+    return jnp.ones(tuple(shape), dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def layer_norm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, weight: Optional[jax.Array]) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, weight)
+    if kind == "layernorm_nonparam":
+        return layer_norm_nonparam(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,                  # [..., T, H, D] or [..., T, D]
+    positions: jax.Array,          # [..., T]
+    theta: float = 10_000.0,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [d/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., T, d/2]
+    if x.ndim == ang.ndim + 1:                          # [..., T, H, D]
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,                  # [B, T, H, D]
+    positions: jax.Array,          # [3, B, T] (temporal, height, width)
+    sections: Tuple[int, int, int],
+    theta: float = 10_000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: head_dim half-split into 3 frequency
+    sections, each rotated by its own position stream (t/h/w)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                        # [half]
+    # section s of the frequency vector gets position stream s
+    sec_idx = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )                                                   # [half]
+    pos = positions.astype(jnp.float32)                 # [3, B, T]
+    pos_per_freq = jnp.take(pos, sec_idx, axis=0)       # [half, B, T]
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * freqs     # [B, T, half]
+    ang = ang[..., None, :]                             # [B, T, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    out = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        out = out + b.astype(x.dtype)
+    return out
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]

@@ -1,0 +1,340 @@
+"""LM assembly: init / train forward / loss / decode step for every pool arch.
+
+The stack is a ``lax.scan`` over *periods* (repeating groups of sub-layers,
+see :class:`repro.configs.base.ModelConfig.layer_pattern`), so HLO size is
+O(period) regardless of depth — essential for compiling 60-layer models on
+the dry-run host.  Heterogeneous stacks (Jamba) are one period of mixed
+sub-layer specs.
+
+Weights are nested dicts; every leaf was registered with logical axes
+(:mod:`repro.models.common`) which the sharding layer maps to the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from .attention import attn_cache_shape, attn_forward, init_attention
+from .common import (
+    EMBED, LAYERS, VOCAB, ParamSpec, apply_norm, dense, dtype_of, ones_param,
+    param,
+)
+from .mamba import init_mamba, mamba_cache_shape, mamba_forward
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_sub(key, cfg: ModelConfig, spec_i: LayerSpec, spec: ParamSpec,
+              path: str, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    if cfg.norm == "rmsnorm":
+        p["nm"] = ones_param((cfg.d_model,), (EMBED,), spec, path + "/nm", dtype)
+        if spec_i.ffn:
+            p["nf"] = ones_param((cfg.d_model,), (EMBED,), spec, path + "/nf", dtype)
+    if spec_i.mixer == "attn":
+        p["attn"] = init_attention(ks[0], cfg, spec, path + "/attn", dtype)
+    else:
+        p["mamba"] = init_mamba(ks[0], cfg, spec, path + "/mamba", dtype)
+    if spec_i.ffn == "dense":
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, spec, path + "/mlp", dtype)
+    elif spec_i.ffn == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe, spec, path + "/moe", dtype)
+    return p
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Tuple[Dict, ParamSpec]:
+    dtype = dtype_of(cfg.dtype)
+    spec = ParamSpec()
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+
+    vp = cfg.padded_vocab
+    if cfg.num_codebooks:
+        params["embed"] = param(
+            k_embed, (cfg.num_codebooks, vp, cfg.d_model),
+            (None, VOCAB, EMBED), spec, "embed", dtype, scale=0.02,
+        )
+    else:
+        params["embed"] = param(
+            k_embed, (vp, cfg.d_model), (VOCAB, EMBED), spec,
+            "embed", dtype, scale=0.02,
+        )
+
+    blocks: Dict[str, Any] = {}
+    n = cfg.num_periods
+    for i, spec_i in enumerate(cfg.layer_pattern):
+        sub_path = "blocks/sub%d" % i
+        keys = jax.random.split(jax.random.fold_in(k_blocks, i), n)
+        sub = jax.vmap(
+            lambda k: _init_sub(k, cfg, spec_i, spec, sub_path, dtype)
+        )(keys)
+        blocks["sub%d" % i] = sub
+    # stacked leading axis is the scan (layers) axis
+    for path in list(spec.axes):
+        if path.startswith("blocks/"):
+            spec.axes[path] = (LAYERS,) + spec.axes[path]
+    params["blocks"] = blocks
+
+    if cfg.norm == "rmsnorm":
+        params["final_norm"] = ones_param((cfg.d_model,), (EMBED,), spec,
+                                          "final_norm", dtype)
+    if not cfg.tie_embeddings:
+        out_width = cfg.padded_vocab * max(1, cfg.num_codebooks)
+        params["lm_head"] = param(k_head, (cfg.d_model, out_width),
+                                  (EMBED, VOCAB), spec, "lm_head", dtype, scale=0.02)
+    return params, spec
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+def embed_tokens(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    if "embeds" in batch:                     # vlm/audio frontend stub output
+        return batch["embeds"].astype(dtype_of(cfg.dtype))
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        # [B, T, K] -> sum over codebook embeddings
+        emb = params["embed"]                 # [K, V, d]
+        outs = [
+            jnp.take(emb[k], tokens[..., k], axis=0)
+            for k in range(cfg.num_codebooks)
+        ]
+        return functools.reduce(jnp.add, outs)
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def lm_logits(params: Dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    vp = cfg.padded_vocab
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", h, w.astype(h.dtype))
+    if cfg.num_codebooks:
+        b, t, _ = logits.shape
+        logits = logits.reshape(b, t, cfg.num_codebooks, vp)
+    if vp != cfg.vocab_size:   # mask padded vocab rows out of the softmax
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _sub_forward(p, cfg: ModelConfig, spec_i: LayerSpec, h, positions,
+                 cache=None, impl="xla", dropless=False, moe_groups=1,
+                 moe_axes=None, moe_combine=None):
+    aux = jnp.zeros((), jnp.float32)
+    hn = apply_norm(cfg.norm, h, p.get("nm"))
+    if spec_i.mixer == "attn":
+        out, new_cache = attn_forward(p["attn"], cfg, hn, positions,
+                                      cache.get("attn") if cache else None, impl)
+    else:
+        out, new_cache = mamba_forward(p["mamba"], cfg, hn,
+                                       cache.get("mamba") if cache else None, impl)
+    h = h + out
+    if spec_i.ffn:
+        hn = apply_norm(cfg.norm, h, p.get("nf"))
+        if spec_i.ffn == "dense":
+            h = h + mlp_forward(p["mlp"], hn)
+        else:
+            y, aux = moe_forward(p["moe"], cfg.moe, hn, dropless=dropless,
+                                 dispatch_groups=moe_groups,
+                                 group_axes=moe_axes, combine_axes=moe_combine)
+            h = h + y
+    kind = "attn" if spec_i.mixer == "attn" else "mamba"
+    return h, ({kind: new_cache} if new_cache is not None else None), aux
+
+
+def forward_hidden(
+    params: Dict, cfg: ModelConfig, batch: Dict,
+    impl: str = "xla", remat: str = "none", dropless: bool = False,
+    unroll: int = 1, act_shard=None, moe_groups: int = 1, moe_axes=None,
+    moe_combine=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Backbone only: embeddings -> blocks -> final norm.
+
+    Returns (hidden [B,T,d], aux_loss) — the LM head is applied separately so
+    serve-time prefill can project ONLY the last position (computing the full
+    [B,T,V] logits tensor is pure waste for prefill, and with a vocab-sharded
+    head it drags a huge all-gather with it).
+
+    ``act_shard``: optional PartitionSpec constraint applied to the residual
+    stream after every sub-layer (sequence-parallel activations: GSPMD then
+    lowers the TP boundary as reduce-scatter + all-gather in the activation
+    dtype instead of a full all-reduce).
+    """
+    h = embed_tokens(params, cfg, batch)
+    b, t, _ = h.shape
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None, None], (3, b, t))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def period_fn(h, p_period):
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, spec_i in enumerate(cfg.layer_pattern):
+            h, _, aux = _sub_forward(p_period["sub%d" % i], cfg, spec_i, h,
+                                     positions, None, impl, dropless,
+                                     moe_groups, moe_axes, moe_combine)
+            if act_shard is not None:
+                h = jax.lax.with_sharding_constraint(h, act_shard)
+            aux_total = aux_total + aux
+        return h, aux_total
+
+    if remat == "full":
+        period_fn = jax.checkpoint(period_fn)
+    elif remat == "dots":
+        period_fn = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    h, auxs = jax.lax.scan(period_fn, h, params["blocks"], unroll=unroll)
+    h = apply_norm(cfg.norm, h, params.get("final_norm"))
+    return h, jnp.sum(auxs)
+
+
+def forward(
+    params: Dict, cfg: ModelConfig, batch: Dict,
+    impl: str = "xla", remat: str = "none", dropless: bool = False,
+    unroll: int = 1, act_shard=None, moe_groups: int = 1, moe_axes=None,
+    moe_combine=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss).
+
+    ``dropless=False`` (training): MoE capacity clipping per
+    ``capacity_factor``.  ``dropless=True`` (serve reference): exact MoE —
+    matches the decode path, which is always dropless.
+
+    ``unroll`` is passed to the period scan; the dry-run lowers at
+    ``unroll=1`` and ``unroll=2`` to recover exact per-period cost terms
+    (XLA's cost analysis counts a while-loop body once).
+    """
+    h, aux = forward_hidden(params, cfg, batch, impl, remat, dropless,
+                            unroll, act_shard, moe_groups, moe_axes,
+                            moe_combine)
+    return lm_logits(params, cfg, h), aux
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict,
+            impl: str = "xla", remat: str = "none",
+            unroll: int = 1, act_shard=None,
+            moe_groups: int = 1, moe_axes=None,
+            moe_combine=None) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch, impl, remat, unroll=unroll,
+                          act_shard=act_shard, moe_groups=moe_groups,
+                          moe_axes=moe_axes, moe_combine=moe_combine)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.num_codebooks:
+        onehot = jax.nn.one_hot(labels, cfg.padded_vocab, dtype=jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.sum(onehot * logp, axis=-1)          # [B, T, K]
+        ce = jnp.mean(nll)
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(nll)
+    total = ce + aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serve)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               per_seq: bool = False) -> Dict:
+    """Stacked per-period decode state for every sub-layer position.
+
+    ``per_seq=True`` gives each sequence its own cache length (the continuous
+    batcher's slot lanes); default is one shared position (SPMD decode)."""
+    dtype = dtype_of(cfg.dtype)
+    n = cfg.num_periods
+    caches: Dict[str, Any] = {}
+    for i, spec_i in enumerate(cfg.layer_pattern):
+        if spec_i.mixer == "attn":
+            template = {"attn": attn_cache_shape(cfg, batch, max_len, dtype, per_seq)}
+        else:
+            template = {"mamba": mamba_cache_shape(cfg, batch, dtype)}
+        caches["sub%d" % i] = jax.tree.map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype), template
+        )
+    return caches
+
+
+def decode_step(
+    params: Dict, cfg: ModelConfig, batch: Dict, caches: Dict,
+    pos: jax.Array, impl: str = "xla", unroll: int = 1,
+    moe_groups: int = 1, moe_axes=None, moe_combine=None,
+    loop: str = "scan",
+) -> Tuple[jax.Array, Dict]:
+    """One decode step: new token(s) + cached state -> (logits, new caches).
+
+    ``batch`` carries ``tokens [B, T_new(, K)]`` (or ``embeds``); ``pos`` is
+    the absolute position of the first new token.
+
+    ``loop="scan"`` carries the caches as scan xs->ys, which XLA's buffer
+    assigner materializes with extra cache-sized temporaries (~3x the cache
+    in measured decode cells).  ``loop="fori"`` keeps the caches in the
+    fori_loop CARRY and updates the current period's slice in place — same
+    math, aliasing-friendly buffers (the §Perf memory lever for decode).
+    """
+    h = embed_tokens(params, cfg, batch)
+    b, t, _ = h.shape
+    pos1d = jnp.asarray(pos)[..., None] + jnp.arange(t)   # [t] or [B, t]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos1d[None] if pos1d.ndim == 2
+                                     else pos1d[None, None], (3, b, t))
+    else:
+        positions = jnp.broadcast_to(pos1d if pos1d.ndim == 2
+                                     else pos1d[None], (b, t))
+
+    def period_fn(h, p_period, cache_period):
+        new_caches = {}
+        for i, spec_i in enumerate(cfg.layer_pattern):
+            h, nc, _ = _sub_forward(p_period["sub%d" % i], cfg, spec_i, h,
+                                    positions, cache_period["sub%d" % i], impl,
+                                    dropless=True,   # serve path: exact MoE
+                                    moe_groups=moe_groups, moe_axes=moe_axes,
+                                    moe_combine=moe_combine)
+            new_caches["sub%d" % i] = nc
+        return h, new_caches
+
+    if loop == "fori":
+        def body(i, carry):
+            h, cc = carry
+            p_period = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False),
+                params["blocks"])
+            cache_period = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False),
+                cc)
+            h, new_caches = period_fn(h, p_period, cache_period)
+            cc = jax.tree.map(
+                lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                    c, nc.astype(c.dtype), i, 0), cc, new_caches)
+            return h, cc
+        h, new_caches = jax.lax.fori_loop(0, cfg.num_periods, body,
+                                          (h, caches))
+    else:
+        h, new_caches = jax.lax.scan(
+            lambda h, xs: period_fn(h, xs[0], xs[1]),
+            h, (params["blocks"], caches), unroll=unroll)
+    h = apply_norm(cfg.norm, h, params.get("final_norm"))
+    return lm_logits(params, cfg, h), new_caches

@@ -1,0 +1,224 @@
+"""Mamba mixers: Mamba-1 (selective scan, used by Jamba) and Mamba-2 (SSD).
+
+Mamba-2's chunked SSD is matmul-dominated (MXU-friendly); the default path is
+the pure-jnp reference scan (lowers/shards cleanly everywhere) and
+``impl="pallas"`` switches to :mod:`repro.kernels.ssd`.  Mamba-1's recurrence
+is evaluated with ``jax.lax.associative_scan`` over the time axis.
+
+Decode carries O(1) state per layer — conv tail + SSM state — which is what
+makes the SSM/hybrid architectures the ``long_500k`` family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from .common import EMBED, SSM_INNER, SSM_STATE, ParamSpec, dense, param, ones_param, zeros_param
+
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, spec: ParamSpec, path: str, dtype) -> Dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    ks = jax.random.split(key, 8)
+    if mc.version == 2:
+        nh = mc.nheads(d)
+        g, s = mc.ngroups, mc.d_state
+        conv_ch = di + 2 * g * s
+        p = {
+            "in_proj": param(ks[0], (d, 2 * di + 2 * g * s + nh), (EMBED, SSM_INNER),
+                             spec, path + "/in_proj", dtype),
+            "conv_w": param(ks[1], (mc.d_conv, conv_ch), (None, SSM_INNER),
+                            spec, path + "/conv_w", dtype, scale=0.5),
+            "conv_b": zeros_param((conv_ch,), (SSM_INNER,), spec, path + "/conv_b", dtype),
+            "A_log": zeros_param((nh,), (None,), spec, path + "/A_log", jnp.float32),
+            "D": ones_param((nh,), (None,), spec, path + "/D", jnp.float32),
+            "dt_bias": zeros_param((nh,), (None,), spec, path + "/dt_bias", jnp.float32),
+            "norm_w": ones_param((di,), (SSM_INNER,), spec, path + "/norm_w", dtype),
+            "out_proj": param(ks[2], (di, d), (SSM_INNER, EMBED), spec,
+                              path + "/out_proj", dtype),
+        }
+        return p
+    r = _dt_rank(d)
+    s = mc.d_state
+    return {
+        "in_proj": param(ks[0], (d, 2 * di), (EMBED, SSM_INNER), spec, path + "/in_proj", dtype),
+        "conv_w": param(ks[1], (mc.d_conv, di), (None, SSM_INNER), spec,
+                        path + "/conv_w", dtype, scale=0.5),
+        "conv_b": zeros_param((di,), (SSM_INNER,), spec, path + "/conv_b", dtype),
+        "x_proj": param(ks[2], (di, r + 2 * s), (SSM_INNER, None), spec, path + "/x_proj", dtype),
+        "dt_proj": param(ks[3], (r, di), (None, SSM_INNER), spec, path + "/dt_proj", dtype),
+        "dt_bias": zeros_param((di,), (SSM_INNER,), spec, path + "/dt_bias", jnp.float32),
+        "A_log": zeros_param((di, s), (SSM_INNER, SSM_STATE), spec, path + "/A_log", jnp.float32),
+        "D": ones_param((di,), (SSM_INNER,), spec, path + "/D", jnp.float32),
+        "out_proj": param(ks[4], (di, d), (SSM_INNER, EMBED), spec, path + "/out_proj", dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv
+# --------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """x [B,T,C], w [K,C] depthwise.  Returns (y [B,T,C], new tail [B,K-1,C])."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([tail, x], axis=1)               # [B, T+K-1, C]
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    ) + b[None, None, :]
+    new_tail = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(tail)
+    return y, new_tail
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 forward
+# --------------------------------------------------------------------------
+
+def mamba2_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array,
+    cache: Optional[Dict] = None, impl: str = "xla",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    mc = cfg.mamba
+    b, t, d = x.shape
+    di = mc.d_inner(d)
+    nh = mc.nheads(d)
+    g, s, hd = mc.ngroups, mc.d_state, mc.headdim
+
+    zxbcdt = dense(x, p["in_proj"])
+    z, xb, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * g * s], axis=-1)
+    conv_tail = cache["conv"] if cache is not None else None
+    xb, new_tail = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_tail)
+    xb = jax.nn.silu(xb)
+    xs, Bm, Cm = jnp.split(xb, [di, di + g * s], axis=-1)
+    xs = xs.reshape(b, t, nh, hd)
+    Bm = Bm.reshape(b, t, g, s)
+    Cm = Cm.reshape(b, t, g, s)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # [b,t,nh]
+    A = -jnp.exp(p["A_log"])                                           # [nh]
+
+    if cache is None:
+        if impl == "pallas":
+            from repro.kernels.ssd import ops as ssd_ops
+            y = ssd_ops.ssd(xs, dt, A, Bm, Cm, p["D"], use_pallas=True)
+            new_cache = None
+        else:
+            from repro.kernels.ssd.ref import ssd_ref
+            y, _ = ssd_ref(xs, dt, A, Bm, Cm, p["D"])
+            new_cache = None
+    elif t > 1:
+        # prefill with state carry: full scan, emit final state into the cache
+        from repro.kernels.ssd.ref import ssd_ref
+        y, final_state = ssd_ref(xs, dt, A, Bm, Cm, p["D"],
+                                 init_state=cache["ssm"])
+        new_cache = {"conv": new_tail, "ssm": final_state}
+    else:
+        # single-step recurrence on the carried state
+        state = cache["ssm"]                                           # [b,nh,s,hd]
+        rep = nh // g
+        Bh = jnp.repeat(Bm, rep, axis=2)[:, 0]                         # [b,nh,s]
+        Ch = jnp.repeat(Cm, rep, axis=2)[:, 0]
+        a = jnp.exp(dt[:, 0] * A)                                      # [b,nh]
+        upd = (dt[:, 0, :, None] * Bh)[..., None] * xs[:, 0, :, None, :].astype(jnp.float32)
+        state = a[..., None, None] * state + upd
+        y = jnp.einsum("bhs,bhsp->bhp", Ch, state)
+        y = y + p["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)                                 # [b,1,nh,hd]
+        new_cache = {"conv": new_tail, "ssm": state}
+
+    y = y.reshape(b, t, di)
+    # gated RMSNorm (Mamba-2 block epilogue)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm_w"].astype(jnp.float32)).astype(x.dtype)
+    return dense(y, p["out_proj"]), new_cache
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 forward (selective scan)
+# --------------------------------------------------------------------------
+
+def mamba1_forward(
+    p: Dict, cfg: ModelConfig, x: jax.Array,
+    cache: Optional[Dict] = None, impl: str = "xla",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    mc = cfg.mamba
+    b, t, d = x.shape
+    di = mc.d_inner(d)
+    s = mc.d_state
+    r = _dt_rank(d)
+
+    xz = dense(x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = cache["conv"] if cache is not None else None
+    xs, new_tail = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_tail)
+    xs = jax.nn.silu(xs)
+
+    proj = dense(xs, p["x_proj"])
+    dt_r, Bm, Cm = jnp.split(proj, [r, r + s], axis=-1)
+    dt = jax.nn.softplus(dense(dt_r, p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])                               # [b,t,di]
+    A = -jnp.exp(p["A_log"])                                           # [di,s]
+    xf = xs.astype(jnp.float32)
+
+    a = jnp.exp(dt[..., None] * A[None, None])                         # [b,t,di,s]
+    u = (dt * xf)[..., None] * Bm[:, :, None, :].astype(jnp.float32)   # [b,t,di,s]
+
+    if cache is None or t > 1:
+        def combine(l, rgt):
+            al, bl = l
+            ar, br = rgt
+            return al * ar, br + ar * bl
+        aa, hh = jax.lax.associative_scan(combine, (a, u), axis=1)
+        if cache is not None:   # prefill with carried initial state
+            hh = hh + aa * cache["ssm"][:, None]
+        y = jnp.einsum("bts,btds->btd", Cm.astype(jnp.float32), hh)
+        new_cache = (
+            {"conv": new_tail, "ssm": hh[:, -1]} if cache is not None else None
+        )
+    else:
+        state = cache["ssm"]                                           # [b,di,s]
+        state = a[:, 0] * state + u[:, 0]
+        y = jnp.einsum("bs,bds->bd", Cm[:, 0].astype(jnp.float32), state)[:, None]
+        new_cache = {"conv": new_tail, "ssm": state}
+
+    y = y + p["D"] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dense(y, p["out_proj"]), new_cache
+
+
+def mamba_forward(p, cfg, x, cache=None, impl="xla"):
+    if cfg.mamba.version == 2:
+        return mamba2_forward(p, cfg, x, cache, impl)
+    return mamba1_forward(p, cfg, x, cache, impl)
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    if mc.version == 2:
+        conv_ch = di + 2 * mc.ngroups * mc.d_state
+        return {
+            "conv": jnp.zeros((batch, mc.d_conv - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((batch, mc.nheads(d), mc.d_state, mc.headdim), jnp.float32),
+        }
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }

@@ -1,0 +1,24 @@
+"""Dense SwiGLU MLP (the pool's universal FFN shape)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import EMBED, FF, ParamSpec, dense, param
+
+
+def init_mlp(key, d_model: int, d_ff: int, spec: ParamSpec, path: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": param(k1, (d_model, d_ff), (EMBED, FF), spec, path + "/wi", dtype),
+        "wg": param(k2, (d_model, d_ff), (EMBED, FF), spec, path + "/wg", dtype),
+        "wo": param(k3, (d_ff, d_model), (FF, EMBED), spec, path + "/wo", dtype),
+    }
+
+
+def mlp_forward(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wi"])
+    return dense(h, p["wo"])

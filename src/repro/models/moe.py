@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch is Megablocks-style sort/gather rather than a one-hot dispatch
+matmul: tokens are ranked per expert with a stable sort, clipped to a static
+capacity, gathered into dense ``[E, C, d]`` blocks for the batched expert
+GEMMs, and scatter-added back with their router weights.  Compiled FLOPs
+scale with *active* parameters (E·C ≈ tokens·top_k·capacity_factor), which
+keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+Experts shard over the ``model`` mesh axis (expert parallelism): the ``E``
+leading dim of every expert weight and of the dispatched activations carries
+the EXPERT logical axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from .common import EMBED, EXPERT, FF, ParamSpec, dense, param
+from .mlp import init_mlp, mlp_forward
+
+
+def init_moe(key, d_model: int, mo: MoEConfig, spec: ParamSpec, path: str, dtype) -> Dict:
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    e, f = mo.num_experts, mo.expert_ff
+    ks = jax.random.split(k_experts, 3)
+    p = {
+        "router": param(k_router, (d_model, e), (EMBED, EXPERT), spec,
+                        path + "/router", jnp.float32),   # router in f32
+        "wi": param(ks[0], (e, d_model, f), (EXPERT, EMBED, FF), spec, path + "/wi", dtype),
+        "wg": param(ks[1], (e, d_model, f), (EXPERT, EMBED, FF), spec, path + "/wg", dtype),
+        "wo": param(ks[2], (e, f, d_model), (EXPERT, FF, EMBED), spec, path + "/wo", dtype),
+    }
+    if mo.num_shared:
+        p["shared"] = init_mlp(
+            k_shared, d_model, (mo.shared_ff or mo.expert_ff) * mo.num_shared,
+            spec, path + "/shared", dtype,
+        )
+    return p
+
+
+def _capacity(num_tokens: int, mo: MoEConfig) -> int:
+    c = int(math.ceil(num_tokens * mo.top_k * mo.capacity_factor / mo.num_experts))
+    return max(4, -(-c // 4) * 4)     # round up to a multiple of 4
+
+
+def _topk_router(probs: jax.Array, k: int):
+    """Partition-friendly top-k: k iterated argmaxes over the expert dim.
+
+    ``lax.top_k`` lowers through a sort custom-call that GSPMD cannot
+    partition on batch dims (measured: it all-gathers the full [n, e] router
+    probabilities on every device).  For router-sized k (<= 8) k argmax
+    passes are pure elementwise/reduce ops that shard cleanly.
+    """
+    e = probs.shape[-1]
+    p = probs
+    ws, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        ws.append(jnp.max(p, axis=-1))
+        idxs.append(i)
+        p = jnp.where(jax.nn.one_hot(i, e, dtype=bool), -jnp.inf, p)
+    return jnp.stack(ws, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def _dispatch_group(xf, probs, k: int, e: int, cap: int):
+    """Sort-based dispatch of one token group: returns (xe [e,cap,d],
+    tok_for_slot [e*cap], w_for_slot [e*cap])."""
+    n = xf.shape[0]
+    weights, sel = _topk_router(probs, k)                        # [n, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    flat_e = sel.reshape(n * k)
+    flat_tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    flat_w = weights.reshape(n * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se = jnp.take(flat_e, order)
+    st = jnp.take(flat_tok, order)
+    sw = jnp.take(flat_w, order)
+    idx = jnp.arange(n * k, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    pos_in_e = idx - run_start
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)         # overflow slot
+
+    tok_for_slot = jnp.full((e * cap + 1,), -1, jnp.int32).at[slot].set(
+        jnp.where(keep, st, -1), mode="drop")[: e * cap]
+    w_for_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sw, 0.0), mode="drop")[: e * cap]
+
+    xe = jnp.where(
+        (tok_for_slot >= 0)[:, None],
+        jnp.take(xf, jnp.maximum(tok_for_slot, 0), axis=0),
+        0.0,
+    ).reshape(e, cap, xf.shape[-1])
+    return xe, tok_for_slot, w_for_slot, sel
+
+
+def moe_forward(
+    p: Dict, mo: MoEConfig, x: jax.Array,   # [B, T, d]
+    dropless: bool = False,
+    dispatch_groups: int = 1,
+    group_axes=None,
+    combine_axes=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,T,d], aux load-balancing loss scalar).
+
+    ``dropless=True`` sets capacity to ``n`` (each expert can absorb every
+    token), making the output independent of batch composition — required for
+    the serve path's prefill ≡ decode invariant.  Training keeps the standard
+    ``capacity_factor`` clipping (token drops under router imbalance are the
+    usual training-time trade; serve chunks keep ``n`` bounded instead).
+
+    ``dispatch_groups > 1`` runs a **hierarchical dispatch**: tokens are
+    split into G groups (aligned with the data-parallel sharding of the
+    batch) and the sort/gather/scatter machinery runs *per group*.  Under
+    GSPMD a global dispatch lowers to giant all-gathers/all-reduces of the
+    [e, cap, d] buffers (the sort permutes tokens across devices); per-group
+    dispatch keeps all of it device-local, and only the expert GEMMs touch
+    the EP axis — the §Perf lever for every MoE cell.  With ``dropless=True``
+    the result is exactly equal for any G; in capacity mode each group gets
+    ``cap/G`` slots (per-device capacity — standard at scale).
+
+    ``group_axes``: mesh axis name(s) to pin the G dim to (e.g. ``("data",)``)
+    — without the explicit constraint GSPMD does not reliably infer that the
+    vmapped dispatch is group-local and falls back to all-gathering the
+    dispatch buffers (measured; see EXPERIMENTS.md §Perf).
+    """
+    b, t, d = x.shape
+    n = b * t
+    e, k = mo.num_experts, mo.top_k
+    G = dispatch_groups
+    if n % G or (n // G) < 4:
+        G = 1
+    ng = n // G
+    cap = max(4, -(-ng // 4) * 4) if dropless else _capacity(ng, mo)
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # [n, e]
+
+    def pin(arr):
+        if group_axes is None or G == 1:
+            return arr
+        from jax.sharding import PartitionSpec as P
+        spec = P(tuple(group_axes), *([None] * (arr.ndim - 1)))
+        return jax.lax.with_sharding_constraint(arr, spec)
+
+    xe, tok_for_slot, w_for_slot, sel = jax.vmap(
+        lambda xg, pg: _dispatch_group(xg, pg, k, e, cap)
+    )(pin(xf.reshape(G, ng, d)), pin(probs.reshape(G, ng, e)))
+    # xe: [G, e, cap, d]; tok/w_for_slot: [G, e*cap]; sel: [G, ng, k]
+    xe = pin(xe)
+    tok_for_slot = pin(tok_for_slot)
+    w_for_slot = pin(w_for_slot)
+
+    # ---- batched expert GEMMs (EP-sharded over the E axis) -------------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(xe.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(xe.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(xe.dtype))
+
+    if combine_axes is not None and G > 1:
+        # EP combine: ye leaves the expert GEMM sharded on E (each device
+        # holds its local experts' outputs), but the token scatter below
+        # needs every expert's rows for its group.  Left alone, GSPMD
+        # ALL-GATHERS the full [e, cap, d] buffer per group (measured: the
+        # dominant collective of every EP cell).  Re-constraining ye with the
+        # EP axis moved from E to CAP turns the reshard into an all-to-all
+        # (each device keeps 1/|EP| of every expert's rows) — ~|EP|x less
+        # wire than the gather; the scatter then runs on cap-shards and the
+        # final psum over the EP axis is one [ng, d] reduction.
+        from jax.sharding import PartitionSpec as P
+        spec = P(tuple(group_axes) if group_axes else None, None,
+                 tuple(combine_axes), None)
+        ye = jax.lax.with_sharding_constraint(ye, spec)
+    else:
+        ye = pin(ye)
+
+    # ---- weighted combine (per group) ----------------------------------------
+    # scatter-add with 2-D [e, cap] indices: merging (e, cap) -> e*cap rows
+    # before the scatter would merge a sharded-inner dim, which GSPMD can
+    # only lower by all-gathering the whole buffer — the 2-D scatter keeps
+    # cap-shards local and reduces partials with one [ng, d] psum
+    def _combine(ye_g, tok_g, w_g):
+        tok2 = tok_g.reshape(e, cap)
+        w2 = w_g.reshape(e, cap)
+        src = ye_g * w2[..., None].astype(ye_g.dtype)          # [e, cap, d]
+        return jnp.zeros((ng + 1, d), ye_g.dtype).at[
+            jnp.where(tok2 >= 0, tok2, ng)
+        ].add(src, mode="drop")[:ng]
+
+    y = pin(jax.vmap(_combine)(ye, tok_for_slot, w_for_slot)).reshape(n, d)
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], xf).astype(y.dtype)
+
+    # ---- aux load-balance loss (Switch-style, global statistics) -------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(sel.reshape(n, k)[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * e * mo.aux_loss_weight
+    return y.reshape(b, t, d).astype(x.dtype), aux

@@ -1,0 +1,1 @@
+from . import batcher, engine  # noqa: F401

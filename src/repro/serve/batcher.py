@@ -1,0 +1,116 @@
+"""Continuous batcher: slot-based request scheduling for the serving engine.
+
+The TPU engine wants fixed shapes; requests arrive ragged.  The batcher owns
+``num_slots`` decode lanes: arriving requests claim free slots (prefill),
+finished sequences release them, and every engine call decodes all active
+slots in one fixed-shape step — continuous batching à la vLLM/Orca, reduced
+to its SPMD-friendly core.  This is the Aggregator of the LM-serving SCEP
+operator (DESIGN.md §3): window = one decode step across active slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [T] int32
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Optional[Request] = None
+    pos: int = 0                  # next absolute position
+
+
+class ContinuousBatcher:
+    """Host-side slot manager around jitted (prefill_one, decode_all) fns.
+
+    For simplicity each slot has its own cache pytree entry along dim0 of the
+    batched cache; prefill writes one slot (masked), decode advances all.
+    """
+
+    def __init__(
+        self,
+        num_slots: int,
+        prefill_fn: Callable,        # (params, tokens[1,T], caches, slot) -> (logits, caches)
+        decode_fn: Callable,         # (params, tokens[S,1], caches, pos[S]) -> (logits, caches)
+        eos_id: int = -1,
+    ):
+        self.num_slots = num_slots
+        self.slots = [SlotState() for _ in range(num_slots)]
+        self.queue: Deque[Request] = deque()
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.eos_id = eos_id
+        self.completed: List[Request] = []
+
+    # -- request lifecycle -----------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.request is None:
+                return i
+        return None
+
+    def _admit(self, params, caches):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return caches
+            req = self.queue.popleft()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, caches = self.prefill_fn(params, tokens, caches, slot)
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            self.slots[slot] = SlotState(req, pos=len(req.prompt) + 1)
+        return caches
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    # -- one engine tick ---------------------------------------------------------
+    def step(self, params, caches):
+        caches = self._admit(params, caches)
+        act = self.active()
+        if not act:
+            return caches, False
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        pos = np.zeros((self.num_slots,), np.int32)
+        for i in act:
+            s = self.slots[i]
+            tokens[i, 0] = s.request.generated[-1]
+            pos[i] = s.pos
+        logits, caches = self.decode_fn(
+            params, jnp.asarray(tokens), caches, jnp.asarray(pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in act:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.request.generated.append(tok)
+            s.pos += 1
+            if tok == self.eos_id or len(s.request.generated) >= s.request.max_new:
+                s.request.done = True
+                self.completed.append(s.request)
+                self.slots[i] = SlotState()
+        return caches, True
+
+    def run_until_drained(self, params, caches, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or self.active()) and ticks < max_ticks:
+            caches, _ = self.step(params, caches)
+            ticks += 1
+        return caches, ticks

@@ -1,0 +1,84 @@
+"""Serving engine: prefill / decode steps over the pool architectures.
+
+``serve_prefill`` consumes the whole prompt (filling KV / SSM caches);
+``serve_step`` emits one token per sequence per call.  Both are pure
+functions of (params, caches) so they jit/pjit and dry-run-lower cleanly.
+
+This is also where DSCEP composes with the LM stack: an LM serving pipeline
+is an SCEP operator whose Aggregator is the request batcher, whose engine is
+``serve_step``, and whose Publisher is the detokenizer (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def make_serve_fns(cfg: ModelConfig, max_len: int, impl: str = "xla"):
+    """Returns (prefill, step):
+
+    prefill(params, batch, caches) -> (logits_last, caches)
+    step(params, tokens, caches, pos) -> (logits, caches)
+    """
+
+    def prefill(params, batch: Dict, caches):
+        # fori cache carry: in-place per-period updates keep decode temps at
+        # ~1x cache instead of scan's ~3x (EXPERIMENTS.md §Perf cell 3)
+        logits, caches = lm.decode_step(
+            params, cfg, batch, caches, jnp.zeros((), jnp.int32), impl,
+            loop="fori",
+        )
+        return logits[:, -1], caches
+
+    def step(params, batch: Dict, caches, pos):
+        logits, caches = lm.decode_step(params, cfg, batch, caches, pos, impl,
+                                        loop="fori")
+        return logits[:, -1], caches
+
+    return prefill, step
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0):
+    if temperature == 0.0:
+        return greedy_token(logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params, cfg: ModelConfig, prompt: jax.Array, max_new: int,
+    max_len: Optional[int] = None, temperature: float = 0.0,
+    key: Optional[jax.Array] = None, impl: str = "xla",
+) -> jax.Array:
+    """Simple batched generation (greedy by default) — example/test surface."""
+    b, t = prompt.shape[:2]
+    max_len = max_len or (t + max_new)
+    caches = lm.init_cache(cfg, b, max_len)
+    prefill, step = make_serve_fns(cfg, max_len, impl)
+    logits, caches = prefill(params, {"tokens": prompt}, caches)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    tok = sample_token(logits, key, temperature)
+    toks.append(tok)
+    pos = jnp.asarray(t, jnp.int32)
+    for i in range(max_new - 1):
+        if cfg.num_codebooks:
+            batch = {"tokens": tok[:, None, :]}     # [B, 1, K]
+        else:
+            batch = {"tokens": tok[:, None]}        # [B, 1]
+        logits, caches = step(params, batch, caches, pos)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, sub, temperature)
+        toks.append(tok)
+        pos = pos + 1
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,197 @@
+"""Logical-axis -> mesh-axis partitioning rules.
+
+Model code annotates every parameter with logical axes
+(:mod:`repro.models.common`); this module turns those into
+``PartitionSpec``s for a concrete mesh with **divisibility-aware fallback**:
+a logical axis only claims a mesh axis if the dimension divides evenly and
+the mesh axis is not already used by an earlier dimension of the same tensor.
+That one rule lets the same model code shard
+ * TP (heads / ff / vocab on ``model``),
+ * EP (experts on ``model`` — falls back to ff-sharding when num_experts
+   doesn't divide, e.g. Mixtral's 8 experts on a 16-way axis),
+ * ZeRO-1 (optimizer state over ``data``),
+on any mesh shape, including the multi-pod ``(pod, data, model)`` mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as C
+
+# priority list of mesh axes per logical axis
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    C.VOCAB: ("model",),
+    C.HEADS: ("model",),
+    C.KV_HEADS: ("model",),
+    C.FF: ("model",),
+    C.EXPERT: ("model",),
+    C.SSM_INNER: ("model",),
+    C.LORA: (),
+    C.EMBED: (),           # keep d_model replicated (row dim of col-parallel)
+    C.HEAD_DIM: (),
+    C.SSM_STATE: (),
+    C.LAYERS: (),          # scan axis never sharded
+}
+
+# pure data parallelism: nothing claims `model`; the batch claims it instead
+DP_RULES: Dict[str, Tuple[str, ...]] = {k: () for k in DEFAULT_RULES}
+
+# expert parallelism only: expert (and vocab — the other giant table) state
+# stays partitioned over `model`, dense compute goes data-parallel
+EP_RULES: Dict[str, Tuple[str, ...]] = {
+    **DP_RULES, C.EXPERT: ("model",), C.VOCAB: ("model",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    """A named end-to-end sharding strategy (the §Perf hillclimb lever)."""
+
+    name: str
+    rules: Dict[str, Tuple[str, ...]]
+    batch_axes: Tuple[str, ...]
+    zero1_axes: Tuple[str, ...]
+
+
+PROFILES: Dict[str, ShardingProfile] = {
+    # paper-faithful baseline: Megatron-style TP over `model`, DP over
+    # pod x data (the "divide the state across machines" default)
+    "tp": ShardingProfile("tp", DEFAULT_RULES, ("pod", "data"),
+                          ("pod", "data")),
+    # pure DP: replicate params, shard batch over every axis, ZeRO-1 the
+    # optimizer state over all axes (small models: kills TP collectives)
+    "dp": ShardingProfile("dp", DP_RULES, ("pod", "data", "model"),
+                          ("pod", "data", "model")),
+    # EP + DP: experts/vocab partitioned (the KB-partition analogue), dense
+    # layers data-parallel
+    "ep": ShardingProfile("ep", EP_RULES, ("pod", "data", "model"),
+                          ("pod", "data", "model")),
+}
+
+
+def spec_for(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+) -> P:
+    rules = rules or DEFAULT_RULES
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        pick = None
+        for cand in rules.get(ax or "", ()):
+            if cand in used or cand not in mesh.shape:
+                continue
+            if dim % mesh.shape[cand] == 0:
+                pick = cand
+                used.add(cand)
+                break
+        out.append(pick)
+    return P(*out)
+
+
+def param_shardings(
+    spec_axes: Dict[str, Tuple[Optional[str], ...]],
+    params,
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+):
+    """NamedSharding pytree matching ``params`` via the recorded ParamSpec.
+
+    Paths in ``spec_axes`` are '/'-joined from init; we rebuild them by
+    walking the pytree with jax.tree_util key paths.
+    """
+
+    def path_str(kp) -> str:
+        parts = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            else:
+                parts.append(str(k))
+        # init recorded paths like "blocks/sub0/attn/wq"; pytree paths include
+        # the same keys, so join and match.
+        return "/".join(parts)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    shardings = []
+    for kp, leaf in flat:
+        path = path_str(kp)
+        axes = spec_axes.get(path)
+        if axes is None:
+            # unknown leaf: replicate
+            shardings.append(NamedSharding(mesh, P()))
+            continue
+        if len(axes) != leaf.ndim:
+            # stacked (scan) leaves recorded without/with LAYERS mismatch
+            if len(axes) == leaf.ndim - 1:
+                axes = (C.LAYERS,) + tuple(axes)
+            else:
+                axes = tuple([None] * leaf.ndim)
+        shardings.append(NamedSharding(mesh, spec_for(tuple(axes), leaf.shape, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def dp_axes_for(mesh: Mesh, dim: int,
+                batch_axes: Tuple[str, ...] = ("pod", "data")) -> Tuple[str, ...]:
+    """Longest prefix of data-parallel axes whose product divides ``dim``."""
+    axes = []
+    prod = 1
+    for a in batch_axes:
+        if a in mesh.shape and dim % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)
+
+
+def batch_sharding(mesh: Mesh, shape: Tuple[int, ...], batch_dim: int = 0,
+                   batch_axes: Tuple[str, ...] = ("pod", "data")):
+    """Shard the batch dim over every data-parallel axis that divides it.
+
+    Divisibility-aware: a batch of 1 (``long_500k``) stays replicated — the
+    sequence-sharded cache carries the parallelism instead.  ``batch_dim``
+    handles inputs whose batch is not dim0 (M-RoPE ``positions [3, B, T]``).
+    """
+    axes = dp_axes_for(mesh, shape[batch_dim], batch_axes)
+    spec = [None] * len(shape)
+    if axes:
+        spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cfg, caches, mesh: Mesh, seq_axis: str = "data"):
+    """Decode-cache shardings for the stacked ``[period, B, ...]`` layout.
+
+    * batch (dim 1) over the data axes when divisible — SPMD decode;
+    * else the sequence dim (dim 2 of ``[n, B, S, ...]`` attention caches)
+      over ``data`` — context parallelism for the batch=1 ``long_500k`` cell;
+    * kv-heads of full KV caches ``[n, B, S, Hk, D]`` over ``model`` when
+      divisible (TP'd attention reads its local heads only).
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+
+    def one(leaf):
+        if leaf.ndim <= 1:               # stacked scalar state, e.g. len [n]
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        b = leaf.shape[1]
+        if data_axes and b % data_size == 0 and b >= data_size:
+            spec[1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        elif leaf.ndim >= 4 and seq_axis in mesh.shape:
+            # [n, B, S, ...] with tiny batch: shard the sequence dim
+            if leaf.shape[2] % mesh.shape[seq_axis] == 0:
+                spec[2] = seq_axis
+        if leaf.ndim == 5 and "model" in mesh.shape:
+            # [n, B, S, Hk, D]: kv heads over model if divisible
+            if leaf.shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, caches)

@@ -1,0 +1,1 @@
+from . import checkpoint, elastic, grad_compress, optimizer, train_loop  # noqa: F401

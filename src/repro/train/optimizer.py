@@ -1,0 +1,126 @@
+"""AdamW from scratch (no optax in this environment) with grad clipping,
+warmup+cosine schedule, and ZeRO-1-ready f32 state.
+
+The optimizer state mirrors the parameter pytree (m, v in float32 regardless
+of param dtype — bf16 training with f32 master statistics), so the sharding
+layer can lay m/v out exactly like the weights, or additionally shard them
+over the ``data`` axis (ZeRO-1) via :func:`zero1_shardings`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * (step + 1.0) / max(1, cfg.warmup_steps)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = cfg.peak_lr * (
+        cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads, state: OptState, params,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr,
+    }
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1: shard optimizer moments over the data axis
+# --------------------------------------------------------------------------
+
+def zero1_shardings(param_shardings, params, mesh: Mesh,
+                    data_axes: Tuple[str, ...] = ("pod", "data")):
+    """Moment shardings = param shardings + the data axes on the first
+    unsharded, divisible dimension (classic optimizer-state sharding)."""
+    axes = tuple(a for a in data_axes if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def one(sh: NamedSharding, p):
+        if dp <= 1:
+            return sh
+        spec = list(sh.spec) + [None] * (p.ndim - len(sh.spec))
+        for d in range(p.ndim):
+            if spec[d] is None and p.shape[d] % dp == 0 and p.shape[d] >= dp:
+                spec[d] = axes if len(axes) > 1 else axes[0]
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return jax.tree.map(one, param_shardings, params)
+
+
+def opt_state_shardings(param_shardings, params, mesh: Mesh, zero1: bool = True,
+                        data_axes: Tuple[str, ...] = ("pod", "data")):
+    moment = (
+        zero1_shardings(param_shardings, params, mesh, data_axes)
+        if zero1 else param_shardings
+    )
+    return OptState(
+        step=NamedSharding(mesh, P()),
+        m=moment,
+        v=moment,
+    )

@@ -1,0 +1,82 @@
+"""train_step factory: loss + grad + AdamW, with microbatch accumulation and
+configurable remat — the function the dry-run lowers and the driver jits."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1            # gradient accumulation steps
+    remat: str = "dots"              # none | dots | full
+    impl: str = "xla"                # attention/ssm impl: xla | pallas
+    scan_unroll: int = 1             # period-scan unroll (dry-run accounting)
+    # sequence-parallel residual stream: PartitionSpec entries (as a tuple,
+    # e.g. (("pod","data"), "model", None)) constraining activations after
+    # every sub-layer — turns TP boundary all-reduces into bf16 RS+AG
+    act_shard: Optional[Tuple] = None
+    # hierarchical MoE dispatch groups (1 = global dispatch); align with the
+    # data-parallel shard count so sort/gather/scatter stay device-local
+    moe_groups: int = 1
+    # mesh axes the MoE group dim is pinned to (e.g. ("data",))
+    moe_group_axes: Optional[Tuple[str, ...]] = None
+    # mesh axes of the EP combine all-to-all (e.g. ("model",)) — only when
+    # the expert count divides that axis
+    moe_combine_axes: Optional[Tuple[str, ...]] = None
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    from jax.sharding import PartitionSpec as P
+    act_shard = P(*tcfg.act_shard) if tcfg.act_shard is not None else None
+
+    grad_fn = jax.value_and_grad(
+        functools.partial(lm.loss_fn, impl=tcfg.impl, remat=tcfg.remat,
+                          unroll=tcfg.scan_unroll, act_shard=act_shard,
+                          moe_groups=tcfg.moe_groups,
+                          moe_axes=tcfg.moe_group_axes,
+                          moe_combine=tcfg.moe_combine_axes),
+        has_aux=True,
+    )
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+            return loss, metrics, grads
+
+        # unrolled accumulation (not lax.scan): microbatch counts are small,
+        # XLA schedules the chunks back-to-back, and — decisive for the
+        # dry-run methodology — cost analysis sees every chunk instead of
+        # counting a while-loop body once
+        n = tcfg.microbatches
+        mbs = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+        )
+        grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        loss = jnp.zeros(())
+        metrics = None
+        for i in range(n):
+            mb = jax.tree.map(lambda x: x[i], mbs)
+            (loss, metrics), g = grad_fn(params, cfg, mb)
+            grads = jax.tree.map(jnp.add, grads, g)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        loss, metrics, grads = compute_grads(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.opt, grads, opt_state, params
+        )
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step

@@ -1,0 +1,100 @@
+"""Data layer: deterministic resumable token pipeline, tweet-stream and
+KB-generator structural properties (hypothesis where it matters)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rdf import NUM_BASE, Vocab
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tokens import TokenDatasetConfig, batch_at_step, token_stream
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+
+
+# --------------------------------------------------------------------------
+# token pipeline (training data substrate)
+# --------------------------------------------------------------------------
+
+def test_batches_deterministic_per_step():
+    cfg = TokenDatasetConfig(vocab_size=1000, seq_len=16, global_batch=4)
+    a = batch_at_step(cfg, 7)
+    b = batch_at_step(cfg, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_batches_differ_across_steps_and_hosts():
+    cfg = TokenDatasetConfig(vocab_size=1000, seq_len=16, global_batch=4)
+    a = batch_at_step(cfg, 1)["tokens"]
+    b = batch_at_step(cfg, 2)["tokens"]
+    assert not np.array_equal(a, b)
+    cfg2 = TokenDatasetConfig(vocab_size=1000, seq_len=16, global_batch=4,
+                              num_hosts=2, host_id=1)
+    c = batch_at_step(cfg2, 1)["tokens"]
+    assert not np.array_equal(a[: c.shape[0]], c)
+
+
+def test_stream_resume_no_skip_no_dup():
+    """Restart from step k sees exactly the batches the failed run would."""
+    cfg = TokenDatasetConfig(vocab_size=500, seq_len=8, global_batch=2)
+    full = [b["tokens"] for _, b in zip(range(6), token_stream(cfg))]
+    resumed = [b["tokens"] for _, b in zip(range(3), token_stream(cfg, start_step=3))]
+    for i in range(3):
+        np.testing.assert_array_equal(full[3 + i], resumed[i])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = TokenDatasetConfig(vocab_size=100, seq_len=8, global_batch=2)
+    b = batch_at_step(cfg, 0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# --------------------------------------------------------------------------
+# tweet stream / KB generators (the DSCEP evaluation substrate)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), cap=st.integers(16, 128), seed=st.integers(0, 99))
+def test_stream_chunks_never_split_graph_events(n, cap, seed):
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=8, num_shows=4, seed=seed))
+    ts = TweetSchema.create(vocab)
+    rows = generate_tweets(vocab, ts, kbd.artist_ids,
+                           TweetStreamConfig(num_tweets=n, seed=seed))
+    seen = {}
+    for ci, chunk in enumerate(stream_chunks(rows, cap)):
+        g = np.asarray(chunk.graph)[np.asarray(chunk.valid)]
+        for gid in set(g.tolist()):
+            assert seen.setdefault(gid, ci) == ci, \
+                f"graph {gid} split across chunks"
+
+
+def test_tweet_timestamps_monotone():
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=8, num_shows=4))
+    ts = TweetSchema.create(vocab)
+    rows = generate_tweets(vocab, ts, kbd.artist_ids,
+                           TweetStreamConfig(num_tweets=25))
+    stamps = [r[3] for r in rows]
+    assert stamps == sorted(stamps)   # paper assumption 3
+
+
+def test_kb_filler_is_disjoint_from_used_predicates():
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=8, num_shows=4,
+                                      filler_triples=100))
+    filler_pred = vocab.pred("filler:pred")
+    used_preds = {kbd.schema.rdf_type, kbd.schema.subclass_of,
+                  kbd.schema.birth_place, kbd.schema.country,
+                  kbd.schema.country_code}
+    assert filler_pred not in used_preds
+    rows = np.asarray(kbd.rows, np.uint32)
+    assert (rows[:, 1] == filler_pred).sum() == 100
+
+
+def test_numeric_literals_order_isomorphic():
+    vals = [0.0, 0.5, 1.25, 3.14, 100.0]
+    ids = [Vocab.number(v) for v in vals]
+    assert ids == sorted(ids)
+    assert all(i >= int(NUM_BASE) for i in ids)
+    assert Vocab.decode_number(Vocab.number(2.37)) == pytest.approx(2.37)

@@ -1,0 +1,101 @@
+"""Dry-run machinery unit tests (no 512-device trick needed — these test the
+host-side logic: HLO collective parsing, input specs, skip policy, EP-combine
+axis selection)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# NOTE: importing repro.launch.dryrun would set XLA_FLAGS; import the module
+# WITHOUT triggering re-initialization concerns (jax is already initialized
+# with one device by earlier imports, so the flag is inert here).
+from repro.launch import dryrun
+from repro.configs import get_config, get_shape
+
+
+def test_collective_parser_counts_bytes():
+    hlo = """
+  %ar = f32[16,4096,2048]{2,1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag.1 = bf16[1024]{0} all-gather(%y), dimensions={0}
+  %s = (f32[8]{0}, u32[]) all-to-all-start(%z), channel_id=3
+  %d = f32[8]{0} all-to-all-done(%s)
+  %rs = (f32[64,32]{1,0}, f32[64]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not_a_coll = f32[4]{0} add(%p, %q)
+"""
+    out = dryrun.collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 4096 * 2048 * 4
+    assert out["all-gather"] == 1024 * 2
+    assert out["all-to-all"] == 8 * 4 + 4            # tuple incl. u32[] scalar
+    assert out["reduce-scatter"] == 64 * 32 * 4 + 64 * 4
+    assert out["collective-permute"] == 100
+    assert out["count"] == 5                         # -done not double counted
+
+
+def test_shape_bytes_handles_layouts_and_tuples():
+    assert dryrun._shape_bytes("f32[2,3]{1,0}") == 24
+    assert dryrun._shape_bytes("(bf16[4]{0}, s32[2]{0})") == 8 + 8
+    assert dryrun._shape_bytes("pred[8]") == 8
+
+
+def test_input_specs_shapes():
+    cfg = get_config("qwen2-1.5b")
+    tr = dryrun.input_specs(cfg, get_shape("train_4k"))
+    assert tr["tokens"].shape == (256, 4096)
+    assert tr["labels"].shape == (256, 4096)
+    pf = dryrun.input_specs(cfg, get_shape("prefill_32k"))
+    assert pf["tokens"].shape == (32, 32768)
+    dc = dryrun.input_specs(cfg, get_shape("decode_32k"))
+    assert dc["tokens"].shape == (128, 1)
+
+    vlm = get_config("qwen2-vl-7b")
+    trv = dryrun.input_specs(vlm, get_shape("train_4k"))
+    assert trv["embeds"].shape == (256, 4096, vlm.d_model)
+    assert trv["positions"].shape == (3, 256, 4096)   # M-RoPE 3D positions
+
+    mg = get_config("musicgen-large")
+    trm = dryrun.input_specs(mg, get_shape("train_4k"))
+    assert trm["embeds"].shape == (256, 4096, mg.d_model)
+
+    dcm = dryrun.input_specs(mg, get_shape("decode_32k"))
+    assert dcm["tokens"].shape == (128, 1, mg.num_codebooks)
+
+
+def test_skip_policy_matches_design():
+    long = get_shape("long_500k")
+    expect_skip = {"qwen2-vl-7b", "deepseek-v2-236b", "minicpm3-4b",
+                   "qwen2-1.5b", "olmo-1b", "musicgen-large"}
+    expect_run = {"mixtral-8x22b", "h2o-danube-1.8b", "mamba2-130m",
+                  "jamba-v0.1-52b"}
+    for arch in expect_skip:
+        assert dryrun.should_skip(get_config(arch), long), arch
+    for arch in expect_run:
+        assert dryrun.should_skip(get_config(arch), long) is None, arch
+    # every other shape always runs
+    for arch in expect_skip | expect_run:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert dryrun.should_skip(get_config(arch), get_shape(s)) is None
+
+
+def test_ep_combine_axes_divisibility():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    ds = get_config("deepseek-v2-236b")      # 160 experts % 16 == 0
+    assert dryrun._ep_combine_axes(ds, FakeMesh(), 16) == ("model",)
+    mx = get_config("mixtral-8x22b")          # 8 experts % 16 != 0
+    assert dryrun._ep_combine_axes(mx, FakeMesh(), 16) is None
+    dense = get_config("olmo-1b")
+    assert dryrun._ep_combine_axes(dense, FakeMesh(), 16) is None
+    # no grouping -> no combine constraint
+    assert dryrun._ep_combine_axes(ds, FakeMesh(), 1) is None
+
+
+def test_two_point_extrapolation_math():
+    """corrected = u1 + (n-1)*(u2-u1): exact for linear-in-periods costs."""
+    n = 24
+    outside, per_period = 7.0, 3.0
+    u1 = outside + 1 * per_period
+    u2 = outside + 2 * per_period
+    corrected = u1 + (n - 1) * max(0.0, u2 - u1)
+    assert corrected == outside + n * per_period

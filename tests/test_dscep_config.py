@@ -1,0 +1,43 @@
+"""DSCEP deployment presets: registry sanity + end-to-end via build_runtime."""
+import numpy as np
+import pytest
+
+from repro.configs import dscep
+from repro.core import paper_queries as PQ
+from repro.core.rdf import Vocab, to_host_rows
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+
+
+def test_presets_registered():
+    names = set(dscep.deployments())
+    assert {"paper-eval", "paper-eval-subquery", "smoke", "monolithic"} <= names
+    assert dscep.get_deployment("paper-eval").runtime.window_capacity == 1000
+    assert dscep.get_deployment("paper-eval-subquery").runtime.kb_method == "probe"
+    assert not dscep.get_deployment("monolithic").decomposed
+
+
+def test_build_runtime_smoke_end_to_end():
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=16, num_shows=8,
+                                      filler_triples=50))
+    ts = TweetSchema.create(vocab)
+    rows = generate_tweets(vocab, ts, kbd.artist_ids,
+                           TweetStreamConfig(num_tweets=16))
+    chunks = list(stream_chunks(rows, 256))
+    q = PQ.q15(vocab, ts, kbd.schema)
+
+    split = dscep.build_runtime("smoke", q, kbd.kb, vocab)
+    mono = dscep.build_runtime("monolithic", q, kbd.kb, vocab)
+
+    def results(rt):
+        out = []
+        for c in chunks:
+            out += [(r[0], r[1], r[2]) for r in to_host_rows(rt.process_chunk(c)[0])]
+        return sorted(set(out))
+
+    rs, rm = results(split), results(mono)
+    assert len(rs) > 0
+    assert rs == rm

@@ -1,0 +1,132 @@
+"""The paper's correctness claim: decomposed execution == monolithic execution
+("All results are the same when executing CQuery1 with only one C-SPARQL and
+when dividing it"), plus KB-pruning soundness and method equivalence.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import query as Q
+from repro.core.planner import decompose, prune_kb_for
+from repro.core.rdf import Vocab, to_host_rows
+from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks
+
+CFG = RuntimeConfig(window_capacity=128, max_windows=4, bind_cap=512, scan_cap=128,
+                    out_cap=512)
+
+
+def q15_query(world):
+    ts, kbd, vocab = world.tweets, world.kbd, world.vocab
+    return Q.Query(
+        name="q15",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
+            Q.FilterSubclass("ent", kbd.schema.rdf_type, kbd.schema.subclass_of,
+                             kbd.schema.musical_artist),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"), Q.Const(vocab.pred("out:artistTweet")),
+                                Q.Var("ent")),
+        ),
+    )
+
+
+def q16_query(world):
+    """Property-path query: tweet -> entity -> birthPlace -> country -> code."""
+    ts, kbd, vocab = world.tweets, world.kbd, world.vocab
+    s = kbd.schema
+    return Q.Query(
+        name="q16",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
+            Q.PathKB(Q.Var("ent"), (s.birth_place, s.country, s.country_code),
+                     Q.Var("cc")),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"), Q.Const(vocab.pred("out:code")),
+                                Q.Var("cc")),
+        ),
+    )
+
+
+def results(out):
+    return sorted(set((r[0], r[1], r[2]) for r in to_host_rows(out)))
+
+
+def run_both(world, q, cfg=CFG):
+    mono = MonolithicRuntime(q, world.kbd.kb, cfg)
+    dag = decompose(q, world.vocab)
+    split = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
+    res_m, res_s = [], []
+    for chunk in world.chunks:
+        res_m += results(mono.process_chunk(chunk)[0])
+        res_s += results(split.process_chunk(chunk)[0])
+    return sorted(res_m), sorted(res_s), split
+
+
+def test_q15_mono_equals_split(world):
+    m, s, rt = run_both(world, q15_query(world))
+    assert len(m) > 0
+    assert m == s
+
+
+def test_q16_path_mono_equals_split(world):
+    m, s, rt = run_both(world, q16_query(world))
+    assert len(m) > 0
+    assert m == s
+
+
+def test_used_kb_strictly_smaller(world):
+    q = q15_query(world)
+    dag = decompose(q, world.vocab)
+    rt = DSCEPRuntime(dag, world.kbd.kb, world.vocab, CFG)
+    full = int(np.asarray(world.kbd.kb.count()))
+    for name, op in rt.operators.items():
+        if op.kb is not None:
+            used = int(np.asarray(op.kb.count()))
+            assert 0 < used < full
+
+
+def test_kb_pruning_sound(world):
+    """Running the monolithic query against its own pruned KB changes nothing."""
+    q = q15_query(world)
+    pruned = prune_kb_for(q, world.kbd.kb)
+    full_rt = MonolithicRuntime(q, world.kbd.kb, CFG)
+    pruned_rt = MonolithicRuntime(q, pruned, CFG)
+    for chunk in world.chunks:
+        assert results(full_rt.process_chunk(chunk)[0]) == \
+            results(pruned_rt.process_chunk(chunk)[0])
+
+
+def test_scan_and_probe_methods_equivalent(world):
+    q = q16_query(world)
+    cfg_scan = CFG
+    cfg_probe = RuntimeConfig(**{**CFG.__dict__, "kb_method": "probe"})
+    rt_scan = MonolithicRuntime(q, world.kbd.kb, cfg_scan)
+    rt_probe = MonolithicRuntime(q, world.kbd.kb, cfg_probe)
+    for chunk in world.chunks:
+        assert results(rt_scan.process_chunk(chunk)[0]) == \
+            results(rt_probe.process_chunk(chunk)[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n_tweets=st.integers(5, 30))
+def test_equivalence_property_random_worlds(seed, n_tweets):
+    """Property: mono == split across random streams and KBs (both methods)."""
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=16, num_shows=8,
+                                      filler_triples=50, seed=seed))
+    tws = TweetSchema.create(vocab)
+    rows = generate_tweets(vocab, tws, kbd.artist_ids,
+                           TweetStreamConfig(num_tweets=n_tweets, seed=seed))
+    chunks = list(stream_chunks(rows, 256))
+
+    class W:
+        pass
+
+    w = W()
+    w.vocab, w.kbd, w.tweets, w.chunks = vocab, kbd, tws, chunks
+    m, s, _ = run_both(w, q15_query(w))
+    assert m == s

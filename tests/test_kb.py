@@ -1,0 +1,70 @@
+import numpy as np
+import pytest
+
+from repro.core.kb import (
+    build_kb, gather_matches, host_rows, kb_from_triples, pad_to, probe_range,
+    prune, shard_rows,
+)
+from repro.core.rdf import Vocab, composite_key
+
+
+@pytest.fixture
+def small_kb():
+    v = Vocab()
+    p_type = v.pred("rdf:type")
+    p_bp = v.pred("dbo:birthPlace")
+    a, b, c = v.term("a"), v.term("b"), v.term("c")
+    x, y = v.term("x"), v.term("y")
+    rows = [(a, p_type, x), (b, p_type, x), (b, p_type, y), (c, p_bp, y)]
+    return v, p_type, p_bp, (a, b, c, x, y), kb_from_triples(rows, capacity=8)
+
+
+def test_build_and_count(small_kb):
+    *_, kb = small_kb
+    assert int(kb.count()) == 4
+    assert kb.capacity == 8
+
+
+def test_probe_finds_exact_rows(small_kb):
+    v, p_type, p_bp, (a, b, c, x, y), kb = small_kb
+    key = composite_key(p_type, b)
+    lo, hi = probe_range(kb.key_ps, key)
+    assert int(hi - lo) == 2                     # b has two type rows
+    (ms, mp, mo), ok, ovf = gather_matches((kb.s_ps, kb.p_ps, kb.o_ps), lo, hi, 4)
+    got = sorted(int(o) for o, k in zip(np.asarray(mo), np.asarray(ok)) if k)
+    assert got == sorted([x, y])
+    assert not bool(ovf)
+
+
+def test_probe_po_view(small_kb):
+    v, p_type, p_bp, (a, b, c, x, y), kb = small_kb
+    key = composite_key(p_type, x)
+    lo, hi = probe_range(kb.key_po, key)
+    (ms, mp, mo), ok, _ = gather_matches((kb.s_po, kb.p_po, kb.o_po), lo, hi, 4)
+    got = sorted(int(s) for s, k in zip(np.asarray(ms), np.asarray(ok)) if k)
+    assert got == sorted([a, b])
+
+
+def test_prune_by_predicate_and_object(small_kb):
+    v, p_type, p_bp, (a, b, c, x, y), kb = small_kb
+    used = prune(kb, predicates=[p_type])
+    assert int(used.count()) == 3
+    narrowed = prune(kb, predicates=[p_type], objects_by_pred={p_type: {x}})
+    assert int(narrowed.count()) == 2            # only type->x rows
+
+
+def test_pad_and_shard(small_kb):
+    *_, kb = small_kb
+    padded = pad_to(kb, 16)
+    assert padded.capacity == 16 and int(padded.count()) == 4
+    sharded = shard_rows(padded, 4)
+    assert sharded.key_ps.shape == (4, 4)
+    # shards partition the sorted key space: concatenation reproduces the sort
+    keys = np.asarray(sharded.key_ps).reshape(-1)
+    assert (np.diff(keys.astype(np.int64)) >= 0).all()
+
+
+def test_host_rows_roundtrip(small_kb):
+    *_, kb = small_kb
+    rows = host_rows(kb)
+    assert rows.shape == (4, 3)

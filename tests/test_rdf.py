@@ -1,0 +1,62 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rdf import (
+    NUM_BASE, PAD_ID, PRED_SPACE, TERM_BITS, TripleBatch, Vocab,
+    composite_key, concat_triples, make_triples, sort_by_timestamp,
+    take_rows, to_host_rows,
+)
+
+
+def test_vocab_spaces():
+    v = Vocab()
+    p = v.pred("rdf:type")
+    t = v.term("dbo:Artist")
+    assert 1 <= p < PRED_SPACE
+    assert t >= PRED_SPACE
+    assert v.pred("rdf:type") == p            # interning is stable
+    assert v.term("dbo:Artist") == t
+    assert v.to_str(p) == "rdf:type"
+    assert v.to_str(t) == "dbo:Artist"
+
+
+def test_numeric_literals_roundtrip_and_order():
+    a = Vocab.number(1.25)
+    b = Vocab.number(4.75)
+    assert a >= int(NUM_BASE) and b >= int(NUM_BASE)
+    assert a < b                                # order-isomorphic encoding
+    assert Vocab.decode_number(a) == pytest.approx(1.25)
+    assert Vocab.decode_number(b) == pytest.approx(4.75)
+
+
+def test_composite_key_disjoint():
+    v = Vocab()
+    p1, p2 = v.pred("p1"), v.pred("p2")
+    t1, t2 = v.term("t1"), v.term("t2")
+    keys = {
+        int(composite_key(p, t)) for p in (p1, p2) for t in (t1, t2)
+    }
+    assert len(keys) == 4                       # no collisions across (p, t)
+
+
+def test_make_sort_take():
+    rows = [(5, 1, 6, 30, 3), (7, 1, 8, 10, 1), (9, 2, 10, 20, 2)]
+    tb = make_triples(rows, capacity=6)
+    assert int(tb.count()) == 3
+    s = sort_by_timestamp(tb)
+    ts_valid = np.asarray(s.ts)[np.asarray(s.valid)]
+    assert list(ts_valid) == [10, 20, 30]
+    # invalid rows at the tail
+    assert not np.asarray(s.valid)[3:].any()
+    taken = take_rows(tb, jnp.asarray([1, -1, 0]))
+    assert list(np.asarray(taken.valid)) == [True, False, True]
+    assert int(taken.s[0]) == 7 and int(taken.s[2]) == 5
+
+
+def test_concat_and_host_rows():
+    a = make_triples([(1, 1, 2, 0, 1)], capacity=2)
+    b = make_triples([(3, 1, 4, 1, 2)], capacity=2)
+    c = concat_triples([a, b])
+    assert c.capacity == 4
+    assert len(to_host_rows(c)) == 2

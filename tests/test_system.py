@@ -1,0 +1,181 @@
+"""End-to-end system tests: the paper's CQuery1 pipeline (§4.3-4.4).
+
+Covers the full DSCEP path — query decomposition into the Fig. 4 operator
+DAG, used-KB pruning per operator, monolithic == decomposed result
+equivalence under both KB-access methods, SPMD window sharding on a mesh,
+and the straggler-balancing window packer.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import paper_queries as PQ
+from repro.core.planner import decompose
+from repro.core.rdf import Vocab, to_host_rows
+from repro.core.runtime import (
+    DSCEPRuntime, MonolithicRuntime, RuntimeConfig, balance_windows,
+)
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+
+CFG = RuntimeConfig(window_capacity=128, max_windows=4, bind_cap=1024,
+                    scan_cap=128, out_cap=1024)
+
+
+class CoWorld:
+    """Stream whose tweets co-mention artists *and* shows (CQuery1's shape)."""
+
+    def __init__(self, num_tweets=40, seed=0, filler=100):
+        self.vocab = Vocab()
+        self.kbd = generate_kb(
+            self.vocab,
+            KBConfig(num_artists=32, num_shows=16, filler_triples=filler,
+                     seed=seed),
+        )
+        self.tweets = TweetSchema.create(self.vocab)
+        pool = np.concatenate([self.kbd.artist_ids, self.kbd.show_ids])
+        self.rows = generate_tweets(
+            self.vocab, self.tweets, pool,
+            TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                              mentions_max=4, seed=seed),
+        )
+        self.chunks = list(stream_chunks(self.rows, 256))
+
+
+@pytest.fixture(scope="module")
+def co_world():
+    return CoWorld()
+
+
+def _results(out):
+    return sorted(set((r[0], r[1], r[2]) for r in to_host_rows(out)))
+
+
+def _run(rt, chunks):
+    res = []
+    for c in chunks:
+        res += _results(rt.process_chunk(c)[0])
+    return sorted(res)
+
+
+# --------------------------------------------------------------------------
+# CQuery1: the paper's central experiment
+# --------------------------------------------------------------------------
+
+def test_cquery1_dag_shape_matches_fig4(co_world):
+    """Decomposition produces the Fig. 4 topology: artist-KB operator
+    (QueryA), show-KB operator (QueryB), final aggregator (QueryG)."""
+    q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    dag = decompose(q, co_world.vocab)
+    kb_ops = [n for n, s in dag.subqueries.items() if s.touches_kb]
+    assert len(kb_ops) == 2
+    final = dag.subqueries[dag.final]
+    assert not final.touches_kb
+    assert set(kb_ops) <= set(final.inputs)
+
+
+def test_cquery1_mono_equals_split_scan(co_world):
+    q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+    split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                         co_world.vocab, CFG)
+    rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
+    assert len(rm) > 0
+    assert rm == rs
+
+
+def test_cquery1_mono_equals_split_probe(co_world):
+    cfg = RuntimeConfig(**{**CFG.__dict__, "kb_method": "probe"})
+    q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    mono = MonolithicRuntime(q, co_world.kbd.kb, cfg)
+    split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                         co_world.vocab, cfg)
+    rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
+    assert len(rm) > 0
+    assert rm == rs
+
+
+def test_cquery1_used_kb_partition(co_world):
+    """Every KB operator's slice is strictly smaller than the full KB; the
+    artist slice (subclass closure + 3-step path) dominates the show slice
+    (closure only) — the paper's QueryA-vs-QueryB asymmetry."""
+    q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    rt = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                      co_world.vocab, CFG)
+    total = int(np.asarray(co_world.kbd.kb.count()))
+    used = {
+        n: int(np.asarray(op.kb.count()))
+        for n, op in rt.operators.items() if op.kb is not None
+    }
+    assert len(used) == 2
+    assert all(0 < u < total for u in used.values())
+    artist = next(v for k, v in used.items() if "artist" in k)
+    show = next(v for k, v in used.items() if "show" in k)
+    assert artist > show
+
+
+def test_cquery1_output_schema(co_world):
+    """Constructed triples use exactly the declared output predicates."""
+    v = co_world.vocab
+    expect = {
+        v.pred("out:coMentionedWith"), v.pred("out:posSentiment"),
+        v.pred("out:negSentiment"), v.pred("out:countryCode"),
+    }
+    q = PQ.cquery1(v, co_world.tweets, co_world.kbd.schema)
+    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+    preds = {r[1] for r in _run(mono, co_world.chunks)}
+    assert preds <= expect
+    assert v.pred("out:coMentionedWith") in preds
+
+
+def test_q15_q16_on_shared_world(co_world):
+    """First-step queries run on the same world (Table 1 setup)."""
+    for builder in (PQ.q15, PQ.q16):
+        q = builder(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+        mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+        split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                             co_world.vocab, CFG)
+        rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
+        assert len(rm) > 0 and rm == rs
+
+
+# --------------------------------------------------------------------------
+# distribution machinery
+# --------------------------------------------------------------------------
+
+def test_runtime_on_mesh_matches_unsharded(co_world):
+    """Intra-operator SPMD (windows sharded over `data`) must not change
+    results — sharding neutrality on whatever devices exist."""
+    q = PQ.q15(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    plain = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                         co_world.vocab, CFG)
+    meshed = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
+                          co_world.vocab, CFG, mesh=mesh)
+    assert _run(plain, co_world.chunks) == _run(meshed, co_world.chunks)
+
+
+def test_balance_windows_rounds_and_preserves(co_world):
+    merged = co_world.chunks[0]
+    for engines in (3, 4, 5):
+        w = balance_windows(merged, engines, window_capacity=64, max_windows=6)
+        assert w.window_valid.shape[0] % engines == 0
+        # padding windows are invalid; no real window lost
+        assert int(np.asarray(w.window_valid.sum())) > 0
+        # every valid input triple still present across windows
+        total_in = int(np.asarray(merged.valid.sum()))
+        total_w = int(np.asarray(w.triples.valid.sum()))
+        assert total_w == total_in
+
+
+def test_monotone_timestamps_across_published_stream(co_world):
+    """Publisher output is ordered (paper assumption 3 holds downstream)."""
+    q = PQ.q15(co_world.vocab, co_world.tweets, co_world.kbd.schema)
+    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+    for c in co_world.chunks:
+        out, _ = mono.process_chunk(c)
+        rows = to_host_rows(out)
+        ts = [r[3] for r in rows]
+        assert ts == sorted(ts)

@@ -1,0 +1,75 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rdf import make_triples, sort_by_timestamp
+from repro.core.window import count_windows, time_windows
+
+
+def _mk_stream(graph_sizes, ts_start=100):
+    rows = []
+    for gi, size in enumerate(graph_sizes):
+        for k in range(size):
+            rows.append((10 + gi, 1, 20 + k, ts_start + gi, gi + 1))
+    return sort_by_timestamp(make_triples(rows, capacity=max(1, sum(graph_sizes))))
+
+
+def test_count_windows_paper_semantics():
+    # capacity 5: graphs of sizes 3,2 fill window 0; 4 goes to window 1
+    stream = _mk_stream([3, 2, 4])
+    w = count_windows(stream, window_capacity=5, max_windows=4)
+    counts = np.asarray(w.triples.valid).sum(axis=1)
+    assert list(counts) == [5, 4, 0, 0]
+    assert list(np.asarray(w.window_valid)) == [True, True, False, False]
+
+
+def test_count_windows_graph_never_split():
+    stream = _mk_stream([2, 2, 2, 2])
+    w = count_windows(stream, window_capacity=3, max_windows=4)
+    g = np.asarray(w.triples.graph)
+    v = np.asarray(w.triples.valid)
+    # each graph's rows live in exactly one window
+    for graph_id in (1, 2, 3, 4):
+        in_window = [(g[i] == graph_id)[v[i]].any() for i in range(4)]
+        assert sum(in_window) == 1
+
+
+def test_count_windows_oversized_graph_truncated():
+    stream = _mk_stream([7])
+    w = count_windows(stream, window_capacity=4, max_windows=2)
+    counts = np.asarray(w.triples.valid).sum(axis=1)
+    assert counts[0] == 4 and counts[1] == 0   # bounded buffer, own window
+
+
+def test_time_windows_tumbling_and_sliding():
+    stream = _mk_stream([1, 1, 1, 1])          # ts = 100,101,102,103
+    w = time_windows(stream, t0=100, width=2, slide=2, window_capacity=4, max_windows=2)
+    counts = np.asarray(w.triples.valid).sum(axis=1)
+    assert list(counts) == [2, 2]
+    ws = time_windows(stream, t0=100, width=2, slide=1, window_capacity=4, max_windows=3)
+    counts = np.asarray(ws.triples.valid).sum(axis=1)
+    assert list(counts) == [2, 2, 2]           # overlap duplicates rows
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=6), min_size=1, max_size=12),
+    cap=st.integers(min_value=6, max_value=12),
+)
+def test_count_windows_properties(sizes, cap):
+    """Property: every valid row appears exactly once; no window exceeds cap;
+    graphs with size <= cap are never split."""
+    stream = _mk_stream(sizes)
+    w = count_windows(stream, window_capacity=cap, max_windows=len(sizes) + 1)
+    v = np.asarray(w.triples.valid)
+    g = np.asarray(w.triples.graph)
+    assert v.sum(axis=1).max() <= cap
+    placed = {}
+    for wi in range(v.shape[0]):
+        for graph_id in np.unique(g[wi][v[wi]]):
+            placed.setdefault(int(graph_id), set()).add(wi)
+    for graph_id, windows_used in placed.items():
+        assert len(windows_used) == 1
+    total_placed = int(v.sum())
+    expected = sum(min(s, cap) for s in sizes)
+    assert total_placed == expected
