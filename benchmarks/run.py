@@ -6,6 +6,8 @@ One benchmark per paper artifact (DESIGN.md §5):
 * step2    — Tables 2-3 (CQuery1 monolithic vs decomposed, both methods)
 * step3    — Figs. 5-7 (used-KB and total-KB scaling)
 * kernels  — Pallas kernel fidelity + shape sweeps
+* join     — fused join->compaction before/after microbenchmark (also part
+             of ``kernels``); records speedups to BENCH_join.json
 * roofline — per-(arch x shape x mesh) roofline terms from the dry-run
              artifacts (run ``python -m repro.launch.dryrun`` first)
 
@@ -44,6 +46,9 @@ def main(argv=None) -> int:
             elif name == "kernels":
                 from . import kernels
                 kernels.run()
+            elif name == "join":
+                from . import kernels
+                kernels.bench_join_fused()
             elif name == "roofline":
                 from . import roofline
                 roofline.run()

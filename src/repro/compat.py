@@ -1,0 +1,43 @@
+"""Version-tolerant jax shims.
+
+The repo targets current jax but must run on the 0.4.x line this image
+ships.  Three surfaces moved between 0.4 and 0.5+:
+
+* ``shard_map``: ``jax.experimental.shard_map.shard_map`` -> ``jax.shard_map``,
+  and the replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+* ``jax.sharding.AxisType``: new in 0.5+ (explicit-sharding meshes); 0.4.x
+  meshes take no ``axis_types``.
+
+Import from here instead of special-casing at every call site.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+try:                                        # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                         # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg spelled per version."""
+    kw = ({"check_vma": check_vma} if _HAS_CHECK_VMA
+          else {"check_rep": check_vma})
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def make_mesh(shape, axis_names) -> Any:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(
+        shape, axis_names, axis_types=(axis_type.Auto,) * len(axis_names)
+    )

@@ -20,7 +20,9 @@ results are the same" — property-tested in tests/test_equivalence.py).
 
 The O(|bind| x |KB|) candidate matrix of the scan method is the compute
 hotspot; :mod:`repro.kernels.hash_join` provides the Pallas TPU kernel with
-identical semantics (``use_pallas=True`` switches the engine over).
+identical semantics (``use_pallas=True`` switches the engine over), and
+``fuse_compaction=True`` additionally fuses match + compaction so the
+candidate matrix never round-trips through HBM (see kb_join_scan).
 """
 from __future__ import annotations
 
@@ -155,17 +157,30 @@ def _extend_rows(bind_cols, kb_row_cols, pat: CompiledPattern):
 
 def kb_join_scan(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
-    use_pallas: bool = False,
+    use_pallas: bool = False, fuse_compaction: bool = False,
+    bm: Optional[int] = None, bn: Optional[int] = None,
 ) -> Bindings:
     """Join bindings against a KB partition by full scan.
 
     Cost is linear in the *total* partition size — this is precisely the
     behaviour of paper Figs. 6/7 (unused triples still cost time), and the
     reason KB pruning/partitioning wins.
+
+    ``fuse_compaction=True`` selects the fused join->compaction pipeline
+    (:mod:`repro.kernels.hash_join.ops`): with ``use_pallas`` the Pallas
+    kernel compacts matches tile-by-tile so the ``[cap, N]`` candidate
+    matrix never reaches HBM; without it, a gather-based jnp formulation
+    skips the ``[cap, N, nv]`` row-extension materialization.  All four
+    paths are bit-identical.
     """
+    if fuse_compaction:
+        from repro.kernels.hash_join import ops as hj_ops
+        if use_pallas:
+            return hj_ops.join_compact(bind, kb, pat, out_cap, bm=bm, bn=bn)
+        return hj_ops.join_compact_jnp(bind, kb, pat, out_cap)
     if use_pallas:
         from repro.kernels.hash_join import ops as hj_ops
-        m = hj_ops.match_matrix(bind, kb, pat)
+        m = hj_ops.match_matrix(bind, kb, pat, bm=bm, bn=bn)
     else:
         m = _kb_scan_match(bind, kb, pat)
     ca, n = m.shape
@@ -233,12 +248,15 @@ def kb_join_probe(
 def kb_join(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
     method: str = "scan", k_max: int = 8, use_pallas: bool = False,
+    fuse_compaction: bool = False, bm: Optional[int] = None,
+    bn: Optional[int] = None,
 ) -> Bindings:
     if method == "probe" and pat.p.mode == SlotMode.CONST and not (
         pat.s.mode == SlotMode.FREE and pat.o.mode == SlotMode.FREE
     ):
         return kb_join_probe(bind, kb, pat, out_cap, k_max)
-    return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas)
+    return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas,
+                        fuse_compaction=fuse_compaction, bm=bm, bn=bn)
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,9 @@ class KBJoin:
     method: str = "scan"          # "scan" | "probe"  (paper's two methods)
     k_max: int = 8
     use_pallas: bool = False
+    fuse_compaction: bool = False  # fused join->compaction (no [M, N] in HBM)
+    bm: Optional[int] = None       # fused-kernel block shapes (None = autotune)
+    bn: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +120,7 @@ def _apply(
         return algebra.kb_join(
             cur, kb, step.pat, plan.bind_cap, method=step.method,
             k_max=step.k_max, use_pallas=step.use_pallas,
+            fuse_compaction=step.fuse_compaction, bm=step.bm, bn=step.bn,
         )
     if isinstance(step, FilterNumStep):
         return algebra.filter_num(cur, step.var, step.op, step.value_id)

@@ -22,8 +22,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from . import algebra
 from .kb import KnowledgeBase
@@ -39,8 +40,18 @@ def kb_join_sharded(
     axis: str = "model",
     method: str = "scan",
     k_max: int = 8,
+    use_pallas: bool = False,
+    fuse_compaction: bool = False,
+    bm: int | None = None,
+    bn: int | None = None,
 ) -> Bindings:
-    """Join replicated bindings against a row-sharded KB partition."""
+    """Join replicated bindings against a row-sharded KB partition.
+
+    ``fuse_compaction`` runs the fused join->compaction pipeline *inside*
+    each shard's local join: every device compacts its own matches into its
+    ``out_cap // n_shards`` slice, so the no-collective union (a reshape
+    along the sharded row axis) is unchanged — fusion is purely shard-local.
+    """
     n = mesh.shape[axis]
     assert out_cap % n == 0, (out_cap, n)
     per_cap = out_cap // n
@@ -49,7 +60,8 @@ def kb_join_sharded(
         kb_local = jax.tree.map(lambda a: a[0], kb_block)
         b = Bindings(cols, valid, overflow)
         out = algebra.kb_join(b, kb_local, pat, per_cap, method=method,
-                              k_max=k_max)
+                              k_max=k_max, use_pallas=use_pallas,
+                              fuse_compaction=fuse_compaction, bm=bm, bn=bn)
         # overflow is global info: reduce the one bool over the KB axis
         ovf = jax.lax.psum(out.overflow.astype(jnp.int32), axis) > 0
         return out.cols[None], out.valid[None], ovf
@@ -69,6 +81,7 @@ def kb_join_sharded(
 def kb_join_blocks_reference(
     bind: Bindings, kb_blocks: KnowledgeBase, pat: CompiledPattern,
     out_cap: int, n: int, method: str = "scan", k_max: int = 8,
+    use_pallas: bool = False, fuse_compaction: bool = False,
 ) -> Bindings:
     """Oracle: the same per-block join/union evaluated sequentially."""
     per_cap = out_cap // n
@@ -76,7 +89,8 @@ def kb_join_blocks_reference(
     for i in range(n):
         kb_local = jax.tree.map(lambda a: a[i], kb_blocks)
         out = algebra.kb_join(bind, kb_local, pat, per_cap, method=method,
-                              k_max=k_max)
+                              k_max=k_max, use_pallas=use_pallas,
+                              fuse_compaction=fuse_compaction)
         cols.append(out.cols)
         valids.append(out.valid)
         ovf = ovf | out.overflow

@@ -88,6 +88,9 @@ def compile_query(
     out_cap: int = 512,
     k_max: int = 8,
     use_pallas: bool = False,
+    fuse_compaction: bool = False,
+    join_bm: int | None = None,
+    join_bn: int | None = None,
 ) -> Plan:
     """Compile the AST into a Plan.
 
@@ -102,6 +105,10 @@ def compile_query(
     steps: List[Step] = []
     pending_filters: List[Q.WhereItem] = []
     aux = [0]
+
+    def _kb_step(cp: CompiledPattern) -> KBJoin:
+        return KBJoin(cp, kb_method, k_max, use_pallas, fuse_compaction,
+                      join_bm, join_bn)
 
     def fresh_aux() -> str:
         aux[0] += 1
@@ -145,7 +152,7 @@ def compile_query(
     for item in q.where:
         if isinstance(item, Q.Pattern) and item.src == Q.KB:
             cp = _compile_pattern(item, vt, bound)
-            steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+            steps.append(_kb_step(cp))
         elif isinstance(item, Q.PathKB):
             cur: Q.Term = item.start
             for i, pid in enumerate(item.preds):
@@ -153,7 +160,7 @@ def compile_query(
                 cp = _compile_pattern(
                     Q.Pattern(cur, Q.Const(pid), nxt, Q.KB), vt, bound
                 )
-                steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                steps.append(_kb_step(cp))
                 cur = nxt
         elif isinstance(item, Q.FilterSubclass):
             cls_var = Q.Var(fresh_aux())
@@ -161,7 +168,7 @@ def compile_query(
                 Q.Pattern(Q.Var(item.var), Q.Const(item.type_pred), cls_var, Q.KB),
                 vt, bound,
             )
-            steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+            steps.append(_kb_step(cp))
             steps.append(
                 FilterInStep(vt.col(cls_var.name), "closure:%d" % item.super_class)
             )
@@ -176,7 +183,7 @@ def compile_query(
             for p in item.patterns:
                 if p.src == Q.KB:
                     cp = _compile_pattern(p, vt, sub_bound)
-                    sub_steps.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                    sub_steps.append(_kb_step(cp))
                 else:
                     before = set(sub_bound)
                     cp = _compile_pattern(p, vt, sub_bound, scan=True)
@@ -204,7 +211,7 @@ def compile_query(
                 for p in pats:
                     if p.src == Q.KB:
                         cp = _compile_pattern(p, vt, br_bound)
-                        bs.append(KBJoin(cp, kb_method, k_max, use_pallas))
+                        bs.append(_kb_step(cp))
                     else:
                         before = set(br_bound)
                         cp = _compile_pattern(p, vt, br_bound, scan=True)

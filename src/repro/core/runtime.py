@@ -50,6 +50,14 @@ class RuntimeConfig:
     # kept tighter than the final output (overflow is flagged per operator)
     intermediate_cap: int = 512
     use_pallas: bool = False
+    # fused join->compaction for scan-method KB joins: the candidate matrix
+    # never round-trips through HBM (kernels/hash_join).  Orthogonal to
+    # ``use_pallas`` (fused jnp path when False, fused Pallas when True).
+    fuse_compaction: bool = False
+    # explicit (bm, bn) block shapes for the fused kernel; None autotunes
+    # per join from the actual (bind_cap, used-KB capacity, num_vars) via
+    # kernels.hash_join.ops.autotune_block_shapes at trace time.
+    join_block_shapes: Optional[Tuple[int, int]] = None
 
 
 class DSCEPRuntime:
@@ -84,6 +92,7 @@ class DSCEPRuntime:
             max_windows=config.max_windows,
             out_stream_cap=config.out_stream_cap,
         )
+        join_bm, join_bn = config.join_block_shapes or (None, None)
         for name, sub in dag.subqueries.items():
             plan = compile_query(
                 sub.query,
@@ -93,6 +102,8 @@ class DSCEPRuntime:
                 out_cap=(config.out_cap if name == dag.final
                          else min(config.intermediate_cap, config.out_cap)),
                 use_pallas=config.use_pallas,
+                fuse_compaction=config.fuse_compaction,
+                join_bm=join_bm, join_bn=join_bn,
             )
             # the paper's core move: each operator gets its own used-KB slice
             op_kb = (
@@ -169,10 +180,13 @@ class MonolithicRuntime:
     """
 
     def __init__(self, q, kb: KnowledgeBase, config: RuntimeConfig = RuntimeConfig()):
+        join_bm, join_bn = config.join_block_shapes or (None, None)
         plan = compile_query(
             q, kb_method=config.kb_method, scan_cap=config.scan_cap,
             bind_cap=config.bind_cap, out_cap=config.out_cap,
             use_pallas=config.use_pallas,
+            fuse_compaction=config.fuse_compaction,
+            join_bm=join_bm, join_bn=join_bn,
         )
         env = prepare_env(q, kb)
         if config.kb_capacity:

@@ -7,6 +7,12 @@ repeated squarings — each squaring one MXU matmul with a saturating cast.
 Classic three-loop tiling: grid ``(n/bm, n/bn, n/bk)`` with the K dimension
 innermost so the f32 accumulator tile stays resident in VMEM; matmul tiles
 are 128-aligned for the MXU.
+
+:func:`descendants_pallas` fuses the *final* squaring with closure-set
+extraction: reasoning queries only consume one column of the closure (the
+descendants of a root class), so the last step collapses to a matvec whose
+set entries are compacted in-kernel into a bounded id list — the squared
+``[n, n]`` matrix of the final step never reaches HBM.
 """
 from __future__ import annotations
 
@@ -31,6 +37,69 @@ def _bool_matmul_kernel(nk: int, a_ref, b_ref, out_ref):
     @pl.when(k == nk - 1)
     def _saturate():
         out_ref[...] = jnp.minimum(out_ref[...], 1.0)
+
+
+def _descendants_kernel(out_cap: int, reach_ref, rootcol_ref, ids_ref,
+                        count_ref):
+    """Fused final squaring + compaction for one root class.
+
+    One ``[bm, n]`` row block per grid step: the block's slice of the final
+    closure *column* is a matvec ``reach_block @ reach[:, root]`` (the full
+    ``reach @ reach`` product for the last squaring never exists), and set
+    rows scatter their global indices straight into the capacity-bounded id
+    list.  ``count_ref`` carries the running count across the sequential
+    grid; slot ``out_cap`` of ``ids_ref`` is the dump slot for overflow.
+    """
+    i = pl.program_id(0)
+    bm = reach_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        ids_ref[...] = jnp.zeros_like(ids_ref)
+
+    col = jnp.minimum(reach_ref[...] @ rootcol_ref[...], 1.0)     # [bm]
+    mask = col > 0.5
+    base = jnp.where(i == 0, 0, count_ref[0])
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    tgt = jnp.where(mask & (base + rank < out_cap), base + rank, out_cap)
+    ids = (i * bm + jnp.arange(bm)).astype(jnp.int32)
+    ids_ref[...] = ids_ref[...].at[tgt].set(ids)
+    count_ref[0] = base + jnp.sum(mask.astype(jnp.int32))
+
+
+def descendants_pallas(
+    reach: jax.Array,       # [n, n] f32 in {0, 1}: closure before last squaring
+    rootcol: jax.Array,     # [n] f32: reach[:, root]
+    out_cap: int,
+    bm: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(ids [out_cap] int32, count [] int32)``.
+
+    ``ids[:min(count, out_cap)]`` are the ascending row indices i with
+    ``min(reach @ reach, 1)[i, root] > 0.5`` — the root's descendant set,
+    compacted in-kernel without materializing the final squared matrix.
+    """
+    n = reach.shape[0]
+    assert reach.shape == (n, n) and n % bm == 0, (reach.shape, bm)
+    ids, count = pl.pallas_call(
+        functools.partial(_descendants_kernel, out_cap),
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((out_cap + 1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_cap + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(reach, rootcol)
+    return ids[:out_cap], count[0]
 
 
 def closure_step_pallas(

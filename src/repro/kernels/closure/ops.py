@@ -38,3 +38,34 @@ def transitive_closure(
         else:
             reach = ref.closure_step_ref(reach)
     return reach[:n, :n] > 0.5
+
+
+def closure_descendants(
+    adj: jax.Array, root: int, out_cap: int, max_depth: int | None = None,
+    block: int = 128, use_pallas: bool = True, interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Descendant set of class ``root``: fused closure + compaction.
+
+    Runs ``steps - 1`` squarings on the padded reach matrix, then the fused
+    final step (:func:`kernel.descendants_pallas`): a matvec against the
+    root's column plus in-kernel compaction of the set row indices.  Returns
+    ``(ids [out_cap] int32, count [] int32)``; ``count > out_cap`` means the
+    id list was clipped.  Padding rows can never reach ``root`` (their
+    off-diagonal entries are zero), so the result is unaffected.
+    """
+    n = adj.shape[0]
+    steps = max(1, int(np.ceil(np.log2(max(2, max_depth or n)))))
+    reach = jnp.minimum(
+        adj.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32), 1.0
+    )
+    reach = _pad_square(reach, block)
+    for _ in range(steps - 1):
+        if use_pallas:
+            reach = kernel.closure_step_pallas(reach, interpret=interpret)
+        else:
+            reach = ref.closure_step_ref(reach)
+    ids, count = kernel.descendants_pallas(
+        reach, reach[:, root], out_cap, bm=block, interpret=interpret
+    )
+    # padded rows are unreachable, so ids never exceed n - 1
+    return ids, count

@@ -16,3 +16,21 @@ def closure_ref(adj: jnp.ndarray, steps: int) -> jnp.ndarray:
     for _ in range(steps):
         reach = jnp.minimum(reach @ reach, 1.0)
     return reach
+
+
+def descendants_ref(adj: jnp.ndarray, root: int, steps: int, out_cap: int):
+    """Oracle for the fused descendant extraction.
+
+    Returns ``(ids [out_cap] int32, count [] int32)``: ascending indices of
+    the rows reaching ``root`` in the full closure, zero-padded past
+    ``count`` and clipped at ``out_cap``.
+    """
+    reach = closure_ref(adj, steps)
+    mask = reach[:, root] > 0.5
+    count = jnp.sum(mask.astype(jnp.int32))
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    tgt = jnp.where(mask & (rank < out_cap), rank, out_cap)
+    ids = jnp.zeros((out_cap + 1,), jnp.int32).at[tgt].set(
+        jnp.arange(adj.shape[0], dtype=jnp.int32)
+    )
+    return ids[:out_cap], count

@@ -1,14 +1,44 @@
-"""Pallas TPU kernel: tiled window-vs-KB match matrix.
+"""Pallas TPU kernels: tiled window-vs-KB join (match + fused compaction).
 
 TPU adaptation of DSCEP's KB-scan join.  A CPU engine (C-SPARQL) walks hash
 maps pointer-by-pointer; the TPU-native formulation streams the KB partition
 through VMEM in ``bn``-wide blocks and evaluates all ``bm x bn`` slot-equality
-predicates as vector compares (VPU), emitting an int8 candidate matrix that
-the caller compacts.  Arithmetic intensity is low (compare-bound), so block
-shapes are chosen to keep the KB stream resident: one ``[bm]`` binding column
-per BOUND slot and three ``[bn]`` KB columns per block.
+predicates as vector compares (VPU).  Two entry points:
 
-Grid: ``(M / bm, N / bn)``; each program writes one ``[bm, bn]`` output tile.
+* :func:`match_matrix_pallas` — the original kernel: emits the full int8
+  candidate matrix ``[M, N]`` that the caller compacts.  O(M*N) HBM traffic.
+* :func:`join_compact_pallas` — the fused pipeline: match tiles never leave
+  VMEM; each grid tile scatters its compacted, variable-extended binding rows
+  straight into a capacity-bounded ``[out_cap, nv]`` output.  HBM traffic is
+  O(M*N / tile-resident) reads + O(out_cap) writes, and the output positions
+  are *globally row-major deterministic* — bit-identical to materializing the
+  candidate matrix and running :func:`repro.core.pattern.compact_rows`.
+
+The fused pipeline is classic two-phase stream compaction:
+
+1. **count** — grid ``(M/bm, N/bn)`` accumulates per-binding-row match
+   counts into an ``[M]`` int32 vector (the only intermediate that touches
+   HBM; 4 bytes/row vs N bytes/row for the candidate matrix).
+2. host-side exclusive cumsum of the ``[M]`` counts -> global row offsets.
+3. **scatter** — same grid; each tile recomputes its match block (compare
+   ops are ~free; recompute beats an HBM round-trip), ranks matches within
+   the row via a running per-row base carried across ``j`` steps, extends
+   binding rows with the pattern's FREE variables from the KB columns, and
+   scatters them to ``offset[row] + rank``.  Rows past ``out_cap`` land in a
+   dump slot; the caller turns ``sum(counts) > out_cap`` into the overflow
+   flag.
+
+Grids iterate ``j`` fastest (Pallas row-major order), which the running
+per-row base in phase 3 relies on; the scatter itself is position-exact, so
+tile order never changes the result.
+
+Lowering note: the scatter step uses a runtime-indexed ``.at[].set`` into
+the resident output block.  This is exercised in interpret mode (this
+container) and is the one op whose Mosaic lowering must be validated before
+flipping ``interpret=False`` on real hardware; if unsupported on a target
+TPU generation, replace it with a one-hot-matmul scatter (MXU) or a
+per-row ``fori_loop`` of dynamic-slice stores — the count/offset phases and
+the output contract are unchanged.
 """
 from __future__ import annotations
 
@@ -25,17 +55,16 @@ DEFAULT_BM = 128
 DEFAULT_BN = 1024
 
 
-def _match_kernel(pat: CompiledPattern, cols_ref, bvalid_ref, ks_ref, kp_ref,
-                  ko_ref, kvalid_ref, out_ref):
-    """One [bm, bn] tile: all-slot equality under the static pattern."""
-    kcols = {0: ks_ref[...], 1: kp_ref[...], 2: ko_ref[...]}      # each [bn]
-    m = bvalid_ref[...][:, None] & kvalid_ref[...][None, :]       # [bm, bn]
+def _tile_match(pat: CompiledPattern, cols, bvalid, ks, kp, ko, kvalid):
+    """All-slot equality for one [bm, bn] tile under the static pattern."""
+    kcols = {0: ks, 1: kp, 2: ko}
+    m = bvalid[:, None] & kvalid[None, :]
     for i, slot in enumerate((pat.s, pat.p, pat.o)):
         kv = kcols[i][None, :]
         if slot.mode == SlotMode.CONST:
             m = m & (kv == jnp.uint32(slot.const))
         elif slot.mode == SlotMode.BOUND:
-            m = m & (kv == cols_ref[:, slot.var][:, None])
+            m = m & (kv == cols[:, slot.var][:, None])
     slots = (pat.s, pat.p, pat.o)
     for i in range(3):
         for j in range(i + 1, 3):
@@ -45,6 +74,32 @@ def _match_kernel(pat: CompiledPattern, cols_ref, bvalid_ref, ks_ref, kp_ref,
                 and slots[i].var == slots[j].var
             ):
                 m = m & (kcols[i][None, :] == kcols[j][None, :])
+    return m
+
+
+def _extend_tile(pat: CompiledPattern, cols, ks, kp, ko):
+    """[bm, nv] binding rows -> [bm, bn, nv] rows with FREE vars from the KB."""
+    bm, nv = cols.shape
+    bn = ks.shape[0]
+    ext = jnp.broadcast_to(cols[:, None, :], (bm, bn, nv))
+    kcols = {0: ks, 1: kp, 2: ko}
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            ext = ext.at[..., slot.var].set(
+                jnp.broadcast_to(kcols[i][None, :], (bm, bn))
+            )
+    return ext
+
+
+# --------------------------------------------------------------------------
+# original kernel: full candidate matrix
+# --------------------------------------------------------------------------
+
+def _match_kernel(pat: CompiledPattern, cols_ref, bvalid_ref, ks_ref, kp_ref,
+                  ko_ref, kvalid_ref, out_ref):
+    """One [bm, bn] tile: all-slot equality under the static pattern."""
+    m = _tile_match(pat, cols_ref[...], bvalid_ref[...], ks_ref[...],
+                    kp_ref[...], ko_ref[...], kvalid_ref[...])
     out_ref[...] = m.astype(jnp.int8)
 
 
@@ -78,3 +133,109 @@ def match_matrix_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
         interpret=interpret,
     )(cols, bvalid, ks, kp, ko, kvalid)
+
+
+# --------------------------------------------------------------------------
+# fused kernel: join -> compaction without the [M, N] round-trip
+# --------------------------------------------------------------------------
+
+def _count_kernel(pat: CompiledPattern, cols_ref, bvalid_ref, ks_ref, kp_ref,
+                  ko_ref, kvalid_ref, counts_ref):
+    """Phase 1: accumulate per-binding-row match counts across KB blocks."""
+    j = pl.program_id(1)
+    m = _tile_match(pat, cols_ref[...], bvalid_ref[...], ks_ref[...],
+                    kp_ref[...], ko_ref[...], kvalid_ref[...])
+    rc = jnp.sum(m.astype(jnp.int32), axis=1)
+    counts_ref[...] = jnp.where(j == 0, jnp.zeros_like(rc),
+                                counts_ref[...]) + rc
+
+
+def _scatter_kernel(pat: CompiledPattern, out_cap: int, cols_ref, bvalid_ref,
+                    ks_ref, kp_ref, ko_ref, kvalid_ref, offs_ref, out_ref,
+                    rowbase_ref):
+    """Phase 2: scatter compacted extended rows to offset[row] + rank.
+
+    ``out_ref`` is the whole ``[out_cap + 1, nv]`` output (constant index
+    map — the TPU grid is sequential, so revisiting accumulates); row
+    ``out_cap`` is the dump slot for overflowing matches.  ``rowbase_ref``
+    carries each binding row's running match count across ``j`` steps.
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cols = cols_ref[...]
+    ks, kp, ko = ks_ref[...], kp_ref[...], ko_ref[...]
+    m = _tile_match(pat, cols, bvalid_ref[...], ks, kp, ko, kvalid_ref[...])
+    rc = jnp.sum(m.astype(jnp.int32), axis=1)                     # [bm]
+    base = jnp.where(j == 0, jnp.zeros_like(rc), rowbase_ref[...])
+    rank = jnp.cumsum(m.astype(jnp.int32), axis=1) - 1            # [bm, bn]
+    tgt = offs_ref[...][:, None] + base[:, None] + rank
+    tgt = jnp.where(m & (tgt < out_cap), tgt, out_cap)            # dump slot
+
+    ext = _extend_tile(pat, cols, ks, kp, ko)                     # [bm, bn, nv]
+    bm, bn, nv = ext.shape
+    out_ref[...] = out_ref[...].at[tgt.reshape(bm * bn)].set(
+        ext.reshape(bm * bn, nv)
+    )
+    rowbase_ref[...] = base + rc
+
+
+def join_compact_pallas(
+    cols: jax.Array,        # [M, NV] uint32 (M multiple of bm)
+    bvalid: jax.Array,      # [M] bool
+    ks: jax.Array, kp: jax.Array, ko: jax.Array,   # [N] uint32 (N mult of bn)
+    kvalid: jax.Array,      # [N] bool
+    pat: CompiledPattern,
+    out_cap: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused join+compaction.  Returns ``(rows [out_cap, nv], counts [M])``.
+
+    ``rows[k]`` is the k-th match of the (virtual) row-major candidate
+    matrix, extended with the pattern's FREE variables; slots past the total
+    match count hold garbage (callers mask with ``sum(counts)``).  The
+    candidate matrix itself never exists in HBM.
+    """
+    m, nv = cols.shape
+    n = ks.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    in_specs = [
+        pl.BlockSpec((bm, nv), lambda i, j: (i, 0)),
+        pl.BlockSpec((bm,), lambda i, j: (i,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+    ]
+    counts = pl.pallas_call(
+        functools.partial(_count_kernel, pat),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+    )(cols, bvalid, ks, kp, ko, kvalid)
+
+    offsets = (jnp.cumsum(counts) - counts).astype(jnp.int32)   # [M], tiny
+
+    out, _ = pl.pallas_call(
+        functools.partial(_scatter_kernel, pat, out_cap),
+        grid=grid,
+        in_specs=in_specs + [pl.BlockSpec((bm,), lambda i, j: (i,))],
+        out_specs=[
+            pl.BlockSpec((out_cap + 1, nv), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_cap + 1, nv), jnp.uint32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cols, bvalid, ks, kp, ko, kvalid, offsets)
+    return out[:out_cap], counts

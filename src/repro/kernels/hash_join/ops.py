@@ -1,13 +1,33 @@
-"""Public wrapper: pad to block multiples, run the kernel, slice back."""
+"""Public wrappers: pad to block multiples, run the kernel, slice back.
+
+Two join surfaces:
+
+* :func:`match_matrix` — original path; returns the bool ``[M, N]`` candidate
+  matrix that the caller compacts (kept for parity tests and as a fallback).
+* :func:`join_compact` / :func:`join_compact_jnp` — fused path; returns the
+  compacted, variable-extended :class:`Bindings` directly.  The Pallas
+  version never materializes the candidate matrix in HBM; the jnp version
+  (the path XLA actually runs on CPU hosts) still forms the bool matrix but
+  gathers only the ``out_cap`` winning rows instead of materializing and
+  compacting the ``[M, N, nv]`` extension — the dominant memory traffic of
+  the unfused path.
+
+Both fused paths are bit-identical to the unfused
+``match -> extend -> compact_rows`` pipeline, including row order (global
+row-major), zeroed invalid rows, and the overflow flag.
+"""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.kb import KnowledgeBase
-from repro.core.pattern import Bindings, CompiledPattern
+from repro.core.pattern import Bindings, CompiledPattern, SlotMode
 
 from . import kernel
+from .ref import match_matrix_ref
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
@@ -18,6 +38,23 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0, fill=0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, rem)
     return jnp.pad(x, widths, constant_values=fill)
+
+
+def autotune_block_shapes(
+    m: int, n: int, nv: int, vmem_budget: int = 4 * 1024 * 1024
+) -> Tuple[int, int]:
+    """Pick (bm, bn) for the fused join so a tile's working set fits VMEM.
+
+    Deterministic heuristic (no measurement): the scatter phase holds the
+    ``[bm, bn, nv]`` uint32 extension plus two ``[bm, bn]`` int32 temporaries
+    (rank/target) per tile, so tile bytes ~= 4 * bm * bn * (nv + 2).  KB
+    blocks want to be wide (lane dim 128-aligned) to amortize streaming;
+    binding blocks deep enough to reuse each KB block across many rows.
+    """
+    bn = max(128, min(kernel.DEFAULT_BN, ((n + 127) // 128) * 128))
+    bm = vmem_budget // max(1, 4 * bn * (nv + 2))
+    bm = max(8, min(kernel.DEFAULT_BM, (bm // 8) * 8, ((m + 7) // 8) * 8))
+    return int(bm), int(bn)
 
 
 def match_matrix(
@@ -42,3 +79,56 @@ def match_matrix(
         cols, bvalid, ks, kp, ko, kvalid, pat, bm=bm, bn=bn, interpret=interpret
     )
     return out[:m, :n].astype(bool)
+
+
+def join_compact(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    bm: int | None = None, bn: int | None = None, interpret: bool = True,
+) -> Bindings:
+    """Fused Pallas join: compacted extended bindings, no [M, N] in HBM."""
+    m, n = bind.capacity, kb.capacity
+    if bm is None or bn is None:
+        abm, abn = autotune_block_shapes(m, n, bind.num_vars)
+        bm, bn = bm or abm, bn or abn
+    cols = _pad_to(bind.cols, bm, axis=0)
+    bvalid = _pad_to(bind.valid, bm, axis=0, fill=False)
+    ks = _pad_to(kb.s_ps, bn)
+    kp = _pad_to(kb.p_ps, bn)
+    ko = _pad_to(kb.o_ps, bn)
+    kvalid = _pad_to(kb.valid, bn, fill=False)
+    rows, counts = kernel.join_compact_pallas(
+        cols, bvalid, ks, kp, ko, kvalid, pat, out_cap, bm=bm, bn=bn,
+        interpret=interpret,
+    )
+    total = jnp.sum(counts)
+    valid = jnp.arange(out_cap) < jnp.minimum(total, out_cap)
+    rows = jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
+    return Bindings(rows, valid, (total > out_cap) | bind.overflow)
+
+
+def join_compact_jnp(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+) -> Bindings:
+    """Fused jnp join: gather the out_cap winners instead of compacting M*N.
+
+    The k-th output row is located by binary search on the cumulative match
+    count (``searchsorted`` over the flattened row-major matrix), so only
+    ``out_cap`` extended rows are ever built.
+    """
+    m = match_matrix_ref(bind.cols, bind.valid, kb.s_ps, kb.p_ps, kb.o_ps,
+                         kb.valid, pat)
+    ca, n = m.shape
+    cs = jnp.cumsum(m.reshape(-1).astype(jnp.int32))
+    total = cs[-1]
+    k = jnp.arange(out_cap, dtype=jnp.int32)
+    src = jnp.searchsorted(cs, k + 1, side="left").astype(jnp.int32)
+    valid = k < jnp.minimum(total, out_cap)
+    src = jnp.minimum(src, ca * n - 1)
+    bi, kr = src // n, src % n
+    rows = jnp.take(bind.cols, bi, axis=0)
+    kcols = {0: kb.s_ps, 1: kb.p_ps, 2: kb.o_ps}
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            rows = rows.at[:, slot.var].set(jnp.take(kcols[i], kr))
+    rows = jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
+    return Bindings(rows, valid, (total > out_cap) | bind.overflow)

@@ -1,16 +1,25 @@
-"""Pure-jnp oracle for the window-vs-KB match matrix.
+"""Pure-jnp oracles for the window-vs-KB join.
 
-Semantics (shared with the kernel): given a binding table ``cols [M, NV]``
+Semantics (shared with the kernels): given a binding table ``cols [M, NV]``
 with row validity ``bvalid [M]``, KB columns ``(s, p, o) [N]`` with validity
-``kvalid [N]``, and a static :class:`CompiledPattern`, produce the boolean
-candidate matrix ``match [M, N]`` where entry (i, r) is True iff KB row r
-satisfies the pattern under binding row i.
+``kvalid [N]``, and a static :class:`CompiledPattern`:
+
+* :func:`match_matrix_ref` — the boolean candidate matrix ``match [M, N]``
+  where entry (i, r) is True iff KB row r satisfies the pattern under
+  binding row i.
+* :func:`join_compact_ref` — the fused-pipeline oracle: materialize the
+  candidate matrix, extend matching binding rows with the pattern's FREE
+  variables from the KB columns, and compact in global row-major order into
+  ``out_cap`` rows.  The fused kernel must match this bit-exactly.
 """
 from __future__ import annotations
 
+from typing import Tuple
+
+import jax
 import jax.numpy as jnp
 
-from repro.core.pattern import CompiledPattern, SlotMode
+from repro.core.pattern import CompiledPattern, SlotMode, compact_rows
 
 
 def match_matrix_ref(cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern):
@@ -32,3 +41,20 @@ def match_matrix_ref(cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern):
             ):
                 m = m & (kcols[i][None, :] == kcols[j][None, :])
     return m
+
+
+def join_compact_ref(
+    cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern, out_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused join: returns ``(rows, valid, overflow)``."""
+    m = match_matrix_ref(cols, bvalid, ks, kp, ko, kvalid, pat)
+    ca, n = m.shape
+    nv = cols.shape[1]
+    ext = jnp.broadcast_to(cols[:, None, :], (ca, n, nv))
+    kcols = {0: ks, 1: kp, 2: ko}
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            ext = ext.at[..., slot.var].set(
+                jnp.broadcast_to(kcols[i][None, :], (ca, n))
+            )
+    return compact_rows(ext.reshape(ca * n, nv), m.reshape(ca * n), out_cap)

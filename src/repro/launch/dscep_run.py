@@ -41,6 +41,8 @@ def main(argv=None):
     ap.add_argument("--window-cap", type=int, default=256)
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas hash-join kernel (interpret on CPU)")
+    ap.add_argument("--fuse", action="store_true",
+                    help="fused join->compaction (no [M, N] candidate matrix)")
     args = ap.parse_args(argv)
 
     vocab = Vocab()
@@ -57,6 +59,7 @@ def main(argv=None):
         window_capacity=args.window_cap, max_windows=4, bind_cap=2048,
         scan_cap=512, out_cap=2048, kb_method=args.method,
         use_pallas=args.pallas,
+        fuse_compaction=args.fuse,
     )
 
     total_kb = int(np.asarray(kbd.kb.count()))

@@ -89,7 +89,7 @@ def dp_train_step_compressed(loss_fn, opt_update, mesh: Mesh,
         metrics["loss"] = jax.lax.pmean(loss, axis_name)
         return params, opt_state, new_resid, metrics
 
-    from jax import shard_map
+    from repro.compat import shard_map
 
     in_specs = (P(), P(), P(), P(axis_name))
     out_specs = (P(), P(), P(), P())

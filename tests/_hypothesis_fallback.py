@@ -1,0 +1,135 @@
+"""Minimal stand-in for ``hypothesis`` so the suite runs without the dep.
+
+The real package is preferred (``pip install -r requirements-dev.txt``); when
+it is missing, :func:`install` registers this module as ``hypothesis`` /
+``hypothesis.strategies`` in ``sys.modules`` *before* test modules import it
+(conftest.py runs first).  It implements exactly the API surface the tests
+use — ``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``
+and the ``integers`` / ``floats`` / ``lists`` / ``tuples`` / ``sampled_from``
+strategies — by drawing deterministic pseudo-random examples: example ``i``
+of every test draws from ``random.Random(i)``, so failures reproduce.
+
+No shrinking, no database, no adaptive search: this is a fallback that keeps
+property tests *running* (as seeded fuzz tests), not a replacement.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+_EXAMPLES_ATTR = "_fallback_max_examples"
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a ``random.Random``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=None) -> SearchStrategy:
+    hi = (min_value + 1000) if max_value is None else max_value
+    return SearchStrategy(lambda rng: rng.randint(min_value, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=None) -> SearchStrategy:
+    hi = min_size + 8 if max_size is None else max_size
+
+    def draw(rng):
+        return [elements.example(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+    """Records ``max_examples`` on the (possibly @given-wrapped) test."""
+
+    def deco(fn):
+        setattr(fn, _EXAMPLES_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Run the test once per drawn example.
+
+    Keyword strategies bind to same-named parameters; positional strategies
+    bind to the test's rightmost parameters (hypothesis semantics).
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        strategies = dict(kw_strategies)
+        for name, strat in zip(names[len(names) - len(pos_strategies):],
+                               pos_strategies):
+            strategies[name] = strat
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(i)
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}"
+                    ) from e
+
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies
+        ])
+        del wrapper.__wrapped__       # keep pytest off the original signature
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.SearchStrategy = SearchStrategy
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

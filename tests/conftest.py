@@ -2,9 +2,21 @@
 
 NOTE: no XLA_FLAGS manipulation here — tests must see the real single-device
 CPU platform (the 512-device trick is exclusively for launch/dryrun.py).
+
+``hypothesis`` is an optional dev dep (requirements-dev.txt); when missing,
+a deterministic seeded-fuzz fallback is registered so the nine property-test
+modules still collect and run (see tests/_hypothesis_fallback.py).
 """
+import os
+import sys
+
 import numpy as np
 import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))   # tests/ is not a package
+import _hypothesis_fallback                     # noqa: E402
+
+_hypothesis_fallback.install()
 
 from repro.core.rdf import Vocab
 from repro.data.dbpedia import KBConfig, generate_kb

@@ -1,0 +1,225 @@
+"""Fused join->compaction pipeline: bit-exact parity with the unfused path.
+
+Covers the acceptance matrix for the fused Pallas kernel
+(:func:`repro.kernels.hash_join.kernel.join_compact_pallas`) and the fused
+jnp gather path, against the materialize-and-compact oracle
+(:func:`repro.kernels.hash_join.ref.join_compact_ref`):
+
+* edge shapes — empty window, all-match, overflow exactly at ``out_cap``,
+  M/N not multiples of the block shapes;
+* every pattern slot-mode combination the engine emits;
+* the engine integration (``kb_join_scan`` fused == unfused, and the
+  vmapped ``DSCEPRuntime`` end-to-end with ``fuse_compaction=True``);
+* the fused closure-descendants kernel vs its oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algebra
+from repro.core.kb import kb_from_triples
+from repro.core.pattern import Bindings, CompiledPattern, Slot
+from repro.kernels.hash_join import ops as hj_ops
+from repro.kernels.hash_join.ref import join_compact_ref
+from repro.kernels.closure import ops as cl_ops
+from repro.kernels.closure.ref import descendants_ref
+
+
+def _world(m=32, n=128, nv=3, seed=0, spread=30, kb_rows=None):
+    rng = np.random.default_rng(seed)
+    base = 5000
+    cols = rng.integers(base, base + spread, size=(m, nv)).astype(np.uint32)
+    bvalid = rng.random(m) < 0.9
+    if kb_rows is None:
+        kb_rows = [
+            (int(rng.integers(base, base + spread)), int(rng.integers(1, 4)),
+             int(rng.integers(base, base + spread)))
+            for _ in range(max(0, n - 4))
+        ]
+    kb = kb_from_triples(kb_rows, capacity=n)
+    bind = Bindings(jnp.asarray(cols), jnp.asarray(bvalid), jnp.zeros((), bool))
+    return bind, kb
+
+
+def _assert_fused_matches_oracle(bind, kb, pat, out_cap, bm=None, bn=None):
+    rows, valid, ovf = join_compact_ref(
+        bind.cols, bind.valid, kb.s_ps, kb.p_ps, kb.o_ps, kb.valid, pat,
+        out_cap,
+    )
+    for got in (
+        hj_ops.join_compact(bind, kb, pat, out_cap, bm=bm, bn=bn),
+        hj_ops.join_compact_jnp(bind, kb, pat, out_cap),
+    ):
+        np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(rows))
+        np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(valid))
+        assert bool(got.overflow) == bool(ovf)
+
+
+PATTERNS = {
+    "bound_const_free": CompiledPattern(Slot.bound(0), Slot.const_(2), Slot.free(1)),
+    "free_const_bound": CompiledPattern(Slot.free(0), Slot.const_(1), Slot.bound(1)),
+    "const_bound_free": CompiledPattern(Slot.const_(5003), Slot.bound(0), Slot.free(1)),
+    "free_const_free": CompiledPattern(Slot.free(0), Slot.const_(1), Slot.free(1)),
+    "repeated_free": CompiledPattern(Slot.free(0), Slot.const_(1), Slot.free(0)),
+}
+
+
+@pytest.mark.parametrize("pat_kind", sorted(PATTERNS))
+@pytest.mark.parametrize("m,n", [(16, 64), (64, 256), (128, 512)])
+def test_fused_matches_oracle(m, n, pat_kind):
+    bind, kb = _world(m=m, n=n, seed=m + n)
+    _assert_fused_matches_oracle(bind, kb, PATTERNS[pat_kind], out_cap=128)
+
+
+def test_fused_empty_window():
+    """No valid binding rows: zero matches, no overflow, all-zero output."""
+    bind, kb = _world(m=16, n=64, seed=1)
+    bind = bind._replace(valid=jnp.zeros_like(bind.valid))
+    pat = PATTERNS["bound_const_free"]
+    _assert_fused_matches_oracle(bind, kb, pat, out_cap=32)
+    got = hj_ops.join_compact(bind, kb, pat, 32)
+    assert int(np.asarray(got.count())) == 0 and not bool(got.overflow)
+
+
+def test_fused_all_match_overflow():
+    """Every (row, kb-row) pair matches: the compactor clips at out_cap."""
+    rows = [(7000, 1, 7000 + i) for i in range(32)]
+    bind, kb = _world(m=16, n=32, seed=2, kb_rows=rows)
+    bind = bind._replace(
+        cols=jnp.full_like(bind.cols, 7000), valid=jnp.ones_like(bind.valid)
+    )
+    pat = CompiledPattern(Slot.bound(0), Slot.const_(1), Slot.free(1))
+    _assert_fused_matches_oracle(bind, kb, pat, out_cap=64)   # 16*32 >> 64
+    got = hj_ops.join_compact(bind, kb, pat, 64)
+    assert bool(got.overflow) and int(np.asarray(got.count())) == 64
+
+
+def test_fused_overflow_exactly_at_capacity():
+    """total == out_cap must NOT flag overflow; out_cap - 1 must."""
+    rows = [(7000, 1, 7100 + i) for i in range(10)]
+    bind, kb = _world(m=1, n=16, seed=3, nv=2, kb_rows=rows)
+    bind = bind._replace(
+        cols=jnp.full_like(bind.cols, 7000), valid=jnp.ones_like(bind.valid)
+    )
+    pat = CompiledPattern(Slot.bound(0), Slot.const_(1), Slot.free(1))
+    exact = hj_ops.join_compact(bind, kb, pat, out_cap=10)
+    assert int(np.asarray(exact.count())) == 10 and not bool(exact.overflow)
+    clipped = hj_ops.join_compact(bind, kb, pat, out_cap=9)
+    assert int(np.asarray(clipped.count())) == 9 and bool(clipped.overflow)
+    _assert_fused_matches_oracle(bind, kb, pat, out_cap=10)
+    _assert_fused_matches_oracle(bind, kb, pat, out_cap=9)
+
+
+@pytest.mark.parametrize("m,n,bm,bn", [
+    (50, 300, 16, 128),     # both padded
+    (33, 129, 32, 128),     # barely over one block
+    (8, 128, 128, 1024),    # blocks larger than the data
+])
+def test_fused_non_multiple_block_shapes(m, n, bm, bn):
+    bind, kb = _world(m=m, n=n, seed=m * n)
+    _assert_fused_matches_oracle(
+        bind, kb, PATTERNS["bound_const_free"], out_cap=64, bm=bm, bn=bn
+    )
+
+
+def test_autotune_block_shapes_are_legal():
+    for m, n, nv in [(1, 1, 2), (256, 8192, 4), (33, 100, 8), (512, 100000, 3)]:
+        bm, bn = hj_ops.autotune_block_shapes(m, n, nv)
+        assert bm % 8 == 0 and bn % 128 == 0 and bm >= 8 and bn >= 128
+        # a scatter tile must fit the VMEM budget it was tuned for
+        assert 4 * bm * bn * (nv + 2) <= 4 * 1024 * 1024 or bm == 8
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), out_cap=st.sampled_from([8, 64, 200]))
+def test_fused_property_random(seed, out_cap):
+    bind, kb = _world(m=24, n=96, seed=seed, spread=12)
+    _assert_fused_matches_oracle(bind, kb, PATTERNS["bound_const_free"],
+                                 out_cap=out_cap)
+
+
+# --------------------------------------------------------------------------
+# engine integration
+# --------------------------------------------------------------------------
+
+def test_kb_join_scan_fused_equals_unfused():
+    bind, kb = _world(m=16, n=64, seed=5)
+    pat = PATTERNS["bound_const_free"]
+    want = algebra.kb_join_scan(bind, kb, pat, out_cap=128)
+    for kwargs in (
+        {"fuse_compaction": True},
+        {"fuse_compaction": True, "use_pallas": True},
+        {"use_pallas": True},
+    ):
+        got = algebra.kb_join_scan(bind, kb, pat, out_cap=128, **kwargs)
+        np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+        np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(want.valid))
+        assert bool(got.overflow) == bool(want.overflow)
+
+
+def test_runtime_fused_end_to_end(world):
+    """DSCEPRuntime (vmapped plans) produces identical streams fused/unfused."""
+    from repro.core import query as Q
+    from repro.core.planner import decompose
+    from repro.core.rdf import to_host_rows
+    from repro.core.runtime import DSCEPRuntime, RuntimeConfig
+
+    ts, kbd, vocab = world.tweets, world.kbd, world.vocab
+    q = Q.Query(
+        name="fused_e2e",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"),
+                      Q.STREAM),
+            Q.FilterSubclass("ent", kbd.schema.rdf_type,
+                             kbd.schema.subclass_of,
+                             kbd.schema.musical_artist),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"),
+                                Q.Const(vocab.pred("out:artistTweet")),
+                                Q.Var("ent")),
+        ),
+    )
+    outs = {}
+    for fused in (False, True):
+        cfg = RuntimeConfig(window_capacity=128, max_windows=4,
+                            fuse_compaction=fused)
+        rt = DSCEPRuntime(decompose(q, vocab), kbd.kb, vocab, cfg)
+        outs[fused] = [
+            sorted((r[0], r[1], r[2]) for r in to_host_rows(out))
+            for out in rt.process_stream(world.chunks)
+        ]
+    assert outs[True] == outs[False]
+
+
+# --------------------------------------------------------------------------
+# fused closure descendants
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,root,out_cap", [
+    (10, 0, 16), (64, 3, 32), (130, 7, 64), (256, 0, 300),
+])
+def test_closure_descendants_matches_ref(n, root, out_cap):
+    rng = np.random.default_rng(n + root)
+    adj = (rng.random((n, n)) < 0.05).astype(np.float32)
+    steps = max(1, int(np.ceil(np.log2(max(2, n)))))
+    ids, count = cl_ops.closure_descendants(
+        jnp.asarray(adj), root=root, out_cap=out_cap, max_depth=n
+    )
+    want_ids, want_count = descendants_ref(jnp.asarray(adj), root, steps,
+                                           out_cap)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+    assert int(count) == int(want_count)
+
+
+def test_closure_descendants_overflow_and_chain():
+    n = 12
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n - 1):
+        adj[i, i + 1] = 1.0                     # chain: all reach the last
+    ids, count = cl_ops.closure_descendants(
+        jnp.asarray(adj), root=n - 1, out_cap=4, max_depth=n
+    )
+    assert int(count) == n and bool(int(count) > 4)
+    np.testing.assert_array_equal(np.asarray(ids), np.arange(4))

@@ -65,6 +65,43 @@ def test_shard_local_overflow_reported():
     assert bool(out.overflow)
 
 
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_block_union_fused_equals_unfused(use_pallas):
+    """Per-shard fused join->compaction must not change the shard union."""
+    kb, bind, pat = _world(seed=7)
+    blocks = shard_rows(kb, 4)
+    want = kb_join_blocks_reference(bind, blocks, pat, out_cap=512, n=4)
+    got = kb_join_blocks_reference(bind, blocks, pat, out_cap=512, n=4,
+                                   use_pallas=use_pallas, fuse_compaction=True)
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(want.valid))
+    np.testing.assert_array_equal(np.asarray(got.overflow),
+                                  np.asarray(want.overflow))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_shard_map_fused_matches_reference(use_pallas):
+    """The fused join under shard_map keeps the no-collective union exact."""
+    kb, bind, pat = _world(seed=11)
+    n = jax.device_count()              # 1 on the CPU host — structural test
+    blocks = shard_rows(kb, n)
+    got = kb_join_sharded(bind, blocks, pat, out_cap=512, mesh=jax.make_mesh(
+        (n,), ("model",)), use_pallas=use_pallas, fuse_compaction=True)
+    want = kb_join_blocks_reference(bind, blocks, pat, out_cap=512, n=n)
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(want.valid))
+    np.testing.assert_array_equal(np.asarray(got.overflow),
+                                  np.asarray(want.overflow))
+
+
+def test_shard_local_overflow_reported_fused():
+    kb, bind, pat = _world(seed=5)
+    blocks = shard_rows(kb, 4)
+    out = kb_join_blocks_reference(bind, blocks, pat, out_cap=8, n=4,
+                                   fuse_compaction=True)
+    assert bool(out.overflow)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 200), n_shards=st.sampled_from([2, 4]))
 def test_block_union_property(seed, n_shards):

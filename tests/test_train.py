@@ -85,7 +85,7 @@ def test_compressed_allreduce_single_device_mesh():
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
     allreduce = make_compressed_allreduce(mesh, "data")
 
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     def run(g, r):
