@@ -8,6 +8,8 @@ One benchmark per paper artifact (DESIGN.md §5):
 * kernels  — Pallas kernel fidelity + shape sweeps
 * join     — fused join->compaction before/after microbenchmark (also part
              of ``kernels``); records speedups to BENCH_join.json
+* pipeline — sustained chunks/sec: monolithic vs single-program DAG vs
+             pipelined dataflow runtime; records to BENCH_pipeline.json
 * roofline — per-(arch x shape x mesh) roofline terms from the dry-run
              artifacts (run ``python -m repro.launch.dryrun`` first)
 
@@ -23,7 +25,7 @@ import traceback
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="step1,step2,step3,kernels,roofline")
+    p.add_argument("--only", default="step1,step2,step3,kernels,pipeline,roofline")
     p.add_argument("--iters", type=int, default=3)
     args = p.parse_args(argv)
     want = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -49,6 +51,9 @@ def main(argv=None) -> int:
             elif name == "join":
                 from . import kernels
                 kernels.bench_join_fused()
+            elif name == "pipeline":
+                from . import pipeline
+                pipeline.run(iters=args.iters)
             elif name == "roofline":
                 from . import roofline
                 roofline.run()

@@ -11,11 +11,13 @@ Public surface of the paper's contribution:
 * :mod:`repro.core.engine`   — plan executor (the RSP engine)
 * :mod:`repro.core.operator` — SCEP operator (Aggregator→engine→Publisher)
 * :mod:`repro.core.runtime`  — operator-DAG runtime (mono vs decomposed)
+* :mod:`repro.core.channel`  — bounded device ring-buffer channels (edges)
+* :mod:`repro.core.pipeline` — streaming pipelined runtime over channels
 * :mod:`repro.core.reasoner` — subclass/sameAs reasoning support
 """
-from . import algebra, engine, kb, pattern, planner, query, rdf, reasoner, runtime, stream, window  # noqa: F401
+from . import algebra, channel, engine, kb, pattern, pipeline, planner, query, rdf, reasoner, runtime, stream, window  # noqa: F401
 
 __all__ = [
-    "algebra", "engine", "kb", "pattern", "planner", "query", "rdf",
-    "reasoner", "runtime", "stream", "window",
+    "algebra", "channel", "engine", "kb", "pattern", "pipeline", "planner",
+    "query", "rdf", "reasoner", "runtime", "stream", "window",
 ]

@@ -25,8 +25,11 @@ from .stream import merge_streams
 from .window import Windows, count_windows
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class OperatorConfig:
+    """Frozen so a default instance can never become shared mutable state
+    across operator constructions (and so configs are hashable/jit-static)."""
+
     window_capacity: int = 1000      # paper: "window size is a maximum of 1000 RDF triples"
     max_windows: int = 8             # windows per processed chunk
     out_stream_cap: int = 2048       # published stream chunk capacity
@@ -41,13 +44,13 @@ class SCEPOperator:
         plan: Plan,
         kb: Optional[KnowledgeBase],
         env: Dict[str, jax.Array],
-        config: OperatorConfig = OperatorConfig(),
+        config: Optional[OperatorConfig] = None,
     ):
         self.name = name
         self.plan = plan
         self.kb = kb
         self.env = dict(env)
-        self.config = config
+        self.config = config if config is not None else OperatorConfig()
         self._step = jax.jit(self._process_impl)
 
     # -- the jitted operator step -------------------------------------------

@@ -1,0 +1,325 @@
+"""Pipelined inter-operator dataflow runtime.
+
+:class:`~repro.core.runtime.DSCEPRuntime` traces the whole operator DAG into
+**one** XLA program and pushes chunks through it strictly one at a time.
+This module is the alternative execution mode the paper actually deploys:
+operators as *independently scheduled units* connected by bounded queues
+("process part of the data and send it to other operators"), so the
+aggregation operator can consume window *t* while the upstream enrichment
+operators are already producing *t+1*.
+
+Structure:
+
+* every operator compiles to **its own jitted step** whose inbound/outbound
+  :class:`~repro.core.channel.Channel` state is donated (ring buffers are
+  updated in place — no per-chunk allocation on the steady path);
+* every *buffering* DAG edge is a first-class capacity-bounded device
+  channel (:mod:`repro.core.channel`): the ``source → aggregator`` edge
+  carries window-aligned :class:`~repro.core.window.Windows`,
+  ``op → aggregator`` edges carry the operator's
+  ``(TripleBatch[W, out_cap], overflow[W])`` publication — the
+  Publisher→Aggregator hop that the single-program runtime hides inside
+  XLA.  Upstream operators consume their windows in the same tick they are
+  produced, so that hand-off is a direct device transfer, not a queue —
+  adding a pass-through channel there would only cost dispatches;
+* a **placement** maps operators to devices
+  (:func:`repro.launch.mesh.place_operators`); channels live on the
+  *consumer's* device, so a producer→consumer ``device_put`` of the payload
+  is the transport (a no-op on one device, a D2D copy across devices);
+* the host driver runs a **software-pipelined schedule**: it feeds chunk
+  *t+1* into the producer stages before draining chunk *t* from the sink,
+  keeping ``depth`` chunks in flight (double-buffered by default).  All
+  dispatch is async; only the sink output is ever blocked on.
+
+Results are bit-identical to :class:`DSCEPRuntime` and
+:class:`MonolithicRuntime` (tests/test_pipeline_runtime.py): the stages run
+the exact same window/engine/publish computations, merely cut at the channel
+boundaries instead of fused into one program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import channel
+from .channel import Channel
+from .kb import KnowledgeBase
+from .planner import OperatorDAG
+from .rdf import TripleBatch, Vocab, empty_triples
+from .runtime import RuntimeConfig, augment_windows, build_operators
+from .stream import merge_streams
+from .window import Windows, count_windows
+
+
+def _zeros_windows(num_windows: int, capacity: int) -> Windows:
+    """A shape/dtype example for sizing source→operator channel slots."""
+    z = jax.tree.map(
+        lambda col: jnp.zeros((num_windows,) + col.shape, col.dtype),
+        empty_triples(capacity),
+    )
+    return Windows(z, jnp.zeros((num_windows,), bool))
+
+
+def _zeros_publication(num_windows: int, out_cap: int) -> Tuple[TripleBatch, jax.Array]:
+    """Shape/dtype example for an operator→aggregator channel slot."""
+    tb = jax.tree.map(
+        lambda col: jnp.zeros((num_windows,) + col.shape, col.dtype),
+        empty_triples(out_cap),
+    )
+    return tb, jnp.zeros((num_windows,), bool)
+
+
+class PipelinedRuntime:
+    """Streaming execution of a decomposed query DAG over device channels.
+
+    Drop-in alternative to :class:`~repro.core.runtime.DSCEPRuntime` with the
+    same constructor shape plus:
+
+    * ``placement`` — optional ``{operator_name: jax.Device}`` (see
+      :func:`repro.launch.mesh.place_operators`); ``None`` leaves every stage
+      on the default device (still pipelined, transport becomes a no-op);
+    * ``channel_capacity`` — slots per edge channel (≥ 2 for the
+      double-buffered schedule; capacity bounds the chunks in flight).
+    """
+
+    def __init__(
+        self,
+        dag: OperatorDAG,
+        kb: KnowledgeBase,
+        vocab: Vocab,
+        config: Optional[RuntimeConfig] = None,
+        mesh=None,
+        data_axis: str = "data",
+        placement: Optional[Dict[str, Any]] = None,
+        channel_capacity: int = 2,
+    ):
+        if channel_capacity < 2:
+            raise ValueError(
+                "pipelining needs channel_capacity >= 2 (double buffering), "
+                "got %d" % channel_capacity
+            )
+        if mesh is not None:
+            # SPMD window sharding belongs to the single-program runtime;
+            # here single-device channel buffers would silently undo it.
+            # Use `placement` for cross-device (inter-operator) parallelism.
+            raise NotImplementedError(
+                "PipelinedRuntime does not shard windows over a mesh; "
+                "pass placement= instead (or use DSCEPRuntime with mesh=)"
+            )
+        self.dag = dag
+        self.vocab = vocab
+        self.config = cfg = config if config is not None else RuntimeConfig()
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.channel_capacity = channel_capacity
+        self.operators = build_operators(dag, kb, cfg)
+        self.final = dag.final
+        # upstream operators in DAG insertion order — the same order
+        # DSCEPRuntime._dag_impl iterates (augment_windows keys by name, so
+        # results do not depend on this order; the channels merely pair up)
+        self.upstream: List[str] = [
+            n for n in dag.subqueries if n != self.final
+        ]
+        self.placement = dict(placement) if placement else None
+        if self.placement is not None:
+            missing = set(self.operators) - set(self.placement)
+            if missing:
+                raise ValueError("placement missing operators: %s" % sorted(missing))
+            # pin each operator's KB slice and env onto its assigned device so
+            # its step executes there (jit follows committed input placement)
+            for name, op in self.operators.items():
+                dev = self.placement[name]
+                if op.kb is not None:
+                    op.kb = jax.device_put(op.kb, dev)
+                op.env = jax.device_put(op.env, dev)
+
+        # --- per-edge channels (allocated on the consumer's device).  Only
+        # the aggregator's inbound edges buffer across ticks; upstream
+        # operators consume windows the tick they are produced, so they get
+        # a direct transfer instead of a pass-through queue.
+        win_example = _zeros_windows(cfg.max_windows, cfg.window_capacity)
+        up_out_cap = min(cfg.intermediate_cap, cfg.out_cap)
+        pub_example = _zeros_publication(cfg.max_windows, up_out_cap)
+        self._agg_win_ch: Channel = self._on_device(
+            channel.make_channel(win_example, channel_capacity), self.final)
+        self._out_ch: Dict[str, Channel] = {
+            name: self._on_device(
+                channel.make_channel(pub_example, channel_capacity), self.final)
+            for name in self.upstream
+        }
+
+        # --- one jitted step per operator (channel state donated where a
+        # step owns channels; windows are shared across consumers and are
+        # therefore never donated)
+        self._win_step = jax.jit(self._windows_impl)
+        self._op_step = {
+            name: jax.jit(functools.partial(self._op_impl, name))
+            for name in self.upstream
+        }
+        self._sink_step = jax.jit(self._sink_impl, donate_argnums=(0, 1))
+        self._in_flight = 0
+        # device-side running counters of clipped windows per operator —
+        # O(1) state however long the stream runs, and no host sync on the
+        # drain path (the driver reads them only at stream boundaries)
+        self._overflow_acc: Dict[str, jax.Array] = {
+            n: jnp.zeros((), jnp.int32) for n in self.operators
+        }
+        self._last_overflow: Dict[str, jax.Array] = {}
+
+    # -- placement helpers ----------------------------------------------------
+    def _on_device(self, tree, op_name: str):
+        if self.placement is None:
+            return tree
+        return jax.device_put(tree, self.placement[op_name])
+
+    # -- stage implementations (each traces into its own XLA program) ----------
+    def _windows_impl(self, chunk: TripleBatch) -> Windows:
+        """Source stage: the shared Aggregator front-end (merge + window)."""
+        cfg = self.config
+        return count_windows(
+            merge_streams([chunk]), cfg.window_capacity, cfg.max_windows)
+
+    def _op_impl(
+        self, name: str, windows: Windows, kb: Optional[KnowledgeBase],
+        env: Dict[str, jax.Array],
+    ) -> Tuple[TripleBatch, jax.Array]:
+        """Enrichment operator step: engine over this tick's windows."""
+        return self.operators[name].process_windows(windows, kb, env)
+
+    def _sink_impl(
+        self, win_ch: Channel, out_chs: Dict[str, Channel],
+        kb: Optional[KnowledgeBase], env: Dict[str, jax.Array],
+    ) -> Tuple[Channel, Dict[str, Channel], TripleBatch, Dict[str, jax.Array]]:
+        """Aggregation operator step: pop every inbound edge, join, publish."""
+        win_ch, windows, has = channel.pop(win_ch)
+        upstream_out: Dict[str, TripleBatch] = {}
+        overflow: Dict[str, jax.Array] = {}
+        for name in self.upstream:
+            out_chs[name], (tb, ovf), h = channel.pop(out_chs[name])
+            upstream_out[name] = tb
+            overflow[name] = ovf & h
+        aug = augment_windows(self.dag, windows, upstream_out)
+        final_op = self.operators[self.final]
+        out_w, ovf_f = final_op.process_windows(aug, kb, env)
+        overflow[self.final] = ovf_f & has
+        out = final_op._publish(out_w)
+        out = out._replace(valid=out.valid & has)
+        return win_ch, out_chs, out, overflow
+
+    # -- host-side async driver -------------------------------------------------
+    def feed(self, chunk: TripleBatch) -> None:
+        """Dispatch the producer stages for one chunk (asynchronously).
+
+        Windows are built once, queued on the aggregator's window edge, and
+        transported (``device_put``) to each upstream operator, which runs
+        its engine step and publishes onto its aggregator edge.  Nothing
+        here blocks.
+        """
+        if self._in_flight >= self.channel_capacity:
+            raise RuntimeError(
+                "channels full (%d chunks in flight); drain() first"
+                % self._in_flight
+            )
+        windows = self._win_step(chunk)
+        self._agg_win_ch = channel.push_jit(
+            self._agg_win_ch, self._on_device(windows, self.final))
+        for name in self.upstream:
+            op = self.operators[name]
+            publication = self._op_step[name](
+                self._on_device(windows, name), op.kb, op.env)
+            self._out_ch[name] = channel.push_jit(
+                self._out_ch[name], self._on_device(publication, self.final))
+        self._in_flight += 1
+
+    def drain(self) -> TripleBatch:
+        """Dispatch the sink stage for the oldest in-flight chunk.
+
+        Returns the final published chunk (a device array — block on it only
+        when the host needs the values).  Per-operator overflow flags are
+        accumulated device-side; read them with :meth:`overflow_totals`.
+        """
+        if self._in_flight == 0:
+            raise RuntimeError("nothing in flight; feed() first")
+        final_op = self.operators[self.final]
+        self._agg_win_ch, self._out_ch, out, overflow = self._sink_step(
+            self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
+        for name, flags in overflow.items():
+            self._overflow_acc[name] = (
+                self._overflow_acc[name] + jnp.sum(flags.astype(jnp.int32))
+            )
+        self._last_overflow = overflow
+        self._in_flight -= 1
+        return out
+
+    def _require_idle(self, what: str) -> None:
+        # the whole-stream entry points own the schedule end to end; chunks
+        # left in flight by manual feed() calls would surface as *this*
+        # call's outputs/overflow and break the per-call contract
+        if self._in_flight:
+            raise RuntimeError(
+                "%s with %d chunk(s) already in flight — drain() them first"
+                % (what, self._in_flight)
+            )
+
+    def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
+        """Synchronous single-chunk convenience (no overlap): feed + drain."""
+        self._require_idle("process_chunk")
+        self.feed(chunk)
+        out = self.drain()
+        return out, dict(self._last_overflow)
+
+    def process_stream(
+        self, chunks: Sequence[TripleBatch], depth: Optional[int] = None
+    ) -> Tuple[List[TripleBatch], Dict[str, int]]:
+        """Software-pipelined stream execution.
+
+        ``depth`` chunks (default: the channel capacity, ≥ 2) are kept in
+        flight: the sink consumes chunk *t* only after chunk *t+1*'s producer
+        stages have been dispatched.  Only the last output is blocked on —
+        every intermediate hand-off stays on device.
+        Returns ``(outputs, overflow)`` like ``DSCEPRuntime.process_stream``:
+        the overflow counts cover exactly the chunks of *this* call.
+        """
+        depth = self.channel_capacity if depth is None else depth
+        if not 1 <= depth <= self.channel_capacity:
+            raise ValueError("depth must be in [1, %d], got %d"
+                             % (self.channel_capacity, depth))
+        self._require_idle("process_stream")
+        before = dict(self._overflow_acc)    # device scalars, no sync
+        outs: List[TripleBatch] = []
+        for c in chunks:
+            if self._in_flight >= depth:
+                outs.append(self.drain())
+            self.feed(c)
+        while self._in_flight:
+            outs.append(self.drain())
+        if outs:
+            jax.block_until_ready(outs[-1])  # sink-only synchronization
+        overflow = {
+            n: int(self._overflow_acc[n] - before[n]) for n in self.operators
+        }
+        return outs, overflow
+
+    # -- observability ------------------------------------------------------
+    def overflow_totals(self) -> Dict[str, int]:
+        """Lifetime windows clipped per operator (blocks on a few scalars)."""
+        return {n: int(v) for n, v in self._overflow_acc.items()}
+
+    def channel_stats(self) -> Dict[str, Dict[str, int]]:
+        """Occupancy and dropped-push counters for every edge channel."""
+        stats: Dict[str, Dict[str, int]] = {}
+
+        def one(edge: str, ch: Channel) -> None:
+            stats[edge] = {
+                "capacity": ch.capacity,
+                "size": int(ch.size),
+                "overflows": int(ch.overflows),
+            }
+
+        one("source->%s" % self.final, self._agg_win_ch)
+        for name, ch in self._out_ch.items():
+            one("%s->%s" % (name, self.final), ch)
+        return stats

@@ -34,8 +34,11 @@ from .stream import merge_streams
 from .window import Windows, count_windows
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
+    # frozen: a default-constructed config is shared freely across runtimes
+    # without aliasing mutable state (and field edits go through
+    # ``dataclasses.replace``, never in-place mutation).
     window_capacity: int = 1000
     max_windows: int = 8
     out_stream_cap: int = 2048
@@ -60,6 +63,62 @@ class RuntimeConfig:
     join_block_shapes: Optional[Tuple[int, int]] = None
 
 
+def build_operators(
+    dag: OperatorDAG, kb: KnowledgeBase, config: RuntimeConfig
+) -> Dict[str, SCEPOperator]:
+    """Compile one :class:`SCEPOperator` per DAG node (shared by the
+    single-program :class:`DSCEPRuntime` and the streaming
+    :class:`~repro.core.pipeline.PipelinedRuntime`)."""
+    op_cfg = OperatorConfig(
+        window_capacity=config.window_capacity,
+        max_windows=config.max_windows,
+        out_stream_cap=config.out_stream_cap,
+    )
+    join_bm, join_bn = config.join_block_shapes or (None, None)
+    operators: Dict[str, SCEPOperator] = {}
+    for name, sub in dag.subqueries.items():
+        plan = compile_query(
+            sub.query,
+            kb_method=config.kb_method,
+            scan_cap=config.scan_cap,
+            bind_cap=config.bind_cap,
+            out_cap=(config.out_cap if name == dag.final
+                     else min(config.intermediate_cap, config.out_cap)),
+            use_pallas=config.use_pallas,
+            fuse_compaction=config.fuse_compaction,
+            join_bm=join_bm, join_bn=join_bn,
+        )
+        # the paper's core move: each operator gets its own used-KB slice
+        op_kb = (
+            prune_kb_for(sub.query, kb, capacity=config.kb_capacity)
+            if sub.touches_kb
+            else None
+        )
+        env = prepare_env(sub.query, kb)
+        operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
+    return operators
+
+
+def augment_windows(
+    dag: OperatorDAG, windows: Windows, upstream_out: Dict[str, TripleBatch]
+) -> Windows:
+    """Append upstream operator outputs to the very window that produced them.
+
+    Window alignment is what makes decomposed == monolithic (paper: "All
+    results are the same"); the concatenation order follows the final
+    sub-query's declared inputs so every execution mode is bit-identical.
+    """
+    parts = [windows.triples] + [
+        upstream_out[src]
+        for src in dag.subqueries[dag.final].inputs
+        if src != "stream"
+    ]
+    aug = TripleBatch(
+        *(jnp.concatenate(cols, axis=-1) for cols in zip(*parts))
+    )
+    return Windows(aug, windows.window_valid)
+
+
 class DSCEPRuntime:
     """Executes a decomposed query DAG over chunked input streams.
 
@@ -77,42 +136,16 @@ class DSCEPRuntime:
         dag: OperatorDAG,
         kb: KnowledgeBase,
         vocab: Vocab,
-        config: RuntimeConfig = RuntimeConfig(),
+        config: Optional[RuntimeConfig] = None,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
     ):
         self.dag = dag
-        self.config = config
+        self.config = config = config if config is not None else RuntimeConfig()
         self.mesh = mesh
         self.data_axis = data_axis
         self.vocab = vocab
-        self.operators: Dict[str, SCEPOperator] = {}
-        op_cfg = OperatorConfig(
-            window_capacity=config.window_capacity,
-            max_windows=config.max_windows,
-            out_stream_cap=config.out_stream_cap,
-        )
-        join_bm, join_bn = config.join_block_shapes or (None, None)
-        for name, sub in dag.subqueries.items():
-            plan = compile_query(
-                sub.query,
-                kb_method=config.kb_method,
-                scan_cap=config.scan_cap,
-                bind_cap=config.bind_cap,
-                out_cap=(config.out_cap if name == dag.final
-                         else min(config.intermediate_cap, config.out_cap)),
-                use_pallas=config.use_pallas,
-                fuse_compaction=config.fuse_compaction,
-                join_bm=join_bm, join_bn=join_bn,
-            )
-            # the paper's core move: each operator gets its own used-KB slice
-            op_kb = (
-                prune_kb_for(sub.query, kb, capacity=config.kb_capacity)
-                if sub.touches_kb
-                else None
-            )
-            env = prepare_env(sub.query, kb)
-            self.operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
+        self.operators = build_operators(dag, kb, config)
         self._jit_chunk = jax.jit(self._dag_impl)
 
     # -- the single-program DAG step -----------------------------------------
@@ -139,15 +172,7 @@ class DSCEPRuntime:
             overflow[name] = ovf
 
         # window-aligned augmentation for the aggregation operator
-        parts = [windows.triples] + [
-            upstream_out[src]
-            for src in self.dag.subqueries[final].inputs
-            if src != "stream"
-        ]
-        aug = TripleBatch(
-            *(jnp.concatenate(cols, axis=-1) for cols in zip(*parts))
-        )
-        aug_windows = Windows(aug, windows.window_valid)
+        aug_windows = augment_windows(self.dag, windows, upstream_out)
         out_w, ovf = self.operators[final].process_windows(
             aug_windows, kbs[final], envs[final]
         )
@@ -163,8 +188,26 @@ class DSCEPRuntime:
 
     def process_stream(
         self, chunks: Sequence[TripleBatch]
-    ) -> List[TripleBatch]:
-        return [self.process_chunk(c)[0] for c in chunks]
+    ) -> Tuple[List[TripleBatch], Dict[str, int]]:
+        """Push all chunks through the DAG, chunk-at-a-time.
+
+        Returns ``(outputs, overflow)`` where ``overflow[op]`` counts windows
+        whose capacities clipped results in operator ``op`` across this
+        stream — per-operator flags are accumulated, never dropped, so the
+        driver can assert capacity sufficiency (benchmarks do).  The counts
+        accumulate device-side; the host syncs once at the end of the
+        stream, not per chunk.
+        """
+        outs: List[TripleBatch] = []
+        acc: Dict[str, jax.Array] = {
+            n: jnp.zeros((), jnp.int32) for n in self.operators
+        }
+        for c in chunks:
+            out, ovf = self.process_chunk(c)
+            outs.append(out)
+            for name, flags in ovf.items():
+                acc[name] = acc[name] + jnp.sum(flags.astype(jnp.int32))
+        return outs, {n: int(v) for n, v in acc.items()}
 
 
 # --------------------------------------------------------------------------
@@ -179,7 +222,8 @@ class MonolithicRuntime:
     "All results are the same" claim (tested in tests/test_equivalence.py).
     """
 
-    def __init__(self, q, kb: KnowledgeBase, config: RuntimeConfig = RuntimeConfig()):
+    def __init__(self, q, kb: KnowledgeBase, config: Optional[RuntimeConfig] = None):
+        config = config if config is not None else RuntimeConfig()
         join_bm, join_bn = config.join_block_shapes or (None, None)
         plan = compile_query(
             q, kb_method=config.kb_method, scan_cap=config.scan_cap,

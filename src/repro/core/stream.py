@@ -24,8 +24,24 @@ def merge_streams(chunks: Sequence[TripleBatch]) -> TripleBatch:
     concat + stable lexsort — an O(n log n) vectorized merge that XLA fuses
     well; per-stream monotonicity is *not* required for correctness, only for
     the paper's latency semantics.
+
+    Two hot-path fast paths (K=1 is the per-chunk case in the runtimes):
+
+    * a single input skips the concatenation entirely;
+    * the lexsort runs under ``lax.cond`` on an O(n) already-ordered check,
+      so an input that is already in merge order (valid-first, then
+      non-decreasing ``(ts, graph)``) pays a scan instead of a sort.  The
+      check is exact — when it passes, the stable lexsort is the identity —
+      so results are bit-identical either way.
     """
-    return sort_by_timestamp(concat_triples(list(chunks)))
+    batch = chunks[0] if len(chunks) == 1 else concat_triples(list(chunks))
+    big = jnp.uint32(0xFFFFFFFF)
+    ts_key = jnp.where(batch.valid, batch.ts, big)
+    ordered = jnp.all(
+        (ts_key[1:] > ts_key[:-1])
+        | ((ts_key[1:] == ts_key[:-1]) & (batch.graph[1:] >= batch.graph[:-1]))
+    ) if batch.capacity > 1 else jnp.bool_(True)
+    return jax.lax.cond(ordered, lambda b: b, sort_by_timestamp, batch)
 
 
 merge_streams_jit = jax.jit(merge_streams)

@@ -28,3 +28,47 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = max(1, min(model, n))
     return make_mesh((n // model, model), ("data", "model"))
+
+
+# --------------------------------------------------------------------------
+# operator placement (the dataflow runtime's device assignment policy)
+# --------------------------------------------------------------------------
+
+def place_operators(
+    names, final, devices=None, strategy: str = "round_robin"
+):
+    """Assign each SCEP operator of a decomposed DAG to a device.
+
+    The :class:`~repro.core.pipeline.PipelinedRuntime` places each operator's
+    step (KB slice, env, inbound channels) on its assigned device; channel
+    pushes across an edge become device-to-device copies — the mesh analogue
+    of the paper's one-container-per-operator deployment.
+
+    Strategies:
+
+    * ``"single"``      — everything on ``devices[0]`` (the degenerate but
+      always-valid placement; transport is a no-op).
+    * ``"round_robin"`` — the aggregation operator (``final``) is pinned to
+      ``devices[0]`` (it owns the sink the host blocks on); upstream
+      enrichment operators cycle over the *remaining* devices so independent
+      branches land on distinct hardware (falls back to ``devices[0]`` when
+      only one device exists).
+
+    Accepts a mesh-slice style device list (e.g. one row of a production
+    mesh) via ``devices``; defaults to ``jax.devices()``.
+    """
+    devices = list(devices) if devices is not None else list(jax.devices())
+    if not devices:
+        raise ValueError("no devices to place operators on")
+    names = list(names)
+    if final not in names:
+        raise ValueError("final operator %r not in %r" % (final, names))
+    if strategy == "single":
+        return {n: devices[0] for n in names}
+    if strategy != "round_robin":
+        raise ValueError("unknown placement strategy %r" % strategy)
+    placement = {final: devices[0]}
+    workers = devices[1:] or devices
+    for i, name in enumerate(n for n in names if n != final):
+        placement[name] = workers[i % len(workers)]
+    return placement

@@ -1,0 +1,150 @@
+"""Bounded device ring-buffer channels (repro.core.channel).
+
+Push/pop/overflow semantics under jit with donated state, FIFO ordering
+through ring wraparound, and the merge_streams fast paths the channel-fed
+runtimes rely on for bit-exact parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel
+from repro.core.rdf import make_triples, sort_by_timestamp
+from repro.core.stream import merge_streams
+
+
+def _payload(x: float):
+    """A small pytree payload: vector + scalar leaf."""
+    return {"vec": jnp.full((4,), x, jnp.float32),
+            "n": jnp.asarray(int(x), jnp.int32)}
+
+
+def test_push_pop_roundtrip_under_jit():
+    ch = channel.make_channel(_payload(0.0), capacity=3)
+    assert ch.capacity == 3
+    for i in (1, 2):
+        ch = channel.push_jit(ch, _payload(float(i)))
+    assert int(channel.occupancy(ch)) == 2
+    ch, got, ok = channel.pop_jit(ch)
+    assert bool(ok) and int(got["n"]) == 1
+    assert np.allclose(np.asarray(got["vec"]), 1.0)
+    ch, got, ok = channel.pop_jit(ch)
+    assert bool(ok) and int(got["n"]) == 2
+    assert int(channel.occupancy(ch)) == 0
+    assert int(ch.overflows) == 0
+
+
+def test_overflow_drops_new_payload_and_counts():
+    ch = channel.make_channel(_payload(0.0), capacity=2)
+    for i in (1, 2, 3, 4):        # 3 and 4 must be dropped, 1 and 2 kept
+        ch = channel.push_jit(ch, _payload(float(i)))
+    assert int(ch.size) == 2
+    assert int(ch.overflows) == 2
+    ch, got, ok = channel.pop_jit(ch)
+    assert bool(ok) and int(got["n"]) == 1
+    ch, got, ok = channel.pop_jit(ch)
+    assert bool(ok) and int(got["n"]) == 2
+
+
+def test_pop_empty_is_invalid_zero_and_state_stable():
+    ch = channel.make_channel(_payload(0.0), capacity=2)
+    ch, got, ok = channel.pop_jit(ch)
+    assert not bool(ok)
+    assert int(got["n"]) == 0 and np.allclose(np.asarray(got["vec"]), 0.0)
+    assert int(ch.size) == 0 and int(ch.head) == 0
+    # push after an empty pop still lands in slot order
+    ch = channel.push_jit(ch, _payload(7.0))
+    ch, got, ok = channel.pop_jit(ch)
+    assert bool(ok) and int(got["n"]) == 7
+
+
+def test_fifo_through_ring_wraparound():
+    ch = channel.make_channel(_payload(0.0), capacity=2)
+    seen = []
+    nxt = 1
+    for _ in range(5):            # 5 push/pop cycles >> capacity: head wraps
+        ch = channel.push_jit(ch, _payload(float(nxt)))
+        nxt += 1
+        ch, got, ok = channel.pop_jit(ch)
+        assert bool(ok)
+        seen.append(int(got["n"]))
+    assert seen == [1, 2, 3, 4, 5]
+    assert int(ch.overflows) == 0
+
+
+def test_push_pop_compose_inside_one_jit_program():
+    """An operator step embeds pop+compute+push in one donated program."""
+
+    def step(ch_in, ch_out):
+        ch_in, x, ok = channel.pop(ch_in)
+        y = jax.tree.map(lambda v: v * 2, x)
+        ch_out = channel.push(ch_out, y)
+        return ch_in, ch_out
+
+    step_jit = jax.jit(step, donate_argnums=(0, 1))
+    ch_a = channel.make_channel(_payload(0.0), capacity=2)
+    ch_b = channel.make_channel(_payload(0.0), capacity=2)
+    ch_a = channel.push_jit(ch_a, _payload(3.0))
+    ch_a, ch_b = step_jit(ch_a, ch_b)
+    ch_b, got, ok = channel.pop_jit(ch_b)
+    assert bool(ok) and int(got["n"]) == 6
+    assert int(ch_a.size) == 0
+
+
+def test_capacity_must_be_positive():
+    with pytest.raises(ValueError):
+        channel.make_channel(_payload(0.0), capacity=0)
+
+
+# --------------------------------------------------------------------------
+# merge_streams fast paths (the per-chunk hot path feeding every channel)
+# --------------------------------------------------------------------------
+
+def _rows(ts_graph):
+    return make_triples(
+        [(10 + i, 1, 20 + i, t, g) for i, (t, g) in enumerate(ts_graph)]
+    )
+
+
+def test_merge_single_ordered_input_is_identity():
+    chunk = _rows([(1, 1), (2, 2), (2, 2), (5, 3)])
+    out = merge_streams([chunk])
+    for a, b in zip(out, chunk):
+        assert bool(jnp.all(a == b))
+
+
+def test_merge_single_unordered_input_still_sorts():
+    chunk = _rows([(5, 3), (1, 1), (2, 2)])
+    out = merge_streams([chunk])
+    want = sort_by_timestamp(chunk)
+    for a, b in zip(out, want):
+        assert bool(jnp.all(a == b))
+
+
+def test_merge_graph_tie_break_not_skipped():
+    """Equal ts but descending graph ids must NOT take the identity path."""
+    chunk = _rows([(2, 9), (2, 1)])
+    out = merge_streams([chunk])
+    want = sort_by_timestamp(chunk)
+    for a, b in zip(out, want):
+        assert bool(jnp.all(a == b))
+    assert int(out.graph[0]) == 1
+
+
+def test_merge_multi_input_matches_sort_of_concat():
+    a = _rows([(1, 1), (4, 2)])
+    b = _rows([(2, 3), (3, 4)])
+    from repro.core.rdf import concat_triples
+    out = merge_streams([a, b])
+    want = sort_by_timestamp(concat_triples([a, b]))
+    for x, y in zip(out, want):
+        assert bool(jnp.all(x == y))
+
+
+def test_merge_invalid_rows_compact_to_tail():
+    chunk = _rows([(3, 1), (1, 2)])
+    chunk = chunk._replace(valid=jnp.asarray([True, False]))
+    out = merge_streams([chunk])
+    assert bool(out.valid[0]) and not bool(out.valid[1])
+    assert int(out.ts[0]) == 3

@@ -188,7 +188,7 @@ def test_runtime_fused_end_to_end(world):
         rt = DSCEPRuntime(decompose(q, vocab), kbd.kb, vocab, cfg)
         outs[fused] = [
             sorted((r[0], r[1], r[2]) for r in to_host_rows(out))
-            for out in rt.process_stream(world.chunks)
+            for out in rt.process_stream(world.chunks)[0]
         ]
     assert outs[True] == outs[False]
 

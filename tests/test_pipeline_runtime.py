@@ -1,0 +1,182 @@
+"""PipelinedRuntime == DSCEPRuntime == MonolithicRuntime (the dataflow layer).
+
+The streaming runtime cuts the DAG at channel boundaries instead of fusing
+it into one XLA program; results must stay **bit-identical** per chunk on
+all three paper queries, with >= 2 chunks in flight, including when window
+capacities overflow (flags must match too, never be dropped).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import paper_queries as PQ
+from repro.core.pipeline import PipelinedRuntime
+from repro.core.planner import decompose
+from repro.core.rdf import Vocab, to_host_rows
+from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+from repro.launch.mesh import place_operators
+
+CFG = RuntimeConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                    scan_cap=128, out_cap=1024, intermediate_cap=512)
+QUERIES = {"q15": PQ.q15, "q16": PQ.q16, "cquery1": PQ.cquery1}
+
+
+class PipeWorld:
+    """Co-mention stream split into several chunks (multi-chunk pipelining)."""
+
+    def __init__(self, num_tweets=36, seed=0):
+        self.vocab = Vocab()
+        self.kbd = generate_kb(
+            self.vocab,
+            KBConfig(num_artists=24, num_shows=12, filler_triples=80,
+                     seed=seed),
+        )
+        self.tweets = TweetSchema.create(self.vocab)
+        pool = np.concatenate([self.kbd.artist_ids, self.kbd.show_ids])
+        self.rows = generate_tweets(
+            self.vocab, self.tweets, pool,
+            TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                              mentions_max=3, seed=seed),
+        )
+        self.chunks = list(stream_chunks(self.rows, 96))
+
+
+@pytest.fixture(scope="module")
+def pworld():
+    w = PipeWorld()
+    assert len(w.chunks) >= 3, "need a multi-chunk stream to pipeline"
+    return w
+
+
+_RT_CACHE = {}
+
+
+def runtimes(world, qname, cfg=CFG):
+    """(single-program, pipelined) runtimes for one query, built once."""
+    key = (qname, cfg)     # RuntimeConfig is frozen, hence hashable
+    if key not in _RT_CACHE:
+        q = QUERIES[qname](world.vocab, world.tweets, world.kbd.schema)
+        dag = decompose(q, world.vocab)
+        single = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
+        piped = PipelinedRuntime(
+            dag, world.kbd.kb, world.vocab, cfg,
+            placement=place_operators(list(dag.subqueries), dag.final),
+        )
+        _RT_CACHE[key] = (q, single, piped)
+    return _RT_CACHE[key]
+
+
+def assert_bit_identical(outs_a, outs_b, tag=""):
+    assert len(outs_a) == len(outs_b)
+    for i, (a, b) in enumerate(zip(outs_a, outs_b)):
+        for col_a, col_b in zip(a, b):
+            assert bool(np.all(np.asarray(col_a) == np.asarray(col_b))), (
+                f"{tag} chunk {i} diverges")
+
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_pipelined_bit_identical_to_single_program(pworld, qname):
+    q, single, piped = runtimes(pworld, qname)
+    outs_s, ovf_s = single.process_stream(pworld.chunks)
+    outs_p, ovf_p = piped.process_stream(pworld.chunks)
+    assert_bit_identical(outs_s, outs_p, qname)
+    # per-call overflow deltas match even on a reused (module-scoped) runtime
+    assert ovf_p == ovf_s
+    # and the paper's claim transitively: pipelined == monolithic result set
+    mono = MonolithicRuntime(q, pworld.kbd.kb, CFG)
+    res_m, res_p = [], []
+    for c, o in zip(pworld.chunks, outs_p):
+        res_m += sorted(set((r[0], r[1], r[2])
+                            for r in to_host_rows(mono.process_chunk(c)[0])))
+        res_p += sorted(set((r[0], r[1], r[2]) for r in to_host_rows(o)))
+    assert len(res_p) > 0
+    assert sorted(res_m) == sorted(res_p)
+
+
+def test_schedule_keeps_two_chunks_in_flight(pworld):
+    """Manual drive of the software-pipelined schedule: the sink consumes
+    chunk t only after chunk t+1's producers were dispatched."""
+    _, single, piped = runtimes(pworld, "q15")
+    outs_s, _ = single.process_stream(pworld.chunks)
+    outs_p = []
+    max_in_flight = 0
+    try:
+        for c in pworld.chunks:
+            if piped._in_flight >= 2:
+                outs_p.append(piped.drain())
+            piped.feed(c)
+            max_in_flight = max(max_in_flight, piped._in_flight)
+    finally:
+        while piped._in_flight:       # never leave the cached runtime dirty
+            outs_p.append(piped.drain())
+    jax.block_until_ready(outs_p[-1])
+    assert max_in_flight >= 2
+    assert_bit_identical(outs_s, outs_p, "q15 manual schedule")
+
+
+def test_overflow_case_flags_match_and_streams_stay_identical(pworld):
+    """Capacities small enough to clip: both runtimes must report the same
+    per-operator overflowed-window counts (observable, never dropped) and
+    still publish bit-identical (clipped) streams."""
+    tiny = RuntimeConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                         scan_cap=128, out_cap=16, intermediate_cap=8)
+    q, single, piped = runtimes(pworld, "cquery1", tiny)
+    outs_s, ovf_s = single.process_stream(pworld.chunks)
+    outs_p, ovf_p = piped.process_stream(pworld.chunks)
+    assert sum(ovf_s.values()) > 0, "intended an overflowing configuration"
+    assert ovf_p == ovf_s
+    assert_bit_identical(outs_s, outs_p, "cquery1 overflow")
+
+
+def test_channels_drained_and_lossless_after_stream(pworld):
+    _, _, piped = runtimes(pworld, "q15")
+    piped.process_stream(pworld.chunks)
+    for edge, st in piped.channel_stats().items():
+        assert st["size"] == 0, edge
+        assert st["overflows"] == 0, edge
+
+
+def test_driver_misuse_raises(pworld):
+    _, _, piped = runtimes(pworld, "q16")
+    with pytest.raises(RuntimeError):
+        piped.drain()
+    try:
+        piped.feed(pworld.chunks[0])
+        piped.feed(pworld.chunks[1])
+        with pytest.raises(RuntimeError):
+            piped.feed(pworld.chunks[2])       # channels full at capacity 2
+        with pytest.raises(RuntimeError):
+            piped.process_stream(pworld.chunks)   # in-flight would leak in
+        with pytest.raises(RuntimeError):
+            piped.process_chunk(pworld.chunks[2])
+    finally:
+        while piped._in_flight:       # never leave the cached runtime dirty
+            piped.drain()
+
+
+def test_pipeline_requires_double_buffering(pworld):
+    q = QUERIES["q15"](pworld.vocab, pworld.tweets, pworld.kbd.schema)
+    dag = decompose(q, pworld.vocab)
+    with pytest.raises(ValueError):
+        PipelinedRuntime(dag, pworld.kbd.kb, pworld.vocab, CFG,
+                         channel_capacity=1)
+
+
+def test_place_operators_policies():
+    names = ["a_kb0", "b_kb1", "agg"]
+    devs = ["d0", "d1", "d2"]
+    single = place_operators(names, "agg", devices=devs, strategy="single")
+    assert single == {"a_kb0": "d0", "b_kb1": "d0", "agg": "d0"}
+    rr = place_operators(names, "agg", devices=devs)
+    assert rr["agg"] == "d0"                       # sink on the host device
+    assert rr["a_kb0"] == "d1" and rr["b_kb1"] == "d2"
+    one = place_operators(names, "agg", devices=["d0"])
+    assert set(one.values()) == {"d0"}
+    with pytest.raises(ValueError):
+        place_operators(names, "missing", devices=devs)
+    with pytest.raises(ValueError):
+        place_operators(names, "agg", devices=[])
