@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.core.rdf import Vocab
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
@@ -61,6 +62,14 @@ def build_world(
                           mentions_max=4, seed=seed),
     )
     return BenchWorld(vocab, kbd, tweets, list(stream_chunks(rows, chunk_capacity)))
+
+
+def make_session(world: BenchWorld, config: ExecutionConfig,
+                 kb=None) -> Session:
+    """A Session over this world's vocab + KB (``kb=`` overrides the KB —
+    step1 swaps between the pruned used-KB slice and the full KB)."""
+    return Session(config, vocab=world.vocab,
+                   kb=kb if kb is not None else world.kbd.kb)
 
 
 def _block(x):

@@ -1,15 +1,14 @@
 """Sustained-throughput benchmark for the dataflow runtime -> BENCH_pipeline.json.
 
-Compares three execution modes of the same decomposed CQuery1 over the same
-multi-chunk stream:
+Compares the three ``ExecutionConfig.mode`` settings of the same CQuery1
+over the same multi-chunk stream, all driven through one ``Session`` API:
 
 * ``monolithic`` — one operator, full KB, chunk-at-a-time (paper Table 2
   baseline);
-* ``single_program`` — :class:`DSCEPRuntime`: the whole DAG fused into one
-  XLA program, chunks pushed synchronously one at a time;
-* ``pipelined`` — :class:`PipelinedRuntime`: per-operator jitted steps over
-  bounded device channels, software-pipelined schedule with 2 chunks in
-  flight, sink-only blocking.
+* ``single_program`` — the whole DAG fused into one XLA program, chunks
+  pushed synchronously one at a time;
+* ``pipelined`` — per-operator jitted steps over bounded device channels,
+  software-pipelined schedule with 2 chunks in flight, sink-only blocking.
 
 Asserts (a) zero overflowed windows in every mode — capacity overruns would
 silently clip results, so the satellite observability hook is exercised here
@@ -31,12 +30,9 @@ import jax
 import numpy as np
 
 from repro.core import paper_queries as PQ
-from repro.core.pipeline import PipelinedRuntime
-from repro.core.planner import decompose
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
-from repro.launch.mesh import place_operators
+from repro.core.session import ExecutionConfig
 
-from .common import build_world, format_table
+from .common import build_world, format_table, make_session
 
 CHANNEL_CAPACITY = 2
 
@@ -64,62 +60,63 @@ def run(iters: Optional[int] = None, smoke: bool = False):
     if smoke:
         world = build_world(num_tweets=32, num_artists=16, num_shows=8,
                             filler=100, chunk_capacity=192)
-        cfg = RuntimeConfig(window_capacity=64, max_windows=4, bind_cap=512,
-                            scan_cap=128, out_cap=512, intermediate_cap=256)
+        base = ExecutionConfig(window_capacity=64, max_windows=4, bind_cap=512,
+                               scan_cap=128, out_cap=512, intermediate_cap=256,
+                               channel_capacity=CHANNEL_CAPACITY)
     else:
         world = build_world(num_tweets=256, num_artists=64, num_shows=32,
                             filler=2000, chunk_capacity=1024)
-        cfg = RuntimeConfig(window_capacity=256, max_windows=4, bind_cap=2048,
-                            scan_cap=512, out_cap=2048, intermediate_cap=1024)
+        base = ExecutionConfig(window_capacity=256, max_windows=4,
+                               bind_cap=2048, scan_cap=512, out_cap=2048,
+                               intermediate_cap=1024,
+                               channel_capacity=CHANNEL_CAPACITY)
 
     q = PQ.cquery1(world.vocab, world.tweets, world.kbd.schema)
-    dag = decompose(q, world.vocab)
     chunks = world.chunks
     print(f"[bench_pipeline] cquery1, {len(chunks)} chunks, "
           f"smoke={smoke}, iters={iters}")
 
-    mono = MonolithicRuntime(q, world.kbd.kb, cfg)
-    single = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
-    piped = PipelinedRuntime(
-        dag, world.kbd.kb, world.vocab, cfg,
-        placement=place_operators(list(dag.subqueries), dag.final),
-        channel_capacity=CHANNEL_CAPACITY,
-    )
+    # one Session per execution mode — the unified API this benchmark compares
+    mono = make_session(world, base.replace(mode="monolithic")).register(q)
+    single = make_session(world, base.replace(mode="single_program")).register(q)
+    piped = make_session(world, base.replace(mode="pipelined")).register(q)
 
     # -- correctness gate: bit-identical streams, zero overflow -------------
-    outs_single, ovf_single = single.process_stream(chunks)
-    outs_piped, ovf_piped = piped.process_stream(chunks)
-    assert len(outs_single) == len(outs_piped)
-    for i, (a, b) in enumerate(zip(outs_single, outs_piped)):
-        for col_a, col_b in zip(a, b):
+    outs_single, ovf_single = single.run(chunks)
+    outs_piped, ovf_piped = piped.run(chunks)
+    outs_mono, ovf_mono = mono.run(chunks)
+    assert len(outs_single) == len(outs_piped) == len(outs_mono)
+    for i, (a, b, c) in enumerate(zip(outs_single, outs_piped, outs_mono)):
+        for col_a, col_b, col_c in zip(a, b, c):
             assert bool(np.all(np.asarray(col_a) == np.asarray(col_b))), (
                 "pipelined chunk %d diverges from single-program" % i)
-    mono_ovf = sum(
-        int(np.asarray(mono.process_chunk(c)[1]).sum()) for c in chunks)
-    for label, ovf in [("monolithic", {"mono": mono_ovf}),
+            assert bool(np.all(np.asarray(col_a) == np.asarray(col_c))), (
+                "monolithic chunk %d diverges from single-program" % i)
+    for label, ovf in [("monolithic", ovf_mono),
                        ("single_program", ovf_single),
                        ("pipelined", ovf_piped)]:
         clipped = {n: c for n, c in ovf.items() if c}
         assert not clipped, (
             "%s overflowed windows %s — raise capacities, the benchmark "
             "would be comparing clipped result sets" % (label, clipped))
-    dropped = {e: s["overflows"] for e, s in piped.channel_stats().items()
+    dropped = {e: s["overflows"]
+               for e, s in piped.runtime.channel_stats().items()
                if s["overflows"]}
     assert not dropped, "channel drops under the deterministic schedule: %s" % dropped
-    print("[bench_pipeline] pipelined == single-program bit-exact over "
+    print("[bench_pipeline] all three modes bit-exact over "
           f"{len(chunks)} chunks, zero overflow in all modes")
 
     # -- throughput ----------------------------------------------------------
     def mono_pass():
-        return [mono.process_chunk(c)[0] for c in chunks]
+        return mono.run(chunks)[0]
 
     def single_pass():
-        return single.process_stream(chunks)[0]
+        return single.run(chunks)[0]
 
     def piped_pass():
         # same drive loop as the correctness gate above (sink-only blocking
         # lives inside process_stream; _throughput's block is then a no-op)
-        return piped.process_stream(chunks)[0]
+        return piped.run(chunks)[0]
 
     results = {
         "monolithic": _throughput(mono_pass, len(chunks), iters),
@@ -135,9 +132,9 @@ def run(iters: Optional[int] = None, smoke: bool = False):
                        ["mode", "stream pass (median)", "chunks/s"], rows))
 
     payload = {
-        "what": "sustained chunks/sec over one stream pass: monolithic vs "
-                "single-program DAG (DSCEPRuntime) vs pipelined dataflow "
-                "(PipelinedRuntime, 2 chunks in flight, sink-only blocking)",
+        "what": "sustained chunks/sec over one stream pass, one Session per "
+                "ExecutionConfig mode: monolithic vs single-program DAG vs "
+                "pipelined dataflow (2 chunks in flight, sink-only blocking)",
         "query": "cquery1",
         "num_chunks": len(chunks),
         "channel_capacity": CHANNEL_CAPACITY,

@@ -16,18 +16,22 @@ import numpy as np
 
 from repro.core import paper_queries as PQ
 from repro.core.planner import prune_kb_for
-from repro.core.runtime import MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig
 
-from .common import BenchWorld, build_world, format_table, ms, save_results, time_fn
+from .common import (
+    BenchWorld, build_world, format_table, make_session, ms, save_results,
+    time_fn,
+)
 
 WINDOW_CAP = 256
 MAX_WINDOWS = 4
 
 
-def _runtime_cfg(method: str) -> RuntimeConfig:
-    return RuntimeConfig(
-        window_capacity=WINDOW_CAP, max_windows=MAX_WINDOWS,
-        bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=method,
+def _exec_cfg(method: str) -> ExecutionConfig:
+    return ExecutionConfig(
+        mode="monolithic", window_capacity=WINDOW_CAP,
+        max_windows=MAX_WINDOWS, bind_cap=2048, scan_cap=512, out_cap=2048,
+        kb_method=method,
     )
 
 
@@ -45,14 +49,13 @@ def run(world: BenchWorld = None, iters: int = 5) -> dict:
         used_kb = prune_kb_for(q, full_kb)
         used = int(np.asarray(used_kb.count()))
         for method in ("scan", "probe"):
-            cfg = _runtime_cfg(method)
             # scan ≙ engine-attached extracted KB slice (total == used);
             # probe ≙ endpoint holding the full KB (total == |full KB|).
             kb = used_kb if method == "scan" else full_kb
             total = used if method == "scan" else total_full
-            rt = MonolithicRuntime(q, kb, cfg)
+            reg = make_session(world, _exec_cfg(method), kb=kb).register(q)
             chunk = world.chunks[0]
-            t = time_fn(lambda c: rt.process_chunk(c)[0], chunk, iters=iters)
+            t = time_fn(lambda c: reg.process_chunk(c)[0], chunk, iters=iters)
             n_valid = int(np.asarray(chunk.valid.sum()))
             n_windows = min(MAX_WINDOWS, -(-n_valid // WINDOW_CAP))
             per_window = t["median_s"] / n_windows

@@ -16,19 +16,21 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import paper_queries as PQ
-from repro.core.planner import decompose
 from repro.core.rdf import to_host_rows
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig
 
-from .common import BenchWorld, build_world, format_table, ms, save_results, time_fn
+from .common import (
+    BenchWorld, build_world, format_table, make_session, ms, save_results,
+    time_fn,
+)
 
 WINDOW_CAP = 256
 MAX_WINDOWS = 4
 
 
-def _cfg(method: str) -> RuntimeConfig:
-    return RuntimeConfig(
-        window_capacity=WINDOW_CAP, max_windows=MAX_WINDOWS,
+def _cfg(method: str, mode: str) -> ExecutionConfig:
+    return ExecutionConfig(
+        mode=mode, window_capacity=WINDOW_CAP, max_windows=MAX_WINDOWS,
         bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=method,
     )
 
@@ -46,14 +48,14 @@ def run(world: BenchWorld = None, iters: int = 5) -> dict:
     results = {}
 
     for method in ("scan", "probe"):
-        cfg = _cfg(method)
-        mono = MonolithicRuntime(q, world.kbd.kb, cfg)
-        dag = decompose(q, world.vocab)
-        split = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
+        cfg = _cfg(method, "single_program")
+        mono = make_session(world, _cfg(method, "monolithic")).register(q)
+        reg = make_session(world, cfg).register(q)
+        split, dag = reg.runtime, reg.dag
 
         # -- results must be identical (paper: "All results are the same")
         res_m = _results(mono.process_chunk(chunk)[0])
-        res_s = _results(split.process_chunk(chunk)[0])
+        res_s = _results(reg.process_chunk(chunk)[0])
         assert res_m == res_s and len(res_m) > 0, "decomposition changed results!"
 
         # -- Table 2: monolithic

@@ -16,18 +16,21 @@ import numpy as np
 
 from repro.core import paper_queries as PQ
 from repro.core.planner import decompose, prune_kb_for
-from repro.core.runtime import MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig
 
-from .common import build_world, format_table, ms, save_results, time_fn
+from .common import (
+    build_world, format_table, make_session, ms, save_results, time_fn,
+)
 
 WINDOW_CAP = 256
 MAX_WINDOWS = 4
 
 
-def _cfg(method: str) -> RuntimeConfig:
-    return RuntimeConfig(
-        window_capacity=WINDOW_CAP, max_windows=MAX_WINDOWS,
-        bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=method,
+def _cfg(method: str) -> ExecutionConfig:
+    return ExecutionConfig(
+        mode="monolithic", window_capacity=WINDOW_CAP,
+        max_windows=MAX_WINDOWS, bind_cap=2048, scan_cap=512, out_cap=2048,
+        kb_method=method,
     )
 
 
@@ -57,8 +60,8 @@ def sweep_used(iters: int = 3) -> dict:
         chunk = world.chunks[0]
         for key, q in _subqueries(world).items():
             kb = prune_kb_for(q, world.kbd.kb)     # used == total
-            rt = MonolithicRuntime(q, kb, _cfg("scan"))
-            t = time_fn(lambda c: rt.process_chunk(c)[0], chunk, iters=iters)
+            reg = make_session(world, _cfg("scan"), kb=kb).register(q)
+            t = time_fn(lambda c: reg.process_chunk(c)[0], chunk, iters=iters)
             out[key].append({
                 "used_kb": int(np.asarray(kb.count())),
                 "time_s": t["median_s"],
@@ -77,8 +80,8 @@ def sweep_total(iters: int = 3) -> dict:
         chunk = world.chunks[0]
         for key, q in _subqueries(world).items():
             for method in ("scan", "probe"):
-                rt = MonolithicRuntime(q, world.kbd.kb, _cfg(method))
-                t = time_fn(lambda c: rt.process_chunk(c)[0], chunk, iters=iters)
+                reg = make_session(world, _cfg(method)).register(q)
+                t = time_fn(lambda c: reg.process_chunk(c)[0], chunk, iters=iters)
                 used = int(np.asarray(prune_kb_for(q, world.kbd.kb).count()))
                 out[method][key].append({
                     "total_kb": int(np.asarray(world.kbd.kb.count())),

@@ -1,21 +1,38 @@
-"""Quickstart: the DSCEP public API in ~60 lines.
+"""Quickstart: the DSCEP public API in ~50 lines.
 
-Builds a tiny tweet stream + knowledge base, declares a semantic continuous
-query (hierarchy reasoning against the KB), lets the planner decompose it
-into SCEP operators with pruned used-KB slices, and streams data through.
+Builds a tiny tweet stream + knowledge base, states a *semantic* continuous
+query as C-SPARQL text (hierarchy reasoning against the KB), and lets the
+Session facade do the rest: parse -> decompose into SCEP operators with
+pruned used-KB slices -> execute in the configured mode.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import query as Q
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
 )
+
+# the continuous query: tweets mentioning any MusicalArtist subclass
+# (rdfs:subClassOf* reasoning over the KB — a SCEP query, not plain CEP)
+ARTIST_MENTIONS_RQ = """
+REGISTER QUERY artist_mentions AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>
+PREFIX rdfs: <http://www.w3.org/2000/01/rdf-schema#>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT { ?tweet out:artistTweet ?ent . }
+FROM STREAM <stream> [RANGE TRIPLES 128 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?ent .
+  GRAPH <kb> { ?ent rdf:type/rdfs:subClassOf* dbo:MusicalArtist . }
+}
+"""
 
 
 def main():
@@ -32,40 +49,23 @@ def main():
                            TweetStreamConfig(num_tweets=32))
     chunks = list(stream_chunks(rows, 256))
 
-    # 4. a continuous query: tweets mentioning any MusicalArtist subclass
-    #    (rdfs:subClassOf reasoning over the KB — a SCEP query, not plain CEP)
-    q = Q.Query(
-        name="artist_mentions",
-        where=(
-            Q.Pattern(Q.Var("tweet"), Q.Const(tweets.mentions),
-                      Q.Var("ent"), Q.STREAM),
-            Q.FilterSubclass("ent", kbd.schema.rdf_type,
-                             kbd.schema.subclass_of,
-                             kbd.schema.musical_artist),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("tweet"),
-                                Q.Const(vocab.pred("out:artistTweet")),
-                                Q.Var("ent")),
-        ),
-    )
+    # 4. one Session = one ExecutionConfig over any execution mode
+    #    ("single_program" decomposes into the SCEP operator DAG; swap to
+    #    "monolithic" or "pipelined" without touching anything else)
+    sess = Session(ExecutionConfig(mode="single_program", window_capacity=128,
+                                   max_windows=4),
+                   vocab=vocab, kb=kbd.kb)
+    reg = sess.register(ARTIST_MENTIONS_RQ)
 
-    # 5. decompose into the SCEP operator DAG; each KB operator receives only
-    #    its used-KB slice (the paper's core technique)
-    dag = decompose(q, vocab)
-    rt = DSCEPRuntime(dag, kbd.kb, vocab, RuntimeConfig(
-        window_capacity=128, max_windows=4))
-    for name, op in rt.operators.items():
+    # 5. each KB operator received only its used-KB slice (the paper's core
+    #    technique); inspect the decomposition
+    for name, op in reg.operators.items():
         used = "--" if op.kb is None else int(np.asarray(op.kb.count()))
         print(f"operator {name:28s} used-KB: {used} "
               f"(full KB: {int(np.asarray(kbd.kb.count()))})")
 
     # 6. stream the chunks through
-    total = 0
-    for chunk in chunks:
-        out, _ = rt.process_chunk(chunk)
-        res = to_host_rows(out)
-        total += len(res)
+    total = sum(len(to_host_rows(out)) for out in reg.stream(chunks))
     print(f"matched {total} (tweet, out:artistTweet, artist) triples")
     assert total > 0
 

@@ -20,16 +20,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.core import query as Q
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
 )
 from repro.models import lm
 from repro.serve.engine import generate
+
+ARTIST_FILTER_RQ = """
+REGISTER QUERY artist_filter AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX onyx: <urn:dscep:onyx>
+PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>
+PREFIX rdfs: <http://www.w3.org/2000/01/rdf-schema#>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT {
+  ?tweet out:match ?artist .
+  ?tweet out:pos ?pos .
+}
+FROM STREAM <stream> [RANGE TRIPLES 128 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?artist .
+  ?tweet onyx:positiveEmotion ?pos .
+  GRAPH <kb> { ?artist rdf:type/rdfs:subClassOf* dbo:MusicalArtist . }
+}
+"""
 
 
 def main():
@@ -40,31 +59,12 @@ def main():
     tweets = TweetSchema.create(vocab)
     rows = generate_tweets(vocab, tweets, kbd.artist_ids,
                            TweetStreamConfig(num_tweets=24))
-    q = Q.Query(
-        name="artist_filter",
-        where=(
-            Q.Pattern(Q.Var("tweet"), Q.Const(tweets.mentions),
-                      Q.Var("artist"), Q.STREAM),
-            Q.Pattern(Q.Var("tweet"), Q.Const(tweets.sentiment_pos),
-                      Q.Var("pos"), Q.STREAM),
-            Q.FilterSubclass("artist", kbd.schema.rdf_type,
-                             kbd.schema.subclass_of,
-                             kbd.schema.musical_artist),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("tweet"),
-                                Q.Const(vocab.pred("out:match")),
-                                Q.Var("artist")),
-            Q.ConstructTemplate(Q.Var("tweet"),
-                                Q.Const(vocab.pred("out:pos")),
-                                Q.Var("pos")),
-        ),
-    )
-    rt = DSCEPRuntime(decompose(q, vocab), kbd.kb, vocab,
-                      RuntimeConfig(window_capacity=128, max_windows=4))
+    sess = Session(ExecutionConfig(mode="single_program", window_capacity=128,
+                                   max_windows=4),
+                   vocab=vocab, kb=kbd.kb)
+    reg = sess.register(ARTIST_FILTER_RQ)
     matched = []
-    for chunk in stream_chunks(rows, 256):
-        out, _ = rt.process_chunk(chunk)
+    for out in reg.stream(list(stream_chunks(rows, 256))):
         matched += [r for r in to_host_rows(out)
                     if r[1] == vocab.pred("out:match")]
     print(f"[scep] {len(matched)} (tweet, artist) events matched the "

@@ -12,12 +12,41 @@ motivating use case: the query is impossible without background knowledge
 """
 import numpy as np
 
-from repro.core import query as Q
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 from repro.core.kb import kb_from_triples
 from repro.data.tweets import stream_chunks
+
+# continuous query: slow drivers -> street (KB) -> co-located tweet venues.
+# Length-1 KB paths are written parenthesized — ``(map:onStreet)`` — the
+# text form of a PathKB hop; the OPTIONAL mixes a stream pattern with a KB
+# pattern (slow traffic is reported whether or not anyone tweeted about it).
+SLOW_TRAFFIC_RQ = """
+REGISTER QUERY slow_traffic_explained AS
+PREFIX gps: <urn:dscep:gps>
+PREFIX map: <urn:dscep:map>
+PREFIX schema: <urn:dscep:schema>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT {
+  ?street out:slowTraffic ?v .
+  ?street out:possibleCause ?tweet .
+}
+FROM STREAM <stream> [RANGE TRIPLES 256 STEP 1]
+FROM <kb>
+WHERE {
+  ?reading gps:atCell ?cell .
+  ?reading gps:speed ?v .
+  FILTER(?v < 20.00)
+  GRAPH <kb> {
+    ?cell (map:onStreet) ?street .
+    ?street (map:locatedIn) ?district .
+  }
+  OPTIONAL {
+    ?tweet schema:mentions ?venue .
+    GRAPH <kb> { ?venue map:onStreet ?street . }
+  }
+}
+"""
 
 
 def build_map_kb(vocab, n_streets=24, n_districts=4, seed=0):
@@ -89,44 +118,13 @@ def main():
     rows, ss, slow_truth = build_streams(vocab, streets, cells, venues)
     chunks = list(stream_chunks(rows, 512))
 
-    # continuous query: slow drivers -> street (KB) -> co-located tweet venues
-    q = Q.Query(
-        name="slow_traffic_explained",
-        where=(
-            Q.Pattern(Q.Var("reading"), Q.Const(ss["at_cell"]), Q.Var("cell"),
-                      Q.STREAM),
-            Q.Pattern(Q.Var("reading"), Q.Const(ss["speed"]), Q.Var("v"),
-                      Q.STREAM),
-            Q.FilterNum("v", "lt", Vocab.number(20.0)),       # slow!
-            # KB: which street is that cell on, and which district is it in
-            Q.PathKB(Q.Var("cell"), (ks["on_street"],), Q.Var("street")),
-            Q.PathKB(Q.Var("street"), (ks["located_in"],), Q.Var("district")),
-            # OPTIONAL explanation: a tweet mentioning a venue that the KB
-            # locates on the same street (slow traffic is reported whether or
-            # not anyone tweeted about it)
-            Q.OptionalGroup(patterns=(
-                Q.Pattern(Q.Var("tweet"), Q.Const(ss["mentions"]),
-                          Q.Var("venue"), Q.STREAM),
-                Q.Pattern(Q.Var("venue"), Q.Const(ks["on_street"]),
-                          Q.Var("street"), Q.KB),
-            )),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("street"),
-                                Q.Const(vocab.pred("out:slowTraffic")),
-                                Q.Var("v")),
-            Q.ConstructTemplate(Q.Var("street"),
-                                Q.Const(vocab.pred("out:possibleCause")),
-                                Q.Var("tweet")),
-        ),
-    )
-
-    cfg = RuntimeConfig(window_capacity=256, max_windows=4, bind_cap=2048,
-                        scan_cap=512, out_cap=2048)
-    mono = MonolithicRuntime(q, kb, cfg)
-    dag = decompose(q, vocab)
-    split = DSCEPRuntime(dag, kb, vocab, cfg)
-    print(f"operators: {sorted(dag.subqueries)}")
+    cfg = ExecutionConfig(window_capacity=256, max_windows=4, bind_cap=2048,
+                          scan_cap=512, out_cap=2048)
+    mono = Session(cfg.replace(mode="monolithic"), vocab=vocab,
+                   kb=kb).register(SLOW_TRAFFIC_RQ)
+    split = Session(cfg.replace(mode="single_program"), vocab=vocab,
+                    kb=kb).register(SLOW_TRAFFIC_RQ)
+    print(f"operators: {sorted(split.dag.subqueries)}")
 
     slow_pred = vocab.pred("out:slowTraffic")
     flagged, results_m, results_s = set(), [], []

@@ -2,24 +2,35 @@
 
 Where the 10 LM configs describe neural stacks, these presets describe SCEP
 pipeline deployments: window geometry (paper §4.4: "window size is a maximum
-of 1000 RDF triples"), engine capacities, KB-access method and the
-parallelism mode.  ``build_runtime`` assembles the full runtime from a
-preset, a query and a KB, mirroring how ``launch/dscep_run.py`` deploys.
+of 1000 RDF triples"), engine capacities, KB-access method and the execution
+mode — all as one frozen :class:`~repro.core.session.ExecutionConfig`.
+``build_runtime`` assembles a registered :class:`~repro.core.session.Session`
+query from a preset, a query and a KB, mirroring how
+``launch/dscep_run.py`` deploys.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
-from repro.core.runtime import RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 
 
 @dataclasses.dataclass(frozen=True)
 class DSCEPDeployment:
     name: str
-    runtime: RuntimeConfig
-    decomposed: bool = True        # inter-operator parallelism (Fig. 4)
+    config: ExecutionConfig
     description: str = ""
+
+    # legacy accessors (pre-Session presets exposed a RuntimeConfig + a
+    # `decomposed` bool; both are now derived from the ExecutionConfig)
+    @property
+    def runtime(self):
+        return self.config.runtime_config()
+
+    @property
+    def decomposed(self) -> bool:
+        return self.config.mode != "monolithic"
 
 
 _PRESETS: Dict[str, DSCEPDeployment] = {}
@@ -33,10 +44,10 @@ def register_deployment(d: DSCEPDeployment) -> DSCEPDeployment:
 # the paper's evaluation setup (§4.4): 1000-triple windows, scan KB access
 register_deployment(DSCEPDeployment(
     name="paper-eval",
-    runtime=RuntimeConfig(window_capacity=1000, max_windows=8,
-                          bind_cap=4096, scan_cap=1024, out_cap=4096,
-                          kb_method="scan"),
-    decomposed=True,
+    config=ExecutionConfig(mode="single_program",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096,
+                           kb_method="scan"),
     description="Paper §4.4 settings: 1000-triple windows, C-SPARQL-style "
                 "attached-KB scans, automatic Fig. 4 decomposition.",
 ))
@@ -44,10 +55,10 @@ register_deployment(DSCEPDeployment(
 # SERVICE-style endpoint access (the paper's second measured method)
 register_deployment(DSCEPDeployment(
     name="paper-eval-subquery",
-    runtime=RuntimeConfig(window_capacity=1000, max_windows=8,
-                          bind_cap=4096, scan_cap=1024, out_cap=4096,
-                          kb_method="probe"),
-    decomposed=True,
+    config=ExecutionConfig(mode="single_program",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096,
+                           kb_method="probe"),
     description="Paper §4.4 settings with SPARQL-subquery (indexed endpoint) "
                 "KB access.",
 ))
@@ -55,20 +66,31 @@ register_deployment(DSCEPDeployment(
 # container-scale smoke (tests/examples)
 register_deployment(DSCEPDeployment(
     name="smoke",
-    runtime=RuntimeConfig(window_capacity=128, max_windows=4,
-                          bind_cap=1024, scan_cap=128, out_cap=1024),
-    decomposed=True,
+    config=ExecutionConfig(mode="single_program",
+                           window_capacity=128, max_windows=4,
+                           bind_cap=1024, scan_cap=128, out_cap=1024),
     description="Reduced capacities for CPU smoke runs.",
 ))
 
 # monolithic baseline (paper Table 2)
 register_deployment(DSCEPDeployment(
     name="monolithic",
-    runtime=RuntimeConfig(window_capacity=1000, max_windows=8,
-                          bind_cap=4096, scan_cap=1024, out_cap=4096),
-    decomposed=False,
+    config=ExecutionConfig(mode="monolithic",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096),
     description="Single-operator execution against the full KB (Table 2 "
                 "baseline).",
+))
+
+# streaming dataflow deployment (operators over device channels)
+register_deployment(DSCEPDeployment(
+    name="pipelined",
+    config=ExecutionConfig(mode="pipelined",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096,
+                           channel_capacity=2),
+    description="Per-operator jitted steps over bounded device channels, "
+                "software-pipelined schedule (2 chunks in flight).",
 ))
 
 
@@ -81,12 +103,12 @@ def deployments() -> Dict[str, DSCEPDeployment]:
 
 
 def build_runtime(preset: str, query, kb, vocab, mesh=None):
-    """Assemble the runtime a launcher would deploy for ``preset``."""
-    from repro.core.planner import decompose
-    from repro.core.runtime import DSCEPRuntime, MonolithicRuntime
+    """Register ``query`` in a Session deploying ``preset``.
 
+    Returns the :class:`~repro.core.session.RegisteredQuery` — the unified
+    drive handle (``process_chunk`` / ``run`` / ``stream``) regardless of
+    the preset's execution mode.
+    """
     d = get_deployment(preset)
-    if d.decomposed:
-        return DSCEPRuntime(decompose(query, vocab), kb, vocab, d.runtime,
-                            mesh=mesh)
-    return MonolithicRuntime(query, kb, d.runtime)
+    cfg = d.config if mesh is None else d.config.replace(mesh=mesh)
+    return Session(cfg, vocab=vocab, kb=kb).register(query)

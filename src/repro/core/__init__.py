@@ -7,17 +7,24 @@ Public surface of the paper's contribution:
 * :mod:`repro.core.kb`      — partitioned, probe-indexed knowledge base
 * :mod:`repro.core.algebra`  — vectorized SPARQL-subset operators
 * :mod:`repro.core.query`    — continuous-query AST
+* :mod:`repro.core.sparql`   — C-SPARQL text frontend (parse / serialize)
 * :mod:`repro.core.planner`  — compile / decompose / prune-used-KB
 * :mod:`repro.core.engine`   — plan executor (the RSP engine)
 * :mod:`repro.core.operator` — SCEP operator (Aggregator→engine→Publisher)
 * :mod:`repro.core.runtime`  — operator-DAG runtime (mono vs decomposed)
 * :mod:`repro.core.channel`  — bounded device ring-buffer channels (edges)
 * :mod:`repro.core.pipeline` — streaming pipelined runtime over channels
+* :mod:`repro.core.session`  — ``Session``/``ExecutionConfig`` facade (the
+  public entry point over every execution mode)
 * :mod:`repro.core.reasoner` — subclass/sameAs reasoning support
 """
-from . import algebra, channel, engine, kb, pattern, pipeline, planner, query, rdf, reasoner, runtime, stream, window  # noqa: F401
+from . import algebra, channel, engine, kb, pattern, pipeline, planner, query, rdf, reasoner, runtime, session, sparql, stream, window  # noqa: F401
+from .session import ExecutionConfig, Session  # noqa: F401
+from .sparql import parse_query, serialize_query  # noqa: F401
 
 __all__ = [
     "algebra", "channel", "engine", "kb", "pattern", "pipeline", "planner",
-    "query", "rdf", "reasoner", "runtime", "stream", "window",
+    "query", "rdf", "reasoner", "runtime", "session", "sparql", "stream",
+    "window",
+    "ExecutionConfig", "Session", "parse_query", "serialize_query",
 ]

@@ -159,6 +159,7 @@ def kb_join_scan(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
     use_pallas: bool = False, fuse_compaction: bool = False,
     bm: Optional[int] = None, bn: Optional[int] = None,
+    interpret: bool = True,
 ) -> Bindings:
     """Join bindings against a KB partition by full scan.
 
@@ -176,11 +177,13 @@ def kb_join_scan(
     if fuse_compaction:
         from repro.kernels.hash_join import ops as hj_ops
         if use_pallas:
-            return hj_ops.join_compact(bind, kb, pat, out_cap, bm=bm, bn=bn)
+            return hj_ops.join_compact(bind, kb, pat, out_cap, bm=bm, bn=bn,
+                                       interpret=interpret)
         return hj_ops.join_compact_jnp(bind, kb, pat, out_cap)
     if use_pallas:
         from repro.kernels.hash_join import ops as hj_ops
-        m = hj_ops.match_matrix(bind, kb, pat, bm=bm, bn=bn)
+        m = hj_ops.match_matrix(bind, kb, pat, bm=bm, bn=bn,
+                                interpret=interpret)
     else:
         m = _kb_scan_match(bind, kb, pat)
     ca, n = m.shape
@@ -249,14 +252,15 @@ def kb_join(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
     method: str = "scan", k_max: int = 8, use_pallas: bool = False,
     fuse_compaction: bool = False, bm: Optional[int] = None,
-    bn: Optional[int] = None,
+    bn: Optional[int] = None, interpret: bool = True,
 ) -> Bindings:
     if method == "probe" and pat.p.mode == SlotMode.CONST and not (
         pat.s.mode == SlotMode.FREE and pat.o.mode == SlotMode.FREE
     ):
         return kb_join_probe(bind, kb, pat, out_cap, k_max)
     return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas,
-                        fuse_compaction=fuse_compaction, bm=bm, bn=bn)
+                        fuse_compaction=fuse_compaction, bm=bm, bn=bn,
+                        interpret=interpret)
 
 
 # --------------------------------------------------------------------------

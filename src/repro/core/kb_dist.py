@@ -44,6 +44,7 @@ def kb_join_sharded(
     fuse_compaction: bool = False,
     bm: int | None = None,
     bn: int | None = None,
+    interpret: bool = True,
 ) -> Bindings:
     """Join replicated bindings against a row-sharded KB partition.
 
@@ -61,7 +62,8 @@ def kb_join_sharded(
         b = Bindings(cols, valid, overflow)
         out = algebra.kb_join(b, kb_local, pat, per_cap, method=method,
                               k_max=k_max, use_pallas=use_pallas,
-                              fuse_compaction=fuse_compaction, bm=bm, bn=bn)
+                              fuse_compaction=fuse_compaction, bm=bm, bn=bn,
+                              interpret=interpret)
         # overflow is global info: reduce the one bool over the KB axis
         ovf = jax.lax.psum(out.overflow.astype(jnp.int32), axis) > 0
         return out.cols[None], out.valid[None], ovf

@@ -1,4 +1,4 @@
-"""The paper's evaluation queries (§4.3) as Query ASTs.
+"""The paper's evaluation queries (§4.3) as C-SPARQL text, parsed at load.
 
 * ``q15`` / ``q16`` — SRBench-adapted first-step queries: hierarchy reasoning
   (rdfs:subClassOf) and a length-3 property path, respectively (Table 1).
@@ -8,48 +8,117 @@
   property path (len 3), CONSTRUCT, UNION, OPTIONAL, hierarchy reasoning and
   KB access (Tables 2-3, Fig. 4).
 
-Builders take the shared vocabulary plus the stream/KB schemas so tests,
-benchmarks and examples all use the identical queries.
+The ``.rq`` text below is the source of truth; each builder parses it with
+:func:`repro.core.sparql.parse_query` against the shared vocabulary, so the
+resulting ASTs are guaranteed equal to the former hand-built dataclass
+builders (tests/test_sparql.py pins both the AST equality and the
+``parse(serialize(q)) == q`` round trip).  Builders keep their historical
+``(vocab, tweet_schema, kb_schema)`` signature: the schema objects intern
+exactly the prefixed names the text references, so creating them against the
+same vocab is what makes the parsed ids line up with the stream/KB encoders.
 """
 from __future__ import annotations
 
 from repro.core import query as Q
 from repro.core.rdf import Vocab
+from repro.core.sparql import parse_query
 from repro.data.dbpedia import KBSchema
 from repro.data.tweets import TweetSchema
+
+Q15_RQ = """\
+REGISTER QUERY q15 AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>
+PREFIX rdfs: <http://www.w3.org/2000/01/rdf-schema#>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT {
+  ?tweet out:artistTweet ?ent .
+}
+FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?ent .
+  GRAPH <kb> {
+    ?ent rdf:type/rdfs:subClassOf* dbo:MusicalArtist .
+  }
+}
+"""
+
+Q16_RQ = """\
+REGISTER QUERY q16 AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT {
+  ?tweet out:code ?cc .
+}
+FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?ent .
+  GRAPH <kb> {
+    ?ent dbo:birthPlace/dbo:country/dbo:countryCode ?cc .
+  }
+}
+"""
+
+CQUERY1_RQ = """\
+REGISTER QUERY cquery1 AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX onyx: <urn:dscep:onyx>
+PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>
+PREFIX rdfs: <http://www.w3.org/2000/01/rdf-schema#>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT {
+  ?artist out:coMentionedWith ?show .
+  ?artist out:posSentiment ?pos .
+  ?artist out:negSentiment ?neg .
+  ?artist out:countryCode ?cc .
+}
+FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?artist .
+  ?tweet schema:mentions ?show .
+  ?tweet onyx:positiveEmotion ?pos .
+  ?tweet onyx:negativeEmotion ?neg .
+  GRAPH <kb> {
+    ?artist rdf:type/rdfs:subClassOf* dbo:MusicalArtist .
+    ?show rdf:type/rdfs:subClassOf* dbo:TelevisionShow .
+    ?artist dbo:birthPlace/dbo:country/dbo:countryCode ?cc .
+  }
+  { ?tweet schema:likes ?eng . } UNION { ?tweet schema:shares ?eng . }
+  OPTIONAL { ?tweet schema:shares ?sh . }
+  FILTER(?pos >= 0.00)
+}
+"""
+
+RQ_TEXTS = {"q15": Q15_RQ, "q16": Q16_RQ, "cquery1": CQUERY1_RQ}
+
+
+def _check_schemas(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> None:
+    # the query text resolves prefixed names against `vocab`; the schema
+    # handles must have been interned in that same vocab or the parsed ids
+    # would silently mismatch the stream/KB encoding
+    if (vocab.pred("schema:mentions") != ts.mentions
+            or vocab.pred("rdf:type") != kbs.rdf_type):
+        raise ValueError(
+            "tweet/KB schema was created against a different Vocab than the "
+            "one given — paper queries need the shared vocabulary")
 
 
 def q15(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
     """All tweets mentioning any entity that is a subclass of MusicalArtist."""
-    return Q.Query(
-        name="q15",
-        where=(
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
-            Q.FilterSubclass("ent", kbs.rdf_type, kbs.subclass_of,
-                             kbs.musical_artist),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("tweet"),
-                                Q.Const(vocab.pred("out:artistTweet")),
-                                Q.Var("ent")),
-        ),
-    )
+    _check_schemas(vocab, ts, kbs)
+    return parse_query(Q15_RQ, vocab)
 
 
 def q16(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
     """For tweets mentioning a musical artist: birthplace -> country -> code."""
-    return Q.Query(
-        name="q16",
-        where=(
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"), Q.STREAM),
-            Q.PathKB(Q.Var("ent"), (kbs.birth_place, kbs.country, kbs.country_code),
-                     Q.Var("cc")),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("tweet"), Q.Const(vocab.pred("out:code")),
-                                Q.Var("cc")),
-        ),
-    )
+    _check_schemas(vocab, ts, kbs)
+    return parse_query(Q16_RQ, vocab)
 
 
 def cquery1(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
@@ -67,50 +136,5 @@ def cquery1(vocab: Vocab, ts: TweetSchema, kbs: KBSchema) -> Q.Query:
     with the sentiment/engagement stream patterns (the QueryC-F analogues run
     as dataflow branches inside the aggregator's compiled plan).
     """
-    return Q.Query(
-        name="cquery1",
-        where=(
-            # -- stream side: co-mention + sentiment --------------------------
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("artist"), Q.STREAM),
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("show"), Q.STREAM),
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_pos), Q.Var("pos"), Q.STREAM),
-            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_neg), Q.Var("neg"), Q.STREAM),
-            # -- KB side: hierarchy reasoning for both classes ----------------
-            Q.FilterSubclass("artist", kbs.rdf_type, kbs.subclass_of,
-                             kbs.musical_artist),
-            Q.FilterSubclass("show", kbs.rdf_type, kbs.subclass_of,
-                             kbs.television_show),
-            # -- KB side: property path of length 3 ---------------------------
-            Q.PathKB(Q.Var("artist"),
-                     (kbs.birth_place, kbs.country, kbs.country_code),
-                     Q.Var("cc")),
-            # -- UNION: engagement signal from likes or shares ----------------
-            Q.UnionGroup(
-                left=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.likes),
-                                Q.Var("eng"), Q.STREAM),),
-                right=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
-                                 Q.Var("eng"), Q.STREAM),),
-            ),
-            # -- OPTIONAL: share count may be absent ---------------------------
-            Q.OptionalGroup(
-                patterns=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
-                                    Q.Var("sh"), Q.STREAM),),
-            ),
-            # -- FILTER: meaningful sentiment only -----------------------------
-            Q.FilterNum("pos", "ge", Vocab.number(0.0)),
-        ),
-        construct=(
-            Q.ConstructTemplate(Q.Var("artist"),
-                                Q.Const(vocab.pred("out:coMentionedWith")),
-                                Q.Var("show")),
-            Q.ConstructTemplate(Q.Var("artist"),
-                                Q.Const(vocab.pred("out:posSentiment")),
-                                Q.Var("pos")),
-            Q.ConstructTemplate(Q.Var("artist"),
-                                Q.Const(vocab.pred("out:negSentiment")),
-                                Q.Var("neg")),
-            Q.ConstructTemplate(Q.Var("artist"),
-                                Q.Const(vocab.pred("out:countryCode")),
-                                Q.Var("cc")),
-        ),
-    )
+    _check_schemas(vocab, ts, kbs)
+    return parse_query(CQUERY1_RQ, vocab)

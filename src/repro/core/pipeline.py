@@ -49,7 +49,9 @@ from .channel import Channel
 from .kb import KnowledgeBase
 from .planner import OperatorDAG
 from .rdf import TripleBatch, Vocab, empty_triples
-from .runtime import RuntimeConfig, augment_windows, build_operators
+from .runtime import (
+    RuntimeConfig, _warn_legacy_constructor, augment_windows, build_operators,
+)
 from .stream import merge_streams
 from .window import Windows, count_windows
 
@@ -96,6 +98,7 @@ class PipelinedRuntime:
         placement: Optional[Dict[str, Any]] = None,
         channel_capacity: int = 2,
     ):
+        _warn_legacy_constructor("PipelinedRuntime", "pipelined")
         if channel_capacity < 2:
             raise ValueError(
                 "pipelining needs channel_capacity >= 2 (double buffering), "

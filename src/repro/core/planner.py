@@ -32,7 +32,9 @@ from .engine import (
 from .kb import KnowledgeBase, prune
 from .pattern import CompiledPattern, Slot, SlotMode
 from .rdf import Vocab
-from .reasoner import descendants, subclass_edges
+from .reasoner import (
+    adjacency_from_edges, build_class_index, descendants, subclass_edges,
+)
 
 
 # --------------------------------------------------------------------------
@@ -91,6 +93,7 @@ def compile_query(
     fuse_compaction: bool = False,
     join_bm: int | None = None,
     join_bn: int | None = None,
+    interpret: bool = True,
 ) -> Plan:
     """Compile the AST into a Plan.
 
@@ -108,7 +111,7 @@ def compile_query(
 
     def _kb_step(cp: CompiledPattern) -> KBJoin:
         return KBJoin(cp, kb_method, k_max, use_pallas, fuse_compaction,
-                      join_bm, join_bn)
+                      join_bm, join_bn, interpret)
 
     def fresh_aux() -> str:
         aux[0] += 1
@@ -259,8 +262,18 @@ def compile_query(
 # environment (closure sets) and KB pruning — the "used KB" machinery
 # --------------------------------------------------------------------------
 
-def prepare_env(q: Q.Query, kb: KnowledgeBase) -> Dict[str, np.ndarray]:
-    """Compute closure sets required by the query's reasoning filters."""
+def prepare_env(
+    q: Q.Query, kb: KnowledgeBase,
+    use_pallas: bool = False, interpret: bool = True,
+) -> Dict[str, np.ndarray]:
+    """Compute closure sets required by the query's reasoning filters.
+
+    ``use_pallas=True`` computes each subclass closure with the fused
+    Pallas closure kernel (:func:`repro.kernels.closure.ops.closure_descendants`)
+    instead of the host-side BFS — ``interpret`` selects the kernel's
+    interpreter vs real-accelerator compilation (the config-plumbed knob).
+    Both paths produce the identical sorted id set.
+    """
     import jax.numpy as jnp
 
     env: Dict[str, np.ndarray] = {}
@@ -268,8 +281,28 @@ def prepare_env(q: Q.Query, kb: KnowledgeBase) -> Dict[str, np.ndarray]:
         if isinstance(item, Q.FilterSubclass):
             edges = subclass_edges(kb, item.subclass_pred)
             key = "closure:%d" % item.super_class
-            env[key] = jnp.asarray(descendants(edges, item.super_class))
+            env[key] = jnp.asarray(_closure_set(
+                edges, item.super_class, use_pallas, interpret))
     return env
+
+
+def _closure_set(
+    edges, root: int, use_pallas: bool, interpret: bool
+) -> np.ndarray:
+    if use_pallas and edges:
+        idx, ids = build_class_index(edges)
+        if root in idx:
+            from repro.kernels.closure import ops as cl_ops
+
+            adj = adjacency_from_edges(edges, idx)
+            dids, count = cl_ops.closure_descendants(
+                np.asarray(adj), idx[root], out_cap=len(ids),
+                interpret=interpret)
+            sel = np.asarray(dids)[: int(count)]
+            return np.sort(ids[sel]).astype(np.uint32)
+        # no subclass edge touches the root: closure is just {root}
+        return np.asarray([root], np.uint32)
+    return descendants(edges, root)
 
 
 def kb_signature(q: Q.Query) -> Tuple[Tuple[int, ...], Dict[int, Set[int]]]:

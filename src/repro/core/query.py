@@ -8,7 +8,7 @@ their source: the windowed stream or the background KB.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,11 +113,14 @@ class Query:
     construct: Tuple[ConstructTemplate, ...]
 
     def variables(self) -> List[str]:
-        out: List[str] = []
+        # dict-as-ordered-set: membership is O(1), first-seen order preserved
+        # (machine-generated queries from the parser can carry thousands of
+        # variable occurrences — `name not in list` scans made this O(n²))
+        out: Dict[str, None] = {}
 
         def add(t: Term):
-            if isinstance(t, Var) and t.name not in out:
-                out.append(t.name)
+            if isinstance(t, Var):
+                out.setdefault(t.name, None)
 
         for item in self.where:
             if isinstance(item, Pattern):
@@ -126,12 +129,8 @@ class Query:
             elif isinstance(item, PathKB):
                 add(item.start)
                 add(item.end)
-            elif isinstance(item, (FilterNum,)):
-                if item.var not in out:
-                    out.append(item.var)
-            elif isinstance(item, FilterSubclass):
-                if item.var not in out:
-                    out.append(item.var)
+            elif isinstance(item, (FilterNum, FilterSubclass)):
+                out.setdefault(item.var, None)
             elif isinstance(item, OptionalGroup):
                 for p in item.patterns:
                     for t in (p.s, p.p, p.o):
@@ -143,7 +142,7 @@ class Query:
         for tpl in self.construct:
             for t in (tpl.s, tpl.p, tpl.o):
                 add(t)
-        return out
+        return list(out)
 
     def kb_predicates(self) -> List[int]:
         preds: List[int] = []

@@ -17,7 +17,10 @@ SPMD equivalent of work-stealing from a backlog.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -61,6 +64,41 @@ class RuntimeConfig:
     # per join from the actual (bind_cap, used-KB capacity, num_vars) via
     # kernels.hash_join.ops.autotune_block_shapes at trace time.
     join_block_shapes: Optional[Tuple[int, int]] = None
+    # Pallas interpret mode for the fused join/closure kernels: True runs
+    # the kernels through the interpreter (works on CPU hosts), False
+    # compiles them for the real accelerator.  Only consulted when
+    # ``use_pallas`` selects a Pallas path.
+    interpret: bool = True
+
+
+# --------------------------------------------------------------------------
+# legacy-constructor deprecation (the Session facade is the public surface)
+# --------------------------------------------------------------------------
+
+_INTERNAL = threading.local()
+
+
+@contextlib.contextmanager
+def _internal_construction():
+    """Marks runtime construction driven by :class:`repro.core.session.Session`
+    (or other in-package facades) so it skips the deprecation warning."""
+    prev = getattr(_INTERNAL, "on", False)
+    _INTERNAL.on = True
+    try:
+        yield
+    finally:
+        _INTERNAL.on = prev
+
+
+def _warn_legacy_constructor(name: str, mode: str) -> None:
+    if getattr(_INTERNAL, "on", False):
+        return
+    warnings.warn(
+        "constructing %s directly is deprecated; use "
+        "repro.core.session.Session(ExecutionConfig(mode=%r)) — the unified "
+        "facade over all execution modes" % (name, mode),
+        DeprecationWarning, stacklevel=3,
+    )
 
 
 def build_operators(
@@ -87,6 +125,7 @@ def build_operators(
             use_pallas=config.use_pallas,
             fuse_compaction=config.fuse_compaction,
             join_bm=join_bm, join_bn=join_bn,
+            interpret=config.interpret,
         )
         # the paper's core move: each operator gets its own used-KB slice
         op_kb = (
@@ -94,7 +133,8 @@ def build_operators(
             if sub.touches_kb
             else None
         )
-        env = prepare_env(sub.query, kb)
+        env = prepare_env(sub.query, kb, use_pallas=config.use_pallas,
+                          interpret=config.interpret)
         operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
     return operators
 
@@ -140,6 +180,7 @@ class DSCEPRuntime:
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
     ):
+        _warn_legacy_constructor("DSCEPRuntime", "single_program")
         self.dag = dag
         self.config = config = config if config is not None else RuntimeConfig()
         self.mesh = mesh
@@ -223,6 +264,7 @@ class MonolithicRuntime:
     """
 
     def __init__(self, q, kb: KnowledgeBase, config: Optional[RuntimeConfig] = None):
+        _warn_legacy_constructor("MonolithicRuntime", "monolithic")
         config = config if config is not None else RuntimeConfig()
         join_bm, join_bn = config.join_block_shapes or (None, None)
         plan = compile_query(
@@ -231,8 +273,10 @@ class MonolithicRuntime:
             use_pallas=config.use_pallas,
             fuse_compaction=config.fuse_compaction,
             join_bm=join_bm, join_bn=join_bn,
+            interpret=config.interpret,
         )
-        env = prepare_env(q, kb)
+        env = prepare_env(q, kb, use_pallas=config.use_pallas,
+                          interpret=config.interpret)
         if config.kb_capacity:
             kb = pad_to(kb, config.kb_capacity)
         self.operator = SCEPOperator(

@@ -1,0 +1,289 @@
+"""The unified execution facade: one ``Session`` over all three runtimes.
+
+Before this module, running a semantic continuous query meant choosing among
+three runtime classes with divergent constructors and drive loops
+(:class:`~repro.core.runtime.MonolithicRuntime` — chunk-at-a-time,
+:class:`~repro.core.runtime.DSCEPRuntime` — whole-DAG single XLA program,
+:class:`~repro.core.pipeline.PipelinedRuntime` — per-operator steps over
+device channels).  ``Session`` collapses that into one code path::
+
+    cfg = ExecutionConfig(mode="pipelined", window_capacity=256)
+    sess = Session(cfg, vocab=vocab, kb=kb)
+    reg = sess.register(open("query.rq").read())     # text or Query AST
+    outs, overflow = reg.run(chunks)                 # whole stream
+    for out in reg.stream(chunks): ...               # incremental
+
+A single frozen :class:`ExecutionConfig` consolidates every knob that was
+spread over ``RuntimeConfig``, ``OperatorConfig`` and per-runtime constructor
+arguments: window geometry, engine capacities, KB-access method, Pallas
+selection (``use_pallas`` / ``fuse_compaction`` / ``interpret``), the mesh
+for SPMD window sharding (``single_program`` mode), and operator placement +
+channel depth (``pipelined`` mode).
+
+All modes produce **bit-identical** output streams for the paper's queries
+(tests/test_session.py pins this for cquery1), so switching ``mode`` is a
+pure deployment decision, never a semantics change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import query as Q
+from .kb import KnowledgeBase
+from .pipeline import PipelinedRuntime
+from .planner import OperatorDAG, decompose
+from .rdf import TripleBatch, Vocab
+from .runtime import (
+    DSCEPRuntime, MonolithicRuntime, RuntimeConfig, _internal_construction,
+)
+from .sparql import ParseInfo, parse_query_info, serialize_query
+
+MODES = ("monolithic", "single_program", "pipelined")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """One frozen config for every execution mode.
+
+    The first block mirrors :class:`~repro.core.runtime.RuntimeConfig` (which
+    itself subsumes :class:`~repro.core.operator.OperatorConfig`); the second
+    block holds the mode selector and the distribution knobs that used to be
+    per-runtime constructor arguments.
+    """
+
+    # -- engine / window geometry (RuntimeConfig superset) ------------------
+    window_capacity: int = 1000
+    max_windows: int = 8
+    out_stream_cap: int = 2048
+    kb_method: str = "scan"            # "scan" | "probe"
+    kb_capacity: Optional[int] = None
+    scan_cap: int = 128
+    bind_cap: int = 256
+    out_cap: int = 512
+    intermediate_cap: int = 512
+    use_pallas: bool = False
+    fuse_compaction: bool = False
+    join_block_shapes: Optional[Tuple[int, int]] = None
+    # Pallas interpret mode: True = interpreter (CPU hosts), False = compile
+    # the fused kernels for the real accelerator
+    interpret: bool = True
+
+    # -- execution mode and distribution ------------------------------------
+    mode: str = "single_program"       # monolithic | single_program | pipelined
+    mesh: Optional[Any] = None         # SPMD window sharding (single_program)
+    data_axis: str = "data"
+    placement: Union[str, Dict[str, Any], None] = "round_robin"  # pipelined
+    channel_capacity: int = 2          # chunks in flight (pipelined)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                "unknown mode %r (expected one of %s)" % (self.mode, list(MODES)))
+        if self.mode == "pipelined" and self.mesh is not None:
+            raise ValueError(
+                "pipelined mode distributes via placement=, not mesh= "
+                "(window sharding belongs to single_program mode)")
+
+    def runtime_config(self) -> RuntimeConfig:
+        """The engine-level slice of this config (shared by every mode)."""
+        return RuntimeConfig(
+            window_capacity=self.window_capacity,
+            max_windows=self.max_windows,
+            out_stream_cap=self.out_stream_cap,
+            kb_method=self.kb_method,
+            kb_capacity=self.kb_capacity,
+            scan_cap=self.scan_cap,
+            bind_cap=self.bind_cap,
+            out_cap=self.out_cap,
+            intermediate_cap=self.intermediate_cap,
+            use_pallas=self.use_pallas,
+            fuse_compaction=self.fuse_compaction,
+            join_block_shapes=self.join_block_shapes,
+            interpret=self.interpret,
+        )
+
+    def replace(self, **changes) -> "ExecutionConfig":
+        return dataclasses.replace(self, **changes)
+
+
+class RegisteredQuery:
+    """A continuous query registered with a :class:`Session`.
+
+    Owns the compiled runtime for the session's execution mode and exposes
+    the unified drive surface: :meth:`run` (whole stream, overflow totals),
+    :meth:`stream` (incremental generator) and :meth:`process_chunk`.
+    """
+
+    def __init__(self, session: "Session", query: Q.Query,
+                 info: Optional[ParseInfo] = None):
+        self.session = session
+        self.query = query
+        self.info = info
+        self.config = session.config
+        self.mode = session.config.mode
+        self.dag: Optional[OperatorDAG] = None
+        self._runtime = self._build_runtime()
+
+    # -- construction --------------------------------------------------------
+    def _build_runtime(self):
+        cfg = self.config
+        rcfg = cfg.runtime_config()
+        vocab, kb = self.session.vocab, self.session.kb
+        if kb is None and self.query.kb_predicates():
+            raise ValueError(
+                "query %r touches the KB (GRAPH <kb> patterns) but the "
+                "Session has no kb= attached" % self.query.name)
+        with _internal_construction():
+            if self.mode == "monolithic":
+                return MonolithicRuntime(self.query, kb, rcfg)
+            self.dag = decompose(self.query, vocab)
+            if self.mode == "single_program":
+                return DSCEPRuntime(self.dag, kb, vocab, rcfg,
+                                    mesh=cfg.mesh, data_axis=cfg.data_axis)
+            placement = cfg.placement
+            if isinstance(placement, str):
+                from repro.launch.mesh import place_operators
+                placement = place_operators(
+                    list(self.dag.subqueries), self.dag.final,
+                    strategy=cfg.placement)
+            return PipelinedRuntime(self.dag, kb, vocab, rcfg,
+                                    placement=placement,
+                                    channel_capacity=cfg.channel_capacity)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def runtime(self):
+        """The underlying runtime object (mode-dependent class)."""
+        return self._runtime
+
+    @property
+    def operators(self) -> Dict[str, Any]:
+        """Name -> SCEPOperator (one entry, the query itself, in monolithic)."""
+        if self.mode == "monolithic":
+            return {self.query.name: self._runtime.operator}
+        return dict(self._runtime.operators)
+
+    @property
+    def text(self) -> str:
+        """Canonical C-SPARQL serialization of the registered query (the
+        original registration's PREFIX IRIs are preserved when parsed from
+        text)."""
+        prefixes = dict(self.info.prefixes) if self.info else None
+        return serialize_query(self.query, self.session.vocab, prefixes)
+
+    # -- unified drive surface ----------------------------------------------
+    def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, int]]:
+        """Push one chunk through; returns (output chunk, overflow counts)."""
+        out, ovf = self._runtime.process_chunk(chunk)
+        return out, self._normalize_overflow(ovf)
+
+    def run(self, chunks: Sequence[TripleBatch]) -> Tuple[List[TripleBatch], Dict[str, int]]:
+        """Push a whole stream through; returns (outputs, overflow totals).
+
+        Every mode returns one output chunk per input chunk, bit-identical
+        across modes; ``overflow[op]`` counts windows whose engine capacities
+        clipped results in operator ``op`` over this stream.
+        """
+        if self.mode == "monolithic":
+            outs: List[TripleBatch] = []
+            acc = jnp.zeros((), jnp.int32)
+            for c in chunks:
+                out, ovf = self._runtime.process_chunk(c)
+                outs.append(out)
+                acc = acc + jnp.sum(ovf.astype(jnp.int32))
+            return outs, {self.query.name: int(acc)}
+        outs, overflow = self._runtime.process_stream(chunks)
+        return outs, dict(overflow)
+
+    def stream(self, chunks: Sequence[TripleBatch]) -> Iterator[TripleBatch]:
+        """Incremental execution: yield one output chunk per input chunk.
+
+        In pipelined mode the schedule keeps ``channel_capacity`` chunks in
+        flight, so outputs trail inputs by the pipeline depth; every mode
+        still yields exactly ``len(chunks)`` outputs in input order.  The
+        pipelined generator requires an idle runtime and drains any chunks
+        left in flight when abandoned early, so a later ``run``/``stream``
+        never sees another call's leftovers.
+        """
+        if self.mode != "pipelined":
+            for c in chunks:
+                yield self._runtime.process_chunk(c)[0]
+            return
+        rt = self._runtime
+        rt._require_idle("stream")
+        depth = self.config.channel_capacity
+        try:
+            for c in chunks:
+                if rt._in_flight >= depth:
+                    yield rt.drain()
+                rt.feed(c)
+            while rt._in_flight:
+                yield rt.drain()
+        finally:
+            while rt._in_flight:      # generator closed mid-stream
+                rt.drain()
+
+    def overflow_totals(self) -> Dict[str, int]:
+        """Lifetime per-operator overflow counts (pipelined mode only keeps
+        device-side accumulators; other modes report via :meth:`run`)."""
+        if self.mode == "pipelined":
+            return self._runtime.overflow_totals()
+        raise NotImplementedError(
+            "lifetime overflow accumulators exist only in pipelined mode; "
+            "use run()'s overflow return value")
+
+    def _normalize_overflow(self, ovf) -> Dict[str, int]:
+        if isinstance(ovf, dict):
+            return {n: int(np.asarray(v).sum()) for n, v in ovf.items()}
+        return {self.query.name: int(np.asarray(ovf).sum())}
+
+
+class Session:
+    """Entry point: register C-SPARQL text (or ASTs) and execute streams.
+
+    ``vocab`` is the shared term interner the stream/KB encoders used (a
+    fresh one is created when omitted — only useful for stream-only play);
+    ``kb`` is the background knowledge base required by KB-touching queries.
+    """
+
+    def __init__(
+        self,
+        config: Optional[ExecutionConfig] = None,
+        *,
+        vocab: Optional[Vocab] = None,
+        kb: Optional[KnowledgeBase] = None,
+    ):
+        self.config = config if config is not None else ExecutionConfig()
+        self.vocab = vocab if vocab is not None else Vocab()
+        self.kb = kb
+        self.queries: Dict[str, RegisteredQuery] = {}
+
+    def register(self, query: Union[str, Q.Query],
+                 name: Optional[str] = None) -> RegisteredQuery:
+        """Register a continuous query: C-SPARQL text or a Query AST.
+
+        Text is parsed against the session vocab (``REGISTER QUERY <n> AS``
+        names the query; ``name=`` is the fallback).  Returns the
+        :class:`RegisteredQuery` handle whose ``run``/``stream`` drive the
+        configured execution mode.
+        """
+        info: Optional[ParseInfo] = None
+        if isinstance(query, str):
+            query, info = parse_query_info(query, self.vocab, name)
+        elif not isinstance(query, Q.Query):
+            raise TypeError(
+                "register() takes C-SPARQL text or a repro.core.query.Query, "
+                "got %r" % type(query).__name__)
+        reg = RegisteredQuery(self, query, info)
+        self.queries[query.name] = reg
+        return reg
+
+    def register_file(self, path: str,
+                      name: Optional[str] = None) -> RegisteredQuery:
+        """Register a query from a ``.rq`` file."""
+        with open(path) as f:
+            return self.register(f.read(), name=name)

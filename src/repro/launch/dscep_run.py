@@ -1,20 +1,26 @@
 """DSCEP pipeline driver — the paper's deployment entry point.
 
-Builds a TweetsKB-like stream + DBpedia-like KB, compiles the chosen query
-(monolithic or automatically decomposed into the Fig. 4 operator DAG), and
-streams chunks through the runtime, reporting per-chunk latency, result
-counts and the used-KB partition sizes.
+Builds a TweetsKB-like stream + DBpedia-like KB, registers the chosen query
+with a :class:`~repro.core.session.Session` (a named paper query, or any
+C-SPARQL ``.rq`` file via ``--rq``), and streams chunks through the
+configured execution mode, reporting latency/throughput, result counts and
+the used-KB partition sizes.
 
     PYTHONPATH=src python -m repro.launch.dscep_run --query cquery1
-    PYTHONPATH=src python -m repro.launch.dscep_run --query q15 --mono \\
-        --method probe --tweets 128
-    PYTHONPATH=src python -m repro.launch.dscep_run --query cquery1 --pipeline
+    PYTHONPATH=src python -m repro.launch.dscep_run --query q15 \\
+        --mode monolithic --method probe --tweets 128
+    PYTHONPATH=src python -m repro.launch.dscep_run --query cquery1 \\
+        --mode pipelined
+    PYTHONPATH=src python -m repro.launch.dscep_run --rq my_query.rq
 
-``--pipeline`` switches to the streaming dataflow runtime: one jitted step
+``--mode pipelined`` selects the streaming dataflow runtime: one jitted step
 per operator, bounded device channels on every DAG edge, operators placed on
 devices by :func:`repro.launch.mesh.place_operators`, and an async
 software-pipelined schedule that keeps ``--channel-capacity`` chunks in
 flight (the host blocks only on the sink).  Reports sustained chunks/sec.
+
+``--no-interpret`` compiles the Pallas kernels for the real accelerator
+instead of the interpreter (requires actual TPU hardware).
 """
 from __future__ import annotations
 
@@ -24,48 +30,48 @@ import time
 import numpy as np
 
 from repro.core import paper_queries as PQ
-from repro.core.pipeline import PipelinedRuntime
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
-from repro.launch.mesh import place_operators
+from repro.core.session import ExecutionConfig, MODES, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
 )
 
-QUERIES = {"q15": PQ.q15, "q16": PQ.q16, "cquery1": PQ.cquery1}
+QUERIES = {"q15": PQ.Q15_RQ, "q16": PQ.Q16_RQ, "cquery1": PQ.CQUERY1_RQ}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--query", default="cquery1", choices=sorted(QUERIES))
+    ap.add_argument("--query", default="cquery1", choices=sorted(QUERIES),
+                    help="one of the paper's shipped queries")
+    ap.add_argument("--rq", default=None, metavar="FILE.rq",
+                    help="run an arbitrary C-SPARQL query file instead of "
+                         "a named paper query")
+    ap.add_argument("--mode", default="single_program", choices=list(MODES),
+                    help="execution mode: monolithic (no decomposition), "
+                         "single_program (whole DAG in one XLA program) or "
+                         "pipelined (per-operator steps over device channels)")
     ap.add_argument("--method", default="scan", choices=["scan", "probe"])
-    ap.add_argument("--mono", action="store_true",
-                    help="monolithic execution (no decomposition)")
     ap.add_argument("--tweets", type=int, default=96)
     ap.add_argument("--artists", type=int, default=48)
     ap.add_argument("--shows", type=int, default=24)
     ap.add_argument("--filler", type=int, default=1000)
     ap.add_argument("--window-cap", type=int, default=256)
     ap.add_argument("--pallas", action="store_true",
-                    help="use the Pallas hash-join kernel (interpret on CPU)")
+                    help="use the Pallas hash-join kernel")
     ap.add_argument("--fuse", action="store_true",
                     help="fused join->compaction (no [M, N] candidate matrix)")
-    ap.add_argument("--pipeline", action="store_true",
-                    help="streaming dataflow runtime: per-operator jitted "
-                         "steps over bounded device channels, async "
-                         "software-pipelined schedule")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="compile Pallas kernels for real hardware instead "
+                         "of the interpreter (needs an actual TPU)")
     ap.add_argument("--channel-capacity", type=int, default=2,
                     help="slots per inter-operator channel = chunks kept "
-                         "in flight (--pipeline only)")
+                         "in flight (pipelined mode only)")
     ap.add_argument("--placement", default="round_robin",
                     choices=["round_robin", "single"],
-                    help="operator->device placement policy (--pipeline only)")
+                    help="operator->device placement policy (pipelined only)")
     args = ap.parse_args(argv)
-    if args.pipeline and args.mono:
-        ap.error("--pipeline requires a decomposed DAG (drop --mono)")
-    if args.pipeline and args.channel_capacity < 2:
+    if args.mode == "pipelined" and args.channel_capacity < 2:
         ap.error("--channel-capacity must be >= 2 (double buffering)")
 
     vocab = Vocab()
@@ -77,46 +83,42 @@ def main(argv=None):
     rows = generate_tweets(vocab, tweets, pool, TweetStreamConfig(
         num_tweets=args.tweets, mentions_min=2, mentions_max=4))
     chunks = list(stream_chunks(rows, 4 * args.window_cap))
-    q = QUERIES[args.query](vocab, tweets, kbd.schema)
-    cfg = RuntimeConfig(
-        window_capacity=args.window_cap, max_windows=4, bind_cap=2048,
-        scan_cap=512, out_cap=2048, kb_method=args.method,
-        use_pallas=args.pallas,
-        fuse_compaction=args.fuse,
+
+    cfg = ExecutionConfig(
+        mode=args.mode, window_capacity=args.window_cap, max_windows=4,
+        bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=args.method,
+        use_pallas=args.pallas, fuse_compaction=args.fuse,
+        interpret=not args.no_interpret,
+        placement=args.placement, channel_capacity=args.channel_capacity,
     )
+    session = Session(cfg, vocab=vocab, kb=kbd.kb)
+    if args.rq:
+        reg = session.register_file(args.rq)
+        qname = reg.query.name
+    else:
+        qname = args.query
+        reg = session.register(QUERIES[qname])
 
     total_kb = int(np.asarray(kbd.kb.count()))
-    print(f"[dscep] query={args.query} method={args.method} "
-          f"mode={'mono' if args.mono else 'decomposed'} "
+    print(f"[dscep] query={qname} method={args.method} mode={args.mode} "
           f"stream={len(rows)} triples in {len(chunks)} chunks, KB={total_kb}")
 
-    if args.mono:
-        rt = MonolithicRuntime(q, kbd.kb, cfg)
-    else:
-        dag = decompose(q, vocab)
-        if args.pipeline:
-            placement = place_operators(
-                list(dag.subqueries), dag.final, strategy=args.placement)
-            rt = PipelinedRuntime(dag, kbd.kb, vocab, cfg,
-                                  placement=placement,
-                                  channel_capacity=args.channel_capacity)
-        else:
-            rt = DSCEPRuntime(dag, kbd.kb, vocab, cfg)
+    if args.mode != "monolithic":
+        dag = reg.dag
         print(f"[dscep] operator DAG ({len(dag.subqueries)} operators, "
               f"final={dag.final}):")
-        for name, op in rt.operators.items():
+        placement = getattr(reg.runtime, "placement", None)
+        for name, op in reg.operators.items():
             used = "--" if op.kb is None else int(np.asarray(op.kb.count()))
-            place = ""
-            if args.pipeline and rt.placement is not None:
-                place = f"  device: {rt.placement[name]}"
+            place = f"  device: {placement[name]}" if placement else ""
             print(f"    {name:40s} used-KB: {used}{place}")
 
-    if args.pipeline:
+    if args.mode == "pipelined":
         # async driver: the whole stream is dispatched software-pipelined;
         # per-chunk latency is meaningless here (only the sink blocks), so
         # report sustained throughput instead
         t0 = time.perf_counter()
-        outs, overflow = rt.process_stream(chunks)
+        outs, overflow = reg.run(chunks)
         t_total = time.perf_counter() - t0
         n_out = sum(len(to_host_rows(o)) for o in outs)
         clipped = {n: c for n, c in overflow.items() if c}
@@ -124,7 +126,7 @@ def main(argv=None):
               f"({len(chunks) / t_total:.2f} chunks/s, includes compile), "
               f"{args.channel_capacity} in flight")
         print(f"[dscep] overflowed windows per operator: {clipped or 'none'}")
-        for edge, st in rt.channel_stats().items():
+        for edge, st in reg.runtime.channel_stats().items():
             print(f"    {edge:60s} size={st['size']} "
                   f"dropped={st['overflows']}")
         print(f"[dscep] done: {n_out} output triples, {t_total:.2f}s total")
@@ -134,14 +136,13 @@ def main(argv=None):
     t_total = 0.0
     for i, chunk in enumerate(chunks):
         t0 = time.perf_counter()
-        out, overflow = rt.process_chunk(chunk)
+        out, overflow = reg.process_chunk(chunk)
         dt = time.perf_counter() - t0
         t_total += dt
         res = to_host_rows(out)
         n_out += len(res)
         tag = " (includes compile)" if i == 0 else ""
-        ovf = (int(np.asarray(overflow).sum()) if args.mono
-               else sum(int(np.asarray(v).sum()) for v in overflow.values()))
+        ovf = sum(overflow.values())
         print(f"[dscep] chunk {i}: {len(res)} output triples "
               f"in {dt * 1e3:.1f} ms, {ovf} overflowed windows{tag}")
     print(f"[dscep] done: {n_out} output triples, "

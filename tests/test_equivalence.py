@@ -1,20 +1,26 @@
 """The paper's correctness claim: decomposed execution == monolithic execution
 ("All results are the same when executing CQuery1 with only one C-SPARQL and
-when dividing it"), plus KB-pruning soundness and method equivalence.
+when dividing it"), plus KB-pruning soundness and method equivalence — all
+driven through the unified Session API.
 """
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import query as Q
-from repro.core.planner import decompose, prune_kb_for
+from repro.core.planner import prune_kb_for
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks
 
-CFG = RuntimeConfig(window_capacity=128, max_windows=4, bind_cap=512, scan_cap=128,
-                    out_cap=512)
+CFG = ExecutionConfig(window_capacity=128, max_windows=4, bind_cap=512,
+                      scan_cap=128, out_cap=512)
+
+
+def register(world, q, cfg, kb=None):
+    return Session(cfg, vocab=world.vocab,
+                   kb=kb if kb is not None else world.kbd.kb).register(q)
 
 
 def q15_query(world):
@@ -56,9 +62,8 @@ def results(out):
 
 
 def run_both(world, q, cfg=CFG):
-    mono = MonolithicRuntime(q, world.kbd.kb, cfg)
-    dag = decompose(q, world.vocab)
-    split = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
+    mono = register(world, q, cfg.replace(mode="monolithic"))
+    split = register(world, q, cfg.replace(mode="single_program"))
     res_m, res_s = [], []
     for chunk in world.chunks:
         res_m += results(mono.process_chunk(chunk)[0])
@@ -80,10 +85,9 @@ def test_q16_path_mono_equals_split(world):
 
 def test_used_kb_strictly_smaller(world):
     q = q15_query(world)
-    dag = decompose(q, world.vocab)
-    rt = DSCEPRuntime(dag, world.kbd.kb, world.vocab, CFG)
+    reg = register(world, q, CFG)
     full = int(np.asarray(world.kbd.kb.count()))
-    for name, op in rt.operators.items():
+    for name, op in reg.operators.items():
         if op.kb is not None:
             used = int(np.asarray(op.kb.count()))
             assert 0 < used < full
@@ -93,8 +97,8 @@ def test_kb_pruning_sound(world):
     """Running the monolithic query against its own pruned KB changes nothing."""
     q = q15_query(world)
     pruned = prune_kb_for(q, world.kbd.kb)
-    full_rt = MonolithicRuntime(q, world.kbd.kb, CFG)
-    pruned_rt = MonolithicRuntime(q, pruned, CFG)
+    full_rt = register(world, q, CFG.replace(mode="monolithic"))
+    pruned_rt = register(world, q, CFG.replace(mode="monolithic"), kb=pruned)
     for chunk in world.chunks:
         assert results(full_rt.process_chunk(chunk)[0]) == \
             results(pruned_rt.process_chunk(chunk)[0])
@@ -102,10 +106,9 @@ def test_kb_pruning_sound(world):
 
 def test_scan_and_probe_methods_equivalent(world):
     q = q16_query(world)
-    cfg_scan = CFG
-    cfg_probe = RuntimeConfig(**{**CFG.__dict__, "kb_method": "probe"})
-    rt_scan = MonolithicRuntime(q, world.kbd.kb, cfg_scan)
-    rt_probe = MonolithicRuntime(q, world.kbd.kb, cfg_probe)
+    rt_scan = register(world, q, CFG.replace(mode="monolithic"))
+    rt_probe = register(world, q,
+                        CFG.replace(mode="monolithic", kb_method="probe"))
     for chunk in world.chunks:
         assert results(rt_scan.process_chunk(chunk)[0]) == \
             results(rt_probe.process_chunk(chunk)[0])

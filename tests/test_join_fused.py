@@ -159,11 +159,10 @@ def test_kb_join_scan_fused_equals_unfused():
 
 
 def test_runtime_fused_end_to_end(world):
-    """DSCEPRuntime (vmapped plans) produces identical streams fused/unfused."""
+    """Decomposed execution produces identical streams fused/unfused."""
     from repro.core import query as Q
-    from repro.core.planner import decompose
     from repro.core.rdf import to_host_rows
-    from repro.core.runtime import DSCEPRuntime, RuntimeConfig
+    from repro.core.session import ExecutionConfig, Session
 
     ts, kbd, vocab = world.tweets, world.kbd, world.vocab
     q = Q.Query(
@@ -183,12 +182,12 @@ def test_runtime_fused_end_to_end(world):
     )
     outs = {}
     for fused in (False, True):
-        cfg = RuntimeConfig(window_capacity=128, max_windows=4,
-                            fuse_compaction=fused)
-        rt = DSCEPRuntime(decompose(q, vocab), kbd.kb, vocab, cfg)
+        cfg = ExecutionConfig(window_capacity=128, max_windows=4,
+                              fuse_compaction=fused)
+        reg = Session(cfg, vocab=vocab, kb=kbd.kb).register(q)
         outs[fused] = [
             sorted((r[0], r[1], r[2]) for r in to_host_rows(out))
-            for out in rt.process_stream(world.chunks)[0]
+            for out in reg.run(world.chunks)[0]
         ]
     assert outs[True] == outs[False]
 

@@ -1,27 +1,26 @@
-"""PipelinedRuntime == DSCEPRuntime == MonolithicRuntime (the dataflow layer).
+"""pipelined == single_program == monolithic (the dataflow layer).
 
 The streaming runtime cuts the DAG at channel boundaries instead of fusing
 it into one XLA program; results must stay **bit-identical** per chunk on
 all three paper queries, with >= 2 chunks in flight, including when window
-capacities overflow (flags must match too, never be dropped).
+capacities overflow (flags must match too, never be dropped).  All modes
+are constructed and driven through the unified Session API.
 """
 import jax
 import numpy as np
 import pytest
 
 from repro.core import paper_queries as PQ
-from repro.core.pipeline import PipelinedRuntime
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import DSCEPRuntime, MonolithicRuntime, RuntimeConfig
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
 )
 from repro.launch.mesh import place_operators
 
-CFG = RuntimeConfig(window_capacity=96, max_windows=4, bind_cap=1024,
-                    scan_cap=128, out_cap=1024, intermediate_cap=512)
+CFG = ExecutionConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                      scan_cap=128, out_cap=1024, intermediate_cap=512)
 QUERIES = {"q15": PQ.q15, "q16": PQ.q16, "cquery1": PQ.cquery1}
 
 
@@ -56,16 +55,14 @@ _RT_CACHE = {}
 
 
 def runtimes(world, qname, cfg=CFG):
-    """(single-program, pipelined) runtimes for one query, built once."""
-    key = (qname, cfg)     # RuntimeConfig is frozen, hence hashable
+    """(single-program, pipelined) registrations for one query, built once."""
+    key = (qname, cfg)     # ExecutionConfig is frozen, hence hashable
     if key not in _RT_CACHE:
         q = QUERIES[qname](world.vocab, world.tweets, world.kbd.schema)
-        dag = decompose(q, world.vocab)
-        single = DSCEPRuntime(dag, world.kbd.kb, world.vocab, cfg)
-        piped = PipelinedRuntime(
-            dag, world.kbd.kb, world.vocab, cfg,
-            placement=place_operators(list(dag.subqueries), dag.final),
-        )
+        single = Session(cfg.replace(mode="single_program"),
+                         vocab=world.vocab, kb=world.kbd.kb).register(q)
+        piped = Session(cfg.replace(mode="pipelined"),
+                        vocab=world.vocab, kb=world.kbd.kb).register(q)
         _RT_CACHE[key] = (q, single, piped)
     return _RT_CACHE[key]
 
@@ -81,13 +78,14 @@ def assert_bit_identical(outs_a, outs_b, tag=""):
 @pytest.mark.parametrize("qname", sorted(QUERIES))
 def test_pipelined_bit_identical_to_single_program(pworld, qname):
     q, single, piped = runtimes(pworld, qname)
-    outs_s, ovf_s = single.process_stream(pworld.chunks)
-    outs_p, ovf_p = piped.process_stream(pworld.chunks)
+    outs_s, ovf_s = single.run(pworld.chunks)
+    outs_p, ovf_p = piped.run(pworld.chunks)
     assert_bit_identical(outs_s, outs_p, qname)
     # per-call overflow deltas match even on a reused (module-scoped) runtime
     assert ovf_p == ovf_s
     # and the paper's claim transitively: pipelined == monolithic result set
-    mono = MonolithicRuntime(q, pworld.kbd.kb, CFG)
+    mono = Session(CFG.replace(mode="monolithic"), vocab=pworld.vocab,
+                   kb=pworld.kbd.kb).register(q)
     res_m, res_p = [], []
     for c, o in zip(pworld.chunks, outs_p):
         res_m += sorted(set((r[0], r[1], r[2])
@@ -100,8 +98,9 @@ def test_pipelined_bit_identical_to_single_program(pworld, qname):
 def test_schedule_keeps_two_chunks_in_flight(pworld):
     """Manual drive of the software-pipelined schedule: the sink consumes
     chunk t only after chunk t+1's producers were dispatched."""
-    _, single, piped = runtimes(pworld, "q15")
-    outs_s, _ = single.process_stream(pworld.chunks)
+    _, single, reg_p = runtimes(pworld, "q15")
+    piped = reg_p.runtime
+    outs_s, _ = single.run(pworld.chunks)
     outs_p = []
     max_in_flight = 0
     try:
@@ -122,26 +121,27 @@ def test_overflow_case_flags_match_and_streams_stay_identical(pworld):
     """Capacities small enough to clip: both runtimes must report the same
     per-operator overflowed-window counts (observable, never dropped) and
     still publish bit-identical (clipped) streams."""
-    tiny = RuntimeConfig(window_capacity=96, max_windows=4, bind_cap=1024,
-                         scan_cap=128, out_cap=16, intermediate_cap=8)
+    tiny = ExecutionConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                           scan_cap=128, out_cap=16, intermediate_cap=8)
     q, single, piped = runtimes(pworld, "cquery1", tiny)
-    outs_s, ovf_s = single.process_stream(pworld.chunks)
-    outs_p, ovf_p = piped.process_stream(pworld.chunks)
+    outs_s, ovf_s = single.run(pworld.chunks)
+    outs_p, ovf_p = piped.run(pworld.chunks)
     assert sum(ovf_s.values()) > 0, "intended an overflowing configuration"
     assert ovf_p == ovf_s
     assert_bit_identical(outs_s, outs_p, "cquery1 overflow")
 
 
 def test_channels_drained_and_lossless_after_stream(pworld):
-    _, _, piped = runtimes(pworld, "q15")
-    piped.process_stream(pworld.chunks)
-    for edge, st in piped.channel_stats().items():
+    _, _, reg_p = runtimes(pworld, "q15")
+    reg_p.run(pworld.chunks)
+    for edge, st in reg_p.runtime.channel_stats().items():
         assert st["size"] == 0, edge
         assert st["overflows"] == 0, edge
 
 
 def test_driver_misuse_raises(pworld):
-    _, _, piped = runtimes(pworld, "q16")
+    _, _, reg_p = runtimes(pworld, "q16")
+    piped = reg_p.runtime
     with pytest.raises(RuntimeError):
         piped.drain()
     try:
@@ -160,10 +160,9 @@ def test_driver_misuse_raises(pworld):
 
 def test_pipeline_requires_double_buffering(pworld):
     q = QUERIES["q15"](pworld.vocab, pworld.tweets, pworld.kbd.schema)
-    dag = decompose(q, pworld.vocab)
     with pytest.raises(ValueError):
-        PipelinedRuntime(dag, pworld.kbd.kb, pworld.vocab, CFG,
-                         channel_capacity=1)
+        Session(CFG.replace(mode="pipelined", channel_capacity=1),
+                vocab=pworld.vocab, kb=pworld.kbd.kb).register(q)
 
 
 def test_place_operators_policies():

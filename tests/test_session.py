@@ -1,0 +1,204 @@
+"""Session/ExecutionConfig facade tests.
+
+The acceptance bar of the API redesign: one Session code path constructs,
+feeds and drains all three runtimes, and a cquery1 run produces
+**bit-identical** output streams across ``monolithic``, ``single_program``
+and ``pipelined`` modes.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import paper_queries as PQ
+from repro.core.engine import KBJoin
+from repro.core.rdf import Vocab, to_host_rows
+from repro.core.session import ExecutionConfig, MODES, Session
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+
+CFG = ExecutionConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                      scan_cap=128, out_cap=1024, intermediate_cap=512)
+
+
+class SessWorld:
+    def __init__(self, num_tweets=36, seed=0):
+        self.vocab = Vocab()
+        self.kbd = generate_kb(
+            self.vocab,
+            KBConfig(num_artists=24, num_shows=12, filler_triples=80,
+                     seed=seed),
+        )
+        self.tweets = TweetSchema.create(self.vocab)
+        pool = np.concatenate([self.kbd.artist_ids, self.kbd.show_ids])
+        rows = generate_tweets(
+            self.vocab, self.tweets, pool,
+            TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                              mentions_max=3, seed=seed),
+        )
+        self.chunks = list(stream_chunks(rows, 96))
+
+    def session(self, cfg):
+        return Session(cfg, vocab=self.vocab, kb=self.kbd.kb)
+
+
+@pytest.fixture(scope="module")
+def sworld():
+    w = SessWorld()
+    assert len(w.chunks) >= 3
+    return w
+
+
+def assert_bit_identical(outs_a, outs_b, tag=""):
+    assert len(outs_a) == len(outs_b)
+    for i, (a, b) in enumerate(zip(outs_a, outs_b)):
+        for col, ca, cb in zip(a._fields, a, b):
+            assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                f"{tag} chunk {i} column {col} diverges")
+
+
+# --------------------------------------------------------------------------
+# the acceptance criterion: one Session, three modes, identical streams
+# --------------------------------------------------------------------------
+
+def test_cquery1_bit_identical_across_all_modes(sworld):
+    outs = {}
+    for mode in MODES:
+        reg = sworld.session(CFG.replace(mode=mode)).register(PQ.CQUERY1_RQ)
+        outs[mode], overflow = reg.run(sworld.chunks)
+        assert not {k: v for k, v in overflow.items() if v}, (mode, overflow)
+    assert sum(len(to_host_rows(o)) for o in outs["monolithic"]) > 0
+    assert_bit_identical(outs["monolithic"], outs["single_program"],
+                         "single_program")
+    assert_bit_identical(outs["monolithic"], outs["pipelined"], "pipelined")
+
+
+def test_register_text_and_ast_agree(sworld):
+    q = PQ.cquery1(sworld.vocab, sworld.tweets, sworld.kbd.schema)
+    from_text = sworld.session(CFG).register(PQ.CQUERY1_RQ)
+    from_ast = sworld.session(CFG).register(q)
+    assert from_text.query == from_ast.query
+    outs_t, _ = from_text.run(sworld.chunks)
+    outs_a, _ = from_ast.run(sworld.chunks)
+    assert_bit_identical(outs_t, outs_a, "text vs ast")
+
+
+def test_stream_generator_matches_run(sworld):
+    for mode in MODES:
+        reg = sworld.session(CFG.replace(mode=mode)).register(PQ.Q15_RQ)
+        ref, _ = reg.run(sworld.chunks)
+        reg2 = sworld.session(CFG.replace(mode=mode)).register(PQ.Q15_RQ)
+        got = list(reg2.stream(sworld.chunks))
+        assert_bit_identical(ref, got, f"stream() {mode}")
+
+
+def test_abandoned_pipelined_stream_leaves_runtime_clean(sworld):
+    """Closing a pipelined stream() generator early must drain the chunks
+    it left in flight; the next full stream() on the same handle yields
+    exactly len(chunks) outputs, identical to a fresh run."""
+    reg = sworld.session(CFG.replace(mode="pipelined")).register(PQ.Q15_RQ)
+    gen = reg.stream(sworld.chunks)
+    next(gen)
+    gen.close()                      # abandon mid-stream
+    assert reg.runtime._in_flight == 0
+    got = list(reg.stream(sworld.chunks))
+    assert len(got) == len(sworld.chunks)
+    ref, _ = sworld.session(
+        CFG.replace(mode="pipelined")).register(PQ.Q15_RQ).run(sworld.chunks)
+    assert_bit_identical(ref, got, "post-abandon stream")
+
+
+def test_overflow_normalized_per_operator(sworld):
+    tiny = CFG.replace(out_cap=16, intermediate_cap=8)
+    counts = {}
+    for mode in MODES:
+        reg = sworld.session(tiny.replace(mode=mode)).register(PQ.CQUERY1_RQ)
+        _, overflow = reg.run(sworld.chunks)
+        assert all(isinstance(v, int) for v in overflow.values())
+        counts[mode] = overflow
+        assert sum(overflow.values()) > 0, (mode, "expected clipping")
+    # decomposed modes agree operator-by-operator
+    assert counts["single_program"] == counts["pipelined"]
+    # monolithic reports under the query's own name
+    assert set(counts["monolithic"]) == {"cquery1"}
+
+
+# --------------------------------------------------------------------------
+# config consolidation + validation
+# --------------------------------------------------------------------------
+
+def test_execution_config_validates_mode_and_mesh():
+    with pytest.raises(ValueError, match="unknown mode"):
+        ExecutionConfig(mode="warp_speed")
+    with pytest.raises(ValueError, match="placement"):
+        ExecutionConfig(mode="pipelined", mesh=object())
+
+
+def test_runtime_config_slice_carries_interpret():
+    cfg = ExecutionConfig(use_pallas=True, interpret=False)
+    rcfg = cfg.runtime_config()
+    assert rcfg.use_pallas and not rcfg.interpret
+    assert cfg.runtime_config().fuse_compaction is cfg.fuse_compaction
+
+
+def test_interpret_knob_reaches_compiled_plan_steps(sworld):
+    """The ROADMAP open item: interpret must flow config -> plan -> KBJoin
+    without editing kernel source.  (q16 has no FilterSubclass, so plan
+    construction stays trace-free and interpret=False builds even on CPU.)"""
+    for interp in (True, False):
+        cfg = CFG.replace(mode="monolithic", use_pallas=True,
+                          fuse_compaction=True, interpret=interp)
+        reg = sworld.session(cfg).register(PQ.Q16_RQ)
+        steps = [s for s in reg.runtime.operator.plan.steps
+                 if isinstance(s, KBJoin)]
+        assert steps and all(s.interpret is interp for s in steps)
+        assert all(s.use_pallas for s in steps)
+
+
+def test_kb_required_for_kb_touching_query(sworld):
+    sess = Session(CFG, vocab=sworld.vocab, kb=None)
+    with pytest.raises(ValueError, match="no kb= attached"):
+        sess.register(PQ.Q15_RQ)
+
+
+def test_registered_query_text_round_trips(sworld):
+    reg = sworld.session(CFG).register(PQ.CQUERY1_RQ)
+    from repro.core.sparql import parse_query
+    assert parse_query(reg.text, sworld.vocab) == reg.query
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+def test_direct_runtime_construction_warns(sworld):
+    from repro.core.pipeline import PipelinedRuntime
+    from repro.core.planner import decompose
+    from repro.core.runtime import (
+        DSCEPRuntime, MonolithicRuntime, RuntimeConfig,
+    )
+
+    q = PQ.q15(sworld.vocab, sworld.tweets, sworld.kbd.schema)
+    rcfg = RuntimeConfig(window_capacity=96, max_windows=4, bind_cap=512,
+                         scan_cap=128, out_cap=512)
+    dag = decompose(q, sworld.vocab)
+    for ctor in (
+        lambda: MonolithicRuntime(q, sworld.kbd.kb, rcfg),
+        lambda: DSCEPRuntime(dag, sworld.kbd.kb, sworld.vocab, rcfg),
+        lambda: PipelinedRuntime(dag, sworld.kbd.kb, sworld.vocab, rcfg),
+    ):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ctor()
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_session_construction_does_not_warn(sworld):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for mode in MODES:
+            sworld.session(CFG.replace(mode=mode)).register(PQ.Q15_RQ)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)], (
+        [str(x.message) for x in w])

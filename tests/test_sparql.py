@@ -1,0 +1,340 @@
+"""C-SPARQL frontend tests: golden round-trips, AST equality of the parsed
+``.rq`` paper queries against the previous hand-built dataclass builders,
+and error reporting for malformed queries.
+"""
+import pytest
+
+from repro.core import paper_queries as PQ
+from repro.core import query as Q
+from repro.core.planner import decompose
+from repro.core.rdf import Vocab
+from repro.core.sparql import (
+    SparqlError, parse_query, parse_query_info, serialize_query,
+)
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import TweetSchema
+
+
+@pytest.fixture(scope="module")
+def vw():
+    vocab = Vocab()
+    kbd = generate_kb(vocab, KBConfig(num_artists=8, num_shows=4))
+    ts = TweetSchema.create(vocab)
+    return vocab, ts, kbd.schema
+
+
+# --------------------------------------------------------------------------
+# the previous hand-built builders, kept verbatim as the AST-equality oracle
+# --------------------------------------------------------------------------
+
+def legacy_q15(vocab, ts, kbs):
+    return Q.Query(
+        name="q15",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"),
+                      Q.STREAM),
+            Q.FilterSubclass("ent", kbs.rdf_type, kbs.subclass_of,
+                             kbs.musical_artist),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"),
+                                Q.Const(vocab.pred("out:artistTweet")),
+                                Q.Var("ent")),
+        ),
+    )
+
+
+def legacy_q16(vocab, ts, kbs):
+    return Q.Query(
+        name="q16",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("ent"),
+                      Q.STREAM),
+            Q.PathKB(Q.Var("ent"),
+                     (kbs.birth_place, kbs.country, kbs.country_code),
+                     Q.Var("cc")),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("tweet"), Q.Const(vocab.pred("out:code")),
+                                Q.Var("cc")),
+        ),
+    )
+
+
+def legacy_cquery1(vocab, ts, kbs):
+    return Q.Query(
+        name="cquery1",
+        where=(
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("artist"),
+                      Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.mentions), Q.Var("show"),
+                      Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_pos), Q.Var("pos"),
+                      Q.STREAM),
+            Q.Pattern(Q.Var("tweet"), Q.Const(ts.sentiment_neg), Q.Var("neg"),
+                      Q.STREAM),
+            Q.FilterSubclass("artist", kbs.rdf_type, kbs.subclass_of,
+                             kbs.musical_artist),
+            Q.FilterSubclass("show", kbs.rdf_type, kbs.subclass_of,
+                             kbs.television_show),
+            Q.PathKB(Q.Var("artist"),
+                     (kbs.birth_place, kbs.country, kbs.country_code),
+                     Q.Var("cc")),
+            Q.UnionGroup(
+                left=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.likes),
+                                Q.Var("eng"), Q.STREAM),),
+                right=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
+                                 Q.Var("eng"), Q.STREAM),),
+            ),
+            Q.OptionalGroup(
+                patterns=(Q.Pattern(Q.Var("tweet"), Q.Const(ts.shares),
+                                    Q.Var("sh"), Q.STREAM),),
+            ),
+            Q.FilterNum("pos", "ge", Vocab.number(0.0)),
+        ),
+        construct=(
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:coMentionedWith")),
+                                Q.Var("show")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:posSentiment")),
+                                Q.Var("pos")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:negSentiment")),
+                                Q.Var("neg")),
+            Q.ConstructTemplate(Q.Var("artist"),
+                                Q.Const(vocab.pred("out:countryCode")),
+                                Q.Var("cc")),
+        ),
+    )
+
+
+LEGACY = {"q15": legacy_q15, "q16": legacy_q16, "cquery1": legacy_cquery1}
+
+
+# --------------------------------------------------------------------------
+# AST equality + round trips
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(LEGACY))
+def test_parsed_rq_equals_hand_built_ast(vw, name):
+    vocab, ts, kbs = vw
+    built = LEGACY[name](vocab, ts, kbs)
+    parsed = getattr(PQ, name)(vocab, ts, kbs)
+    assert parsed == built
+
+
+@pytest.mark.parametrize("name", sorted(LEGACY))
+def test_round_trip_paper_queries(vw, name):
+    """Golden guarantee: parse(serialize(q)) == q."""
+    vocab, ts, kbs = vw
+    q = getattr(PQ, name)(vocab, ts, kbs)
+    text = serialize_query(q, vocab)
+    assert parse_query(text, vocab) == q
+    # serialization is canonical: a second round trip emits identical text
+    assert serialize_query(parse_query(text, vocab), vocab) == text
+
+
+def test_round_trip_decomposed_subqueries(vw):
+    """The serializer is total over planner-generated ASTs (row nodes and
+    binding-protocol predicates go through the <dscep:id:N> escape)."""
+    vocab, ts, kbs = vw
+    q = PQ.cquery1(vocab, ts, kbs)
+    dag = decompose(q, vocab)
+    for name, sub in dag.subqueries.items():
+        text = serialize_query(sub.query, vocab)
+        assert parse_query(text, vocab) == sub.query, name
+
+
+def test_parse_info_carries_registration_and_window(vw):
+    vocab, _, _ = vw
+    q, info = parse_query_info(PQ.Q15_RQ, vocab)
+    assert q.name == "q15" and info.name == "q15"
+    assert info.stream_iri == "stream"
+    assert info.window_triples == 1000 and info.window_step == 1
+    assert info.kb_iris == ("kb",)
+    assert dict(info.prefixes)["schema"] == "urn:dscep:schema"
+
+
+def test_serializer_preserves_known_prefix_iris(vw):
+    """Emitted PREFIX declarations document real provenance: well-known
+    namespaces get their real IRIs, and IRIs captured at parse time can be
+    threaded back through serialize_query."""
+    vocab, ts, kbs = vw
+    text = serialize_query(PQ.q15(vocab, ts, kbs), vocab)
+    assert "PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>" in text
+    assert "PREFIX dbo: <http://dbpedia.org/ontology/>" in text
+    _, info = parse_query_info(PQ.Q15_RQ, vocab)
+    q2 = parse_query(PQ.Q15_RQ, vocab)
+    custom = serialize_query(q2, vocab, dict(info.prefixes))
+    assert "PREFIX schema: <urn:dscep:schema>" in custom
+
+
+def test_numeric_literals_round_trip_fixed_point(vw):
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY numq AS
+    PREFIX s: <urn:x>
+    CONSTRUCT { ?a s:out ?v . }
+    WHERE {
+      ?a s:speed ?v .
+      FILTER(?v < 19.75)
+    }
+    """
+    q = parse_query(text, vocab)
+    flt = [it for it in q.where if isinstance(it, Q.FilterNum)][0]
+    assert flt.value_id == Vocab.number(19.75)
+    assert parse_query(serialize_query(q, vocab), vocab) == q
+
+
+def test_single_hop_path_vs_plain_kb_pattern(vw):
+    """`?x (p) ?y` in GRAPH <kb> is a length-1 PathKB; `?x p ?y` is a plain
+    KB pattern — both round-trip distinctly."""
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY hop AS
+    PREFIX m: <urn:m>
+    CONSTRUCT { ?a m:out ?b . }
+    WHERE {
+      ?a m:link ?c .
+      GRAPH <kb> {
+        ?c (m:hop) ?b .
+        ?c m:flat ?d .
+      }
+    }
+    """
+    q = parse_query(text, vocab)
+    kinds = [type(it).__name__ for it in q.where]
+    assert kinds == ["Pattern", "PathKB", "Pattern"]
+    assert q.where[1].preds == (vocab.pred("m:hop"),)
+    assert q.where[2].src == Q.KB
+    assert parse_query(serialize_query(q, vocab), vocab) == q
+
+
+# --------------------------------------------------------------------------
+# error reporting
+# --------------------------------------------------------------------------
+
+def _expect_error(text, vocab, match):
+    with pytest.raises(SparqlError, match=match):
+        parse_query(text, vocab)
+
+
+def test_unknown_prefix_reports_name_and_position(vw):
+    vocab, _, _ = vw
+    text = """
+    CONSTRUCT { ?a mystery:out ?b . }
+    WHERE { ?a mystery:link ?b . }
+    """
+    with pytest.raises(SparqlError, match=r"unknown prefix 'mystery'") as ei:
+        parse_query(text, vocab)
+    assert "line" in str(ei.value)
+
+
+def test_path_longer_than_three_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE {
+      ?a p:x ?m .
+      GRAPH <kb> { ?m p:a/p:b/p:c/p:d ?b . }
+    }
+    """, vocab, r"length 4 exceeds the paper's maximum of 3")
+
+
+def test_unbound_construct_variable_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?ghost . }
+    WHERE { ?a p:x ?b . }
+    """, vocab, r"CONSTRUCT variable \?ghost is not bound")
+
+
+def test_star_outside_hierarchy_form_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE {
+      ?a p:x ?b .
+      GRAPH <kb> { ?a p:one*/p:two ?b . }
+    }
+    """, vocab, r"'\*' is only supported as the hierarchy form")
+
+
+def test_hierarchy_super_class_must_be_constant(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE {
+      ?a p:x ?b .
+      GRAPH <kb> { ?a p:type/p:sub* ?b . }
+    }
+    """, vocab, r"super-class must be a constant")
+
+
+def test_empty_union_branch_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE {
+      ?a p:x ?b .
+      { } UNION { ?a p:y ?b . }
+    }
+    """, vocab, r"UNION branch is empty")
+
+
+def test_trailing_garbage_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE { ?a p:x ?b . }
+    bogus
+    """, vocab, r"unexpected trailing input")
+
+
+def test_filter_requires_numeric_comparison(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    WHERE {
+      ?a p:x ?b .
+      FILTER(p:x >= 1.0)
+    }
+    """, vocab, r"FILTER supports numeric comparisons on a variable")
+
+
+# --------------------------------------------------------------------------
+# Query.variables(): dedupe order (the O(n^2) fix must keep first-seen order)
+# --------------------------------------------------------------------------
+
+def test_variables_first_seen_order_and_dedupe(vw):
+    vocab, ts, kbs = vw
+    q = PQ.cquery1(vocab, ts, kbs)
+    vars_ = q.variables()
+    assert vars_ == ["tweet", "artist", "show", "pos", "neg", "cc", "eng", "sh"]
+    assert len(vars_) == len(set(vars_))
+
+
+def test_variables_linear_on_wide_machine_generated_query(vw):
+    """A parser-scale query (hundreds of patterns) keeps variables() exact:
+    every distinct var once, in first-appearance order."""
+    vocab, _, _ = vw
+    p = vocab.pred("gen:p")
+    where = tuple(
+        Q.Pattern(Q.Var("s%d" % (i % 97)), Q.Const(p), Q.Var("o%d" % i),
+                  Q.STREAM)
+        for i in range(600)
+    )
+    q = Q.Query(name="wide", where=where,
+                construct=(Q.ConstructTemplate(Q.Var("s0"), Q.Const(p),
+                                               Q.Var("o0")),))
+    vars_ = q.variables()
+    assert len(vars_) == 97 + 600
+    assert vars_[0] == "s0" and vars_[1] == "o0" and vars_[2] == "s1"

@@ -10,18 +10,20 @@ import numpy as np
 import pytest
 
 from repro.core import paper_queries as PQ
-from repro.core.planner import decompose
 from repro.core.rdf import Vocab, to_host_rows
-from repro.core.runtime import (
-    DSCEPRuntime, MonolithicRuntime, RuntimeConfig, balance_windows,
-)
+from repro.core.runtime import balance_windows
+from repro.core.session import ExecutionConfig, Session
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
 )
 
-CFG = RuntimeConfig(window_capacity=128, max_windows=4, bind_cap=1024,
-                    scan_cap=128, out_cap=1024)
+CFG = ExecutionConfig(window_capacity=128, max_windows=4, bind_cap=1024,
+                      scan_cap=128, out_cap=1024)
+
+
+def register(world, q, cfg):
+    return Session(cfg, vocab=world.vocab, kb=world.kbd.kb).register(q)
 
 
 class CoWorld:
@@ -68,7 +70,7 @@ def test_cquery1_dag_shape_matches_fig4(co_world):
     """Decomposition produces the Fig. 4 topology: artist-KB operator
     (QueryA), show-KB operator (QueryB), final aggregator (QueryG)."""
     q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-    dag = decompose(q, co_world.vocab)
+    dag = register(co_world, q, CFG).dag
     kb_ops = [n for n, s in dag.subqueries.items() if s.touches_kb]
     assert len(kb_ops) == 2
     final = dag.subqueries[dag.final]
@@ -78,20 +80,19 @@ def test_cquery1_dag_shape_matches_fig4(co_world):
 
 def test_cquery1_mono_equals_split_scan(co_world):
     q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
-    split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                         co_world.vocab, CFG)
+    mono = register(co_world, q, CFG.replace(mode="monolithic"))
+    split = register(co_world, q, CFG.replace(mode="single_program"))
     rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
     assert len(rm) > 0
     assert rm == rs
 
 
 def test_cquery1_mono_equals_split_probe(co_world):
-    cfg = RuntimeConfig(**{**CFG.__dict__, "kb_method": "probe"})
     q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-    mono = MonolithicRuntime(q, co_world.kbd.kb, cfg)
-    split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                         co_world.vocab, cfg)
+    mono = register(co_world, q, CFG.replace(mode="monolithic",
+                                             kb_method="probe"))
+    split = register(co_world, q, CFG.replace(mode="single_program",
+                                              kb_method="probe"))
     rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
     assert len(rm) > 0
     assert rm == rs
@@ -102,8 +103,7 @@ def test_cquery1_used_kb_partition(co_world):
     artist slice (subclass closure + 3-step path) dominates the show slice
     (closure only) — the paper's QueryA-vs-QueryB asymmetry."""
     q = PQ.cquery1(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-    rt = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                      co_world.vocab, CFG)
+    rt = register(co_world, q, CFG)
     total = int(np.asarray(co_world.kbd.kb.count()))
     used = {
         n: int(np.asarray(op.kb.count()))
@@ -124,7 +124,7 @@ def test_cquery1_output_schema(co_world):
         v.pred("out:negSentiment"), v.pred("out:countryCode"),
     }
     q = PQ.cquery1(v, co_world.tweets, co_world.kbd.schema)
-    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+    mono = register(co_world, q, CFG.replace(mode="monolithic"))
     preds = {r[1] for r in _run(mono, co_world.chunks)}
     assert preds <= expect
     assert v.pred("out:coMentionedWith") in preds
@@ -134,9 +134,8 @@ def test_q15_q16_on_shared_world(co_world):
     """First-step queries run on the same world (Table 1 setup)."""
     for builder in (PQ.q15, PQ.q16):
         q = builder(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-        mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
-        split = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                             co_world.vocab, CFG)
+        mono = register(co_world, q, CFG.replace(mode="monolithic"))
+        split = register(co_world, q, CFG.replace(mode="single_program"))
         rm, rs = _run(mono, co_world.chunks), _run(split, co_world.chunks)
         assert len(rm) > 0 and rm == rs
 
@@ -150,10 +149,8 @@ def test_runtime_on_mesh_matches_unsharded(co_world):
     results — sharding neutrality on whatever devices exist."""
     q = PQ.q15(co_world.vocab, co_world.tweets, co_world.kbd.schema)
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    plain = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                         co_world.vocab, CFG)
-    meshed = DSCEPRuntime(decompose(q, co_world.vocab), co_world.kbd.kb,
-                          co_world.vocab, CFG, mesh=mesh)
+    plain = register(co_world, q, CFG)
+    meshed = register(co_world, q, CFG.replace(mesh=mesh))
     assert _run(plain, co_world.chunks) == _run(meshed, co_world.chunks)
 
 
@@ -173,7 +170,7 @@ def test_balance_windows_rounds_and_preserves(co_world):
 def test_monotone_timestamps_across_published_stream(co_world):
     """Publisher output is ordered (paper assumption 3 holds downstream)."""
     q = PQ.q15(co_world.vocab, co_world.tweets, co_world.kbd.schema)
-    mono = MonolithicRuntime(q, co_world.kbd.kb, CFG)
+    mono = register(co_world, q, CFG.replace(mode="monolithic"))
     for c in co_world.chunks:
         out, _ = mono.process_chunk(c)
         rows = to_host_rows(out)
