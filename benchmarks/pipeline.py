@@ -36,6 +36,15 @@ from .common import build_world, format_table, make_session
 
 CHANNEL_CAPACITY = 2
 
+# second workload: the expanded frontend surface — SELECT projection, a
+# variable-length closure path (compiled through the fused closure kernel
+# into one pair-relation join) and a boolean FILTER tree.  The shipped
+# example file is the single source of truth so the benchmarked query can
+# never drift from what a reader reproduces.
+ARTIST_CLASSES_RQ_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "examples", "queries",
+    "artist_classes.rq")
+
 
 def _throughput(run_pass, num_chunks: int, iters: int) -> dict:
     """Median sustained chunks/sec of ``run_pass()`` (compile excluded)."""
@@ -54,7 +63,8 @@ def _throughput(run_pass, num_chunks: int, iters: int) -> dict:
     }
 
 
-def run(iters: Optional[int] = None, smoke: bool = False):
+def run(iters: Optional[int] = None, smoke: bool = False,
+        query: str = "cquery1"):
     if iters is None:
         iters = 1 if smoke else 3
     if smoke:
@@ -71,9 +81,14 @@ def run(iters: Optional[int] = None, smoke: bool = False):
                                intermediate_cap=1024,
                                channel_capacity=CHANNEL_CAPACITY)
 
-    q = PQ.cquery1(world.vocab, world.tweets, world.kbd.schema)
+    if query == "cquery1":
+        q = PQ.cquery1(world.vocab, world.tweets, world.kbd.schema)
+    else:
+        from repro.core.sparql import parse_query
+        with open(ARTIST_CLASSES_RQ_PATH) as f:
+            q = parse_query(f.read(), world.vocab)
     chunks = world.chunks
-    print(f"[bench_pipeline] cquery1, {len(chunks)} chunks, "
+    print(f"[bench_pipeline] {query}, {len(chunks)} chunks, "
           f"smoke={smoke}, iters={iters}")
 
     # one Session per execution mode — the unified API this benchmark compares
@@ -128,14 +143,14 @@ def run(iters: Optional[int] = None, smoke: bool = False):
         [mode, f"{r['median_s'] * 1e3:.1f} ms", f"{r['chunks_per_s']:.2f}"]
         for mode, r in results.items()
     ]
-    print(format_table("CQuery1 sustained throughput",
+    print(format_table("%s sustained throughput" % query,
                        ["mode", "stream pass (median)", "chunks/s"], rows))
 
     payload = {
         "what": "sustained chunks/sec over one stream pass, one Session per "
                 "ExecutionConfig mode: monolithic vs single-program DAG vs "
                 "pipelined dataflow (2 chunks in flight, sink-only blocking)",
-        "query": "cquery1",
+        "query": query,
         "num_chunks": len(chunks),
         "channel_capacity": CHANNEL_CAPACITY,
         "smoke": smoke,
@@ -143,7 +158,9 @@ def run(iters: Optional[int] = None, smoke: bool = False):
         "overflowed_windows": 0,
         "results": results,
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json")
+    name = ("BENCH_pipeline.json" if query == "cquery1"
+            else "BENCH_pipeline_%s.json" % query)
+    path = os.path.join(os.path.dirname(__file__), "..", name)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
     print(f"[bench_pipeline] wrote {os.path.normpath(path)}")
@@ -156,8 +173,13 @@ def main(argv=None):
                     help="tiny shapes + 1 iter (CI artifact mode)")
     ap.add_argument("--iters", type=int, default=None,
                     help="timing iterations (default: 3, or 1 with --smoke)")
+    ap.add_argument("--query", default="cquery1",
+                    choices=["cquery1", "artist_classes"],
+                    help="workload: the paper's CQuery1, or the expanded "
+                         "frontend surface (SELECT + closure path + boolean "
+                         "FILTER)")
     args = ap.parse_args(argv)
-    run(iters=args.iters, smoke=args.smoke)
+    run(iters=args.iters, smoke=args.smoke, query=args.query)
 
 
 if __name__ == "__main__":

@@ -82,6 +82,19 @@ register_deployment(DSCEPDeployment(
                 "baseline).",
 ))
 
+# heterogeneous windows: each registered .rq's RANGE clause is its geometry
+register_deployment(DSCEPDeployment(
+    name="per-query-windows",
+    config=ExecutionConfig(mode="single_program",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096,
+                           window_from_query=True),
+    description="One Session, many queries: each registered query's "
+                "[RANGE TRIPLES n STEP m] clause drives its own window "
+                "geometry (window_capacity is only the default for queries "
+                "without a RANGE clause).",
+))
+
 # streaming dataflow deployment (operators over device channels)
 register_deployment(DSCEPDeployment(
     name="pipelined",

@@ -26,6 +26,7 @@ candidate matrix never round-trips through HBM (see kb_join_scan).
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Optional, Sequence, Tuple
 
@@ -270,8 +271,13 @@ def kb_join(
 _NUM_OPS = ("lt", "le", "gt", "ge", "eq", "ne")
 
 
-def filter_num(bind: Bindings, var: int, op: str, value_id: int) -> Bindings:
-    """Numeric FILTER — fixed-point literal ids are order-isomorphic to values."""
+def _num_cmp(bind: Bindings, var: int, op: str, value_id: int):
+    """Shared numeric-comparison leaf: ``(true mask, error mask)``.
+
+    The error mask marks non-numeric bindings (SPARQL type error).  Both
+    ``filter_num`` and the boolean-tree evaluator consume this, so the
+    comparison semantics live in exactly one place.
+    """
     assert op in _NUM_OPS, op
     v = bind.cols[:, var]
     t = jnp.uint32(value_id)
@@ -280,7 +286,49 @@ def filter_num(bind: Bindings, var: int, op: str, value_id: int) -> Bindings:
         "lt": v < t, "le": v <= t, "gt": v > t,
         "ge": v >= t, "eq": v == t, "ne": v != t,
     }[op]
-    return bind._replace(valid=bind.valid & is_num & cmp)
+    return cmp & is_num, ~is_num
+
+
+def filter_num(bind: Bindings, var: int, op: str, value_id: int) -> Bindings:
+    """Numeric FILTER — fixed-point literal ids are order-isomorphic to values."""
+    val, err = _num_cmp(bind, var, op, value_id)
+    return bind._replace(valid=bind.valid & val & ~err)
+
+
+def _bool_eval(bind: Bindings, expr: Tuple) -> Tuple[jax.Array, jax.Array]:
+    """Evaluate a compiled boolean filter tree to ``(true, error)`` row masks.
+
+    SPARQL three-valued logic over fixed-shape masks: a comparison on a
+    non-numeric binding is an *error*; ``!`` preserves errors; ``&&`` is
+    false if any arg is definitely false (errors notwithstanding), ``||``
+    true if any arg is definitely true; otherwise any arg error makes the
+    result an error.  The representation keeps ``true & error == 0``.
+    """
+    kind = expr[0]
+    if kind == "cmp":
+        _, var, op, value_id = expr
+        return _num_cmp(bind, var, op, value_id)
+    if kind == "not":
+        val, err = _bool_eval(bind, expr[1])
+        return ~val & ~err, err
+    vals, errs = zip(*(_bool_eval(bind, a) for a in expr[1:]))
+    any_err = functools.reduce(jnp.logical_or, errs)
+    if kind == "and":
+        any_false = functools.reduce(
+            jnp.logical_or, (~v & ~e for v, e in zip(vals, errs)))
+        all_true = functools.reduce(jnp.logical_and, vals)
+        return all_true & ~any_err, any_err & ~any_false
+    if kind == "or":
+        any_true = functools.reduce(jnp.logical_or, vals)
+        return any_true, any_err & ~any_true
+    raise ValueError("unknown filter expr %r" % (expr,))
+
+
+def filter_bool(bind: Bindings, expr: Tuple) -> Bindings:
+    """Boolean FILTER combination (compiled ``("and"|"or"|"not"|"cmp", ...)``
+    tuple tree); keeps rows whose filter evaluates to definite true."""
+    val, err = _bool_eval(bind, expr)
+    return bind._replace(valid=bind.valid & val & ~err)
 
 
 def filter_in(bind: Bindings, var: int, sorted_ids: jax.Array) -> Bindings:
@@ -299,6 +347,29 @@ def filter_bound(bind: Bindings, var: int) -> Bindings:
 def project(bind: Bindings, keep: Tuple[int, ...]) -> Bindings:
     mask = jnp.zeros((bind.num_vars,), bool).at[jnp.asarray(keep, jnp.int32)].set(True)
     return bind._replace(cols=jnp.where(mask[None, :], bind.cols, jnp.uint32(PAD_ID)))
+
+
+def canonical_order(bind: Bindings, sig_cols: Tuple[int, ...]) -> Bindings:
+    """Sort valid rows lexicographically by ``sig_cols`` (invalid last).
+
+    Join order is an execution detail (monolithic vs decomposed plans visit
+    patterns differently), but the *published* stream must not depend on it:
+    the runtimes' bit-identical-across-modes guarantee needs one canonical
+    row order for equal binding sets, not whatever order the joins happened
+    to emit.  ``sig_cols`` lists the output columns most-significant first
+    and must be derived from something plans share — the engine passes
+    template columns ordered by *variable name*, since column numbering
+    itself differs between a monolithic plan and a decomposed aggregator.
+    Applied after the pre-CONSTRUCT distinct, where rows are the
+    deduplicated projection onto template variables.
+    """
+    keys = tuple(bind.cols[:, c] for c in reversed(sig_cols))
+    inv = (~bind.valid).astype(jnp.uint32)
+    order = jnp.lexsort(keys + (inv,))
+    return Bindings(
+        jnp.take(bind.cols, order, axis=0), jnp.take(bind.valid, order),
+        bind.overflow,
+    )
 
 
 def distinct(bind: Bindings, out_cap: Optional[int] = None) -> Bindings:

@@ -52,6 +52,15 @@ class FilterNumStep:
 
 
 @dataclasses.dataclass(frozen=True)
+class FilterBoolStep:
+    """Boolean FILTER tree, compiled to a static nested-tuple expression:
+    ``("cmp", col, op, value_id)`` leaves under ``("and"|"or"|"not", ...)``
+    nodes (tuples keep the Plan hashable)."""
+
+    expr: Tuple
+
+
+@dataclasses.dataclass(frozen=True)
 class FilterInStep:
     var: int
     set_name: str                 # env key holding a sorted uint32 id array
@@ -80,8 +89,8 @@ class ProjectStep:
 
 
 Step = Union[
-    ScanJoin, KBJoin, FilterNumStep, FilterInStep, OptionalSteps, UnionSteps,
-    DistinctStep, ProjectStep,
+    ScanJoin, KBJoin, FilterNumStep, FilterBoolStep, FilterInStep,
+    OptionalSteps, UnionSteps, DistinctStep, ProjectStep,
 ]
 
 
@@ -126,6 +135,8 @@ def _apply(
         )
     if isinstance(step, FilterNumStep):
         return algebra.filter_num(cur, step.var, step.op, step.value_id)
+    if isinstance(step, FilterBoolStep):
+        return algebra.filter_bool(cur, step.expr)
     if isinstance(step, FilterInStep):
         return algebra.filter_in(cur, step.var, env[step.set_name])
     if isinstance(step, OptionalSteps):
@@ -155,10 +166,14 @@ def run_plan(
     """Execute ``plan`` on one window.
 
     Returns (constructed stream, final bindings, overflow flag).  Before
-    CONSTRUCT the bindings are projected onto the template variables and
-    deduplicated — SPARQL CONSTRUCT emits a *graph* (set semantics), so
-    join multiplicities in non-output variables must not inflate the output
-    (they previously could silently exceed ``out_cap``).
+    CONSTRUCT the bindings are projected onto the template variables,
+    deduplicated and **canonically ordered** — SPARQL CONSTRUCT emits a
+    *graph* (set semantics), so join multiplicities in non-output variables
+    must not inflate the output (they previously could silently exceed
+    ``out_cap``), and the published row order (which assigns output graph
+    ids) must be a function of the result *set*, never of the plan's join
+    order — that is what makes monolithic and decomposed executions
+    bit-identical for every query, not just the paper's.
     """
     cur = universe_bindings(plan.bind_cap, plan.num_vars)
     for step in plan.steps:
@@ -168,7 +183,12 @@ def run_plan(
     }))
     emit = cur
     if out_vars:
-        emit = algebra.distinct(algebra.project(cur, out_vars))
+        # significance by variable *name*: column numbering is plan-local
+        # (a decomposed aggregator numbers differently than the monolithic
+        # plan), names are shared
+        sig = tuple(sorted(out_vars, key=lambda c: plan.var_names[c]))
+        emit = algebra.canonical_order(
+            algebra.distinct(algebra.project(cur, out_vars)), sig)
     ts = jnp.max(jnp.where(window.valid, window.ts, 0))
     out, c_ovf = algebra.construct(emit, plan.templates, ts, plan.out_cap,
                                    graph_base)

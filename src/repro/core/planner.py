@@ -26,15 +26,193 @@ import numpy as np
 
 from . import query as Q
 from .engine import (
-    DistinctStep, FilterInStep, FilterNumStep, KBJoin, OptionalSteps, Plan,
-    ProjectStep, ScanJoin, Step, UnionSteps,
+    DistinctStep, FilterBoolStep, FilterInStep, FilterNumStep, KBJoin,
+    OptionalSteps, Plan, ProjectStep, ScanJoin, Step, UnionSteps,
 )
-from .kb import KnowledgeBase, prune
+from .kb import KnowledgeBase, host_rows, kb_from_triples, prune
 from .pattern import CompiledPattern, Slot, SlotMode
-from .rdf import Vocab
+from .rdf import CLOSURE_PRED_BASE, PRED_SPACE, Vocab
 from .reasoner import (
     adjacency_from_edges, build_class_index, descendants, subclass_edges,
 )
+
+
+# --------------------------------------------------------------------------
+# variable-length paths: closure-pair relations under synthetic predicates
+# --------------------------------------------------------------------------
+
+def closure_path_specs(q: Q.Query) -> List[Tuple[int, int]]:
+    """Distinct ``(pred, min_hops)`` closure-path specs in first-seen order.
+
+    Spec *i* of a query owns the synthetic predicate ``CLOSURE_PRED_BASE + i``
+    — the id the compiled plan's KBJoin probes and the KB augmentation
+    materializes pairs under.  Both sides derive the index from this one
+    function, so they can never disagree.
+    """
+    specs: List[Tuple[int, int]] = []
+    for item in q.where:
+        if isinstance(item, Q.PathClosure):
+            key = (item.pred, item.min_hops)
+            if key not in specs:
+                specs.append(key)
+    if len(specs) > PRED_SPACE - CLOSURE_PRED_BASE:
+        raise ValueError(
+            "query %r uses %d distinct closure paths; the synthetic "
+            "predicate band holds %d"
+            % (q.name, len(specs), PRED_SPACE - CLOSURE_PRED_BASE))
+    return specs
+
+
+def _host_reach_sets(edges: Sequence[Tuple[int, int]]) -> Dict[int, Set[int]]:
+    """``node -> set of nodes it reaches (>= 0 edges, cycle-safe BFS)``."""
+    out_edges: Dict[int, List[int]] = {}
+    for s, o in edges:
+        out_edges.setdefault(s, []).append(o)
+    nodes = {x for e in edges for x in e}
+    reach: Dict[int, Set[int]] = {}
+    for start in nodes:
+        seen = {start}
+        frontier = [start]
+        while frontier:
+            nxt = []
+            for n in frontier:
+                for m in out_edges.get(n, ()):
+                    if m not in seen:
+                        seen.add(m)
+                        nxt.append(m)
+            frontier = nxt
+        reach[start] = seen
+    return reach
+
+
+def _kernel_reach_set(
+    edges: Sequence[Tuple[int, int]], root: int, interpret: bool,
+    ancestors: bool,
+) -> Set[int]:
+    """One root's closure set via the fused descendants/ancestors kernel."""
+    from repro.kernels.closure import ops as cl_ops
+
+    idx, ids = build_class_index(edges)
+    if root not in idx:
+        return {root}
+    adj = adjacency_from_edges(edges, idx)
+    op = cl_ops.closure_ancestors if ancestors else cl_ops.closure_descendants
+    got, count = op(np.asarray(adj), idx[root], out_cap=len(ids),
+                    interpret=interpret)
+    sel = np.asarray(got)[: int(count)]
+    return {int(v) for v in ids[sel]}
+
+
+def _closure_pairs(
+    edges: Sequence[Tuple[int, int]], min_hops: int,
+    uses: Sequence[Q.PathClosure], use_pallas: bool, interpret: bool,
+) -> Set[Tuple[int, int]]:
+    """The pair relation ``{(x, y) : x pred^n y, n >= min_hops}``.
+
+    ``p*``'s zero-length pairs are reflexive over the predicate's edge-graph
+    nodes plus the constant endpoints of the query's path expressions (the
+    bounded reading of SPARQL's term-universe reflexivity — documented in
+    :class:`repro.core.query.PathClosure`).  When every use anchors the same
+    endpoint with a constant, only that endpoint's closure set is
+    materialized (the fused descendants/ancestors kernel); otherwise the
+    full reach matrix is closed once.
+    """
+    pairs: Set[Tuple[int, int]] = set()
+    if min_hops == 0:
+        refl = {x for e in edges for x in e}
+        for u in uses:
+            for t in (u.start, u.end):
+                if isinstance(t, Q.Const):
+                    refl.add(int(t.id))
+        pairs |= {(x, x) for x in refl}
+    if not edges:
+        return pairs
+
+    const_end = all(isinstance(u.end, Q.Const) for u in uses)
+    const_start = all(isinstance(u.start, Q.Const) for u in uses)
+    if const_end or const_start:
+        # per-root closure set: kernel when Pallas is on, BFS otherwise.
+        # p+ composes one explicit edge onto the p* set: the *first* edge
+        # for descendants (x -> z ->* root), the *last* for ancestors
+        # (root ->* z -> y).
+        anchor = "end" if const_end else "start"   # both-const anchors on end
+        roots = {int(getattr(u, anchor).id) for u in uses}
+        for root in sorted(roots):
+            if use_pallas:
+                star = _kernel_reach_set(edges, root, interpret,
+                                         ancestors=not const_end)
+            elif const_end:
+                star = {int(v) for v in descendants(edges, root)}
+            else:
+                star = {int(v) for v in descendants(
+                    [(o, s) for s, o in edges], root)}
+            if const_end:
+                if min_hops == 0:
+                    pairs |= {(x, root) for x in star}
+                else:
+                    pairs |= {(s, root) for s, o in edges if o in star}
+            else:
+                if min_hops == 0:
+                    pairs |= {(root, y) for y in star}
+                else:
+                    pairs |= {(root, o) for s, o in edges if s in star}
+        return pairs
+
+    # mixed / variable endpoints: close the whole reach matrix once
+    idx, ids = build_class_index(edges)
+    if use_pallas:
+        import jax.numpy as jnp
+        from repro.kernels.closure import ops as cl_ops
+
+        adj = adjacency_from_edges(edges, idx)
+        reach = np.asarray(cl_ops.transitive_closure(
+            jnp.asarray(adj), max_depth=len(idx), use_pallas=True,
+            interpret=interpret))
+        if min_hops == 1:
+            reach = (adj @ reach.astype(np.float32)) > 0.5
+        pairs |= {(int(ids[i]), int(ids[j]))
+                  for i, j in zip(*np.nonzero(reach))}
+        return pairs
+    reach_sets = _host_reach_sets(edges)
+    if min_hops == 0:
+        for x, ys in reach_sets.items():
+            pairs |= {(x, y) for y in ys}
+    else:
+        for s, o in edges:
+            pairs |= {(s, y) for y in reach_sets[o]}
+    return pairs
+
+
+def augment_kb_with_closures(
+    q: Q.Query, kb: KnowledgeBase,
+    use_pallas: bool = False, interpret: bool = True,
+) -> KnowledgeBase:
+    """Materialize every variable-length path of ``q`` as closure-pair rows.
+
+    For each distinct ``(pred, min_hops)`` spec, the predicate's edge graph
+    is transitively closed (through :mod:`repro.kernels.closure` when
+    ``use_pallas``, host BFS otherwise — identical pair sets) and the pairs
+    appended to the KB as synthetic triples ``(x, CLOSURE_PRED_BASE+i, y)``.
+    The compiled plan turns each ``PathClosure`` into one ordinary
+    :class:`~repro.core.engine.KBJoin` against that relation — no unrolled
+    join chain, and every KB-access method/kernel path applies unchanged.
+    """
+    specs = closure_path_specs(q)
+    if not specs:
+        return kb
+    rows = host_rows(kb)
+    out_rows: List[Tuple[int, int, int]] = [
+        (int(s), int(p), int(o)) for s, p, o in rows
+    ]
+    for i, (pid, min_hops) in enumerate(specs):
+        uses = [it for it in q.where if isinstance(it, Q.PathClosure)
+                and (it.pred, it.min_hops) == (pid, min_hops)]
+        m = rows[:, 1] == np.uint32(pid)
+        edges = [(int(s), int(o)) for s, _, o in rows[m]]
+        pairs = _closure_pairs(edges, min_hops, uses, use_pallas, interpret)
+        cp = CLOSURE_PRED_BASE + i
+        out_rows.extend((x, cp, y) for x, y in sorted(pairs))
+    return kb_from_triples(out_rows)
 
 
 # --------------------------------------------------------------------------
@@ -82,6 +260,15 @@ def _compile_pattern(
     return CompiledPattern(s, p, o)
 
 
+def _compile_filter_expr(e: Q.FilterExpr, vt: "_VarTable") -> Tuple:
+    """FilterNum/FilterBool tree -> the engine's static tuple expression."""
+    if isinstance(e, Q.FilterNum):
+        return ("cmp", vt.col(e.var), e.op, e.value_id)
+    if e.op == "not":
+        return ("not", _compile_filter_expr(e.args[0], vt))
+    return (e.op,) + tuple(_compile_filter_expr(a, vt) for a in e.args)
+
+
 def compile_query(
     q: Q.Query,
     kb_method: str = "scan",
@@ -108,6 +295,7 @@ def compile_query(
     steps: List[Step] = []
     pending_filters: List[Q.WhereItem] = []
     aux = [0]
+    closure_specs = closure_path_specs(q)
 
     def _kb_step(cp: CompiledPattern) -> KBJoin:
         return KBJoin(cp, kb_method, k_max, use_pallas, fuse_compaction,
@@ -117,10 +305,18 @@ def compile_query(
         aux[0] += 1
         return "__aux%d" % aux[0]
 
+    def _filter_vars(item) -> Tuple[str, ...]:
+        return (item.var,) if isinstance(item, Q.FilterNum) else item.vars()
+
+    def _filter_step(item) -> Step:
+        if isinstance(item, Q.FilterNum):
+            return FilterNumStep(vt.col(item.var), item.op, item.value_id)
+        return FilterBoolStep(_compile_filter_expr(item, vt))
+
     def flush_filters():
         for item in list(pending_filters):
-            if isinstance(item, Q.FilterNum) and vt.col(item.var) in bound:
-                steps.append(FilterNumStep(vt.col(item.var), item.op, item.value_id))
+            if all(vt.col(v) in bound for v in _filter_vars(item)):
+                steps.append(_filter_step(item))
                 pending_filters.remove(item)
 
     # pass 1: stream patterns, greedily ordered so every pattern (after the
@@ -131,7 +327,7 @@ def compile_query(
         it for it in q.where if isinstance(it, Q.Pattern) and it.src == Q.STREAM
     ]
     for item in q.where:
-        if isinstance(item, Q.FilterNum):
+        if isinstance(item, (Q.FilterNum, Q.FilterBool)):
             pending_filters.append(item)
     bound_names: Set[str] = set()
     while remaining:
@@ -165,6 +361,16 @@ def compile_query(
                 )
                 steps.append(_kb_step(cp))
                 cur = nxt
+        elif isinstance(item, Q.PathClosure):
+            # one join against the materialized closure-pair relation (see
+            # augment_kb_with_closures) — never an unrolled join chain
+            cp_pred = CLOSURE_PRED_BASE + closure_specs.index(
+                (item.pred, item.min_hops))
+            cp = _compile_pattern(
+                Q.Pattern(item.start, Q.Const(cp_pred), item.end, Q.KB),
+                vt, bound,
+            )
+            steps.append(_kb_step(cp))
         elif isinstance(item, Q.FilterSubclass):
             cls_var = Q.Var(fresh_aux())
             cp = _compile_pattern(
@@ -233,7 +439,7 @@ def compile_query(
 
     # any filters whose variables only appear in construct scope
     for item in pending_filters:
-        steps.append(FilterNumStep(vt.col(item.var), item.op, item.value_id))
+        steps.append(_filter_step(item))
 
     # construct templates
     def tslot(t):
@@ -318,13 +524,25 @@ def prune_kb_for(q: Q.Query, kb: KnowledgeBase, capacity: Optional[int] = None,
 
     Keeps only triples whose predicate the query mentions; for
     ``FilterSubclass`` reasoning, ``rdf:type`` rows are additionally narrowed
-    to the subclass closure of the filter's super-class.
+    to the subclass closure of the filter's super-class.  Synthetic
+    closure-pair predicates (``PathClosure`` lowering) are kept when the
+    query declares the matching spec — pass the *augmented* KB
+    (:func:`augment_kb_with_closures`) for closure-path queries.
     """
-    preds, _ = kb_signature(q)
+    specs = closure_path_specs(q)
+    preds = tuple(sorted(set(kb_signature(q)[0]) | {
+        CLOSURE_PRED_BASE + i for i in range(len(specs))
+    }))
+    closure_traversed = {pid for pid, _ in specs}
     objects_by_pred: Dict[int, Set[int]] = {}
     if closure_narrow:
         for item in q.where:
             if isinstance(item, Q.FilterSubclass):
+                # never narrow a predicate a closure path traverses — the
+                # pair materialization needs its full edge set (pruning may
+                # legally run before augment_kb_with_closures)
+                if item.type_pred in closure_traversed:
+                    continue
                 edges = subclass_edges(kb, item.subclass_pred)
                 cls = set(int(c) for c in descendants(edges, item.super_class))
                 objects_by_pred.setdefault(item.type_pred, set()).update(cls)
@@ -374,7 +592,7 @@ def decompose(q: Q.Query, vocab: Vocab) -> OperatorDAG:
     kb_items: List[Q.WhereItem] = [
         it for it in q.where
         if (isinstance(it, Q.Pattern) and it.src == Q.KB)
-        or isinstance(it, (Q.PathKB, Q.FilterSubclass))
+        or isinstance(it, (Q.PathKB, Q.PathClosure, Q.FilterSubclass))
     ]
     other_items = [
         it for it in q.where if it not in stream_pats and it not in kb_items
@@ -383,7 +601,7 @@ def decompose(q: Q.Query, vocab: Vocab) -> OperatorDAG:
     def item_vars(it: Q.WhereItem) -> Set[str]:
         if isinstance(it, Q.Pattern):
             return set(it.vars())
-        if isinstance(it, Q.PathKB):
+        if isinstance(it, (Q.PathKB, Q.PathClosure)):
             return {t.name for t in (it.start, it.end) if isinstance(t, Q.Var)}
         if isinstance(it, Q.FilterSubclass):
             return {it.var}
@@ -496,7 +714,8 @@ def decompose(q: Q.Query, vocab: Vocab) -> OperatorDAG:
             agg_where.append(
                 Q.Pattern(Q.Var(row_var), Q.Const(tpl.p.id), tpl.o, Q.STREAM)
             )
-    final_q = Q.Query(name=final_name, where=tuple(agg_where), construct=q.construct)
+    final_q = Q.Query(name=final_name, where=tuple(agg_where),
+                      construct=q.construct, select=q.select)
     # KB patterns nested inside OPTIONAL/UNION groups stay with the
     # aggregator (their semantics are join-order dependent), so it needs its
     # own (pruned) KB slice when any are present

@@ -67,10 +67,69 @@ class PathKB:
 
 
 @dataclasses.dataclass(frozen=True)
+class PathClosure:
+    """Variable-length property path through the KB: ``start p+ end`` /
+    ``start p* end``.
+
+    ``min_hops=1`` is SPARQL ``p+`` (one or more edges); ``min_hops=0`` is
+    ``p*`` (zero or more).  The zero-length case is reflexive over the nodes
+    of the predicate's edge graph plus any constant endpoint of the path
+    expression — not over the unbounded universe of terms (SPARQL's ``p*``
+    over all graph terms has no bounded-tensor analogue).  The planner
+    compiles this through the fused :mod:`repro.kernels.closure` ops into a
+    materialized closure-pair relation, never an unrolled join chain.
+    """
+
+    start: Term
+    pred: int
+    end: Term
+    min_hops: int = 1       # 1 = p+, 0 = p*
+
+    def __post_init__(self):
+        assert self.min_hops in (0, 1), "closure paths are p+ or p*"
+
+
+@dataclasses.dataclass(frozen=True)
 class FilterNum:
     var: str
     op: str           # lt | le | gt | ge | eq | ne
     value_id: int     # fixed-point numeric literal id
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterBool:
+    """Boolean FILTER combination over numeric comparisons.
+
+    ``op`` is ``and`` / ``or`` (n-ary, >= 2 args) or ``not`` (1 arg); leaves
+    are :class:`FilterNum`.  Evaluation follows SPARQL's three-valued logic:
+    a comparison on a non-numeric binding is an *error*, errors absorb
+    through ``!``/``&&``/``||`` unless a definite ``false`` (for ``&&``) or
+    ``true`` (for ``||``) decides the value, and rows whose filter result is
+    not definitely true are dropped.
+    """
+
+    op: str                                       # and | or | not
+    args: Tuple["FilterExpr", ...]
+
+    def __post_init__(self):
+        assert self.op in ("and", "or", "not"), self.op
+        assert len(self.args) == 1 if self.op == "not" else len(self.args) >= 2
+
+    def vars(self) -> Tuple[str, ...]:
+        out: Dict[str, None] = {}
+
+        def walk(e):
+            if isinstance(e, FilterNum):
+                out.setdefault(e.var, None)
+            else:
+                for a in e.args:
+                    walk(a)
+
+        walk(self)
+        return tuple(out)
+
+
+FilterExpr = Union[FilterNum, FilterBool]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +153,8 @@ class UnionGroup:
     right: Tuple[Pattern, ...]
 
 
-WhereItem = Union[Pattern, PathKB, FilterNum, FilterSubclass, OptionalGroup, UnionGroup]
+WhereItem = Union[Pattern, PathKB, PathClosure, FilterNum, FilterBool,
+                  FilterSubclass, OptionalGroup, UnionGroup]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,11 +166,19 @@ class ConstructTemplate:
 
 @dataclasses.dataclass(frozen=True)
 class Query:
-    """CONSTRUCT query over (stream window, KB)."""
+    """CONSTRUCT (or SELECT) query over (stream window, KB).
+
+    ``select`` is the projection of the SELECT query form: when non-empty,
+    ``construct`` holds the equivalent binding-graph templates (one
+    ``(_:row0, ?:var, ?var)`` triple per projected variable — the same
+    row-node protocol the decomposer publishes intermediate streams with),
+    so every runtime executes SELECT queries unchanged.
+    """
 
     name: str
     where: Tuple[WhereItem, ...]
     construct: Tuple[ConstructTemplate, ...]
+    select: Tuple[str, ...] = ()
 
     def variables(self) -> List[str]:
         # dict-as-ordered-set: membership is O(1), first-seen order preserved
@@ -126,11 +194,14 @@ class Query:
             if isinstance(item, Pattern):
                 for t in (item.s, item.p, item.o):
                     add(t)
-            elif isinstance(item, PathKB):
+            elif isinstance(item, (PathKB, PathClosure)):
                 add(item.start)
                 add(item.end)
             elif isinstance(item, (FilterNum, FilterSubclass)):
                 out.setdefault(item.var, None)
+            elif isinstance(item, FilterBool):
+                for v in item.vars():
+                    out.setdefault(v, None)
             elif isinstance(item, OptionalGroup):
                 for p in item.patterns:
                     for t in (p.s, p.p, p.o):
@@ -152,6 +223,8 @@ class Query:
                 preds.append(item.p.id)
             elif isinstance(item, PathKB):
                 preds.extend(item.preds)
+            elif isinstance(item, PathClosure):
+                preds.append(item.pred)
             elif isinstance(item, FilterSubclass):
                 preds.extend([item.type_pred, item.subclass_pred])
             elif isinstance(item, OptionalGroup):

@@ -26,6 +26,11 @@ PAD_ID = 0
 PRED_BITS = 12
 TERM_BITS = 20
 PRED_SPACE = 1 << PRED_BITS          # predicate ids live in [1, 4096)
+# top of the predicate band is reserved for per-query synthetic predicates:
+# the planner materializes each variable-length path (p+/p*) as a closure
+# pair relation under CLOSURE_PRED_BASE + spec_index (see planner.py), so
+# vocab-interned predicates must stay below the band
+CLOSURE_PRED_BASE = PRED_SPACE - 64
 TERM_SPACE = 1 << TERM_BITS          # term ids live in [PRED_SPACE, 2**20)
 NUM_BASE = np.uint32(1 << 30)        # numeric literals live above this
 NUM_SCALE = 100.0                    # fixed-point scale for numeric literals
@@ -54,8 +59,11 @@ class Vocab:
     def pred(self, name: str) -> int:
         pid = self._pred_to_id.get(name)
         if pid is None:
-            if self._next_pred >= PRED_SPACE:
-                raise VocabError("predicate space exhausted (max %d)" % PRED_SPACE)
+            if self._next_pred >= CLOSURE_PRED_BASE:
+                raise VocabError(
+                    "predicate space exhausted (max %d; the top band is "
+                    "reserved for synthetic closure predicates)"
+                    % CLOSURE_PRED_BASE)
             pid = self._next_pred
             self._next_pred += 1
             self._pred_to_id[name] = pid

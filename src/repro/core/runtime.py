@@ -31,7 +31,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .engine import Plan, run_plan_windows
 from .kb import KnowledgeBase, pad_to
 from .operator import OperatorConfig, SCEPOperator
-from .planner import OperatorDAG, SubQuery, compile_query, prepare_env, prune_kb_for
+from .planner import (
+    OperatorDAG, SubQuery, augment_kb_with_closures, compile_query,
+    prepare_env, prune_kb_for,
+)
 from .rdf import TripleBatch, Vocab, empty_triples
 from .stream import merge_streams
 from .window import Windows, count_windows
@@ -127,12 +130,19 @@ def build_operators(
             join_bm=join_bm, join_bn=join_bn,
             interpret=config.interpret,
         )
-        # the paper's core move: each operator gets its own used-KB slice
-        op_kb = (
-            prune_kb_for(sub.query, kb, capacity=config.kb_capacity)
-            if sub.touches_kb
-            else None
-        )
+        # the paper's core move: each operator gets its own used-KB slice.
+        # Pruning runs first so closure-pair materialization works on the
+        # predicate-sized slice, not the full KB (prune_kb_for keeps every
+        # edge a closure path traverses); capacity padding comes last so
+        # the synthetic pair rows fit inside it.
+        op_kb = None
+        if sub.touches_kb:
+            op_kb = prune_kb_for(sub.query, kb)
+            op_kb = augment_kb_with_closures(
+                sub.query, op_kb, use_pallas=config.use_pallas,
+                interpret=config.interpret)
+            if config.kb_capacity:
+                op_kb = pad_to(op_kb, config.kb_capacity)
         env = prepare_env(sub.query, kb, use_pallas=config.use_pallas,
                           interpret=config.interpret)
         operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
@@ -267,6 +277,9 @@ class MonolithicRuntime:
         _warn_legacy_constructor("MonolithicRuntime", "monolithic")
         config = config if config is not None else RuntimeConfig()
         join_bm, join_bn = config.join_block_shapes or (None, None)
+        # closure-pair relations for variable-length paths (no-op otherwise)
+        kb = augment_kb_with_closures(q, kb, use_pallas=config.use_pallas,
+                                      interpret=config.interpret)
         plan = compile_query(
             q, kb_method=config.kb_method, scan_cap=config.scan_cap,
             bind_cap=config.bind_cap, out_cap=config.out_cap,

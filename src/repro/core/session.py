@@ -78,6 +78,12 @@ class ExecutionConfig:
     data_axis: str = "data"
     placement: Union[str, Dict[str, Any], None] = "round_robin"  # pipelined
     channel_capacity: int = 2          # chunks in flight (pipelined)
+    # per-query window geometry: when True, a registered query's
+    # ``[RANGE TRIPLES n STEP m]`` clause overrides ``window_capacity`` for
+    # that RegisteredQuery only, so one Session hosts queries with
+    # heterogeneous windows (``window_capacity`` stays the default for
+    # queries without a RANGE clause)
+    window_from_query: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -123,10 +129,30 @@ class RegisteredQuery:
         self.session = session
         self.query = query
         self.info = info
-        self.config = session.config
-        self.mode = session.config.mode
+        cfg = session.config
+        # per-query window geometry: the registration's RANGE TRIPLES clause
+        # overrides the session-wide default when the config opts in
+        self._range_applied = bool(
+            cfg.window_from_query and info is not None and info.window_triples)
+        if self._range_applied:
+            cfg = cfg.replace(window_capacity=info.window_triples)
+        self.config = cfg
+        self.mode = cfg.mode
         self.dag: Optional[OperatorDAG] = None
         self._runtime = self._build_runtime()
+
+    @property
+    def window_geometry(self) -> Tuple[int, Optional[int]]:
+        """``(window_triples, window_step)`` this query executes with.
+
+        ``window_triples`` is the effective per-query window capacity.
+        ``window_step`` echoes the registration's STEP clause only when the
+        RANGE clause is actually in effect (``window_from_query=True``);
+        execution is tumbling either way — each window advances by its full
+        extent, so STEP is recorded geometry, not an overlap factor.
+        """
+        return (self.config.window_capacity,
+                self.info.window_step if self._range_applied else None)
 
     # -- construction --------------------------------------------------------
     def _build_runtime(self):
@@ -170,10 +196,12 @@ class RegisteredQuery:
     @property
     def text(self) -> str:
         """Canonical C-SPARQL serialization of the registered query (the
-        original registration's PREFIX IRIs are preserved when parsed from
+        original registration's PREFIX IRIs and dataset clauses — including
+        per-query RANGE window geometry — are preserved when parsed from
         text)."""
         prefixes = dict(self.info.prefixes) if self.info else None
-        return serialize_query(self.query, self.session.vocab, prefixes)
+        return serialize_query(self.query, self.session.vocab, prefixes,
+                               info=self.info)
 
     # -- unified drive surface ----------------------------------------------
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, int]]:

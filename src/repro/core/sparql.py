@@ -16,14 +16,20 @@ Supported subset (§4.3's query characteristics, Tables 1-3):
 * ``PREFIX pfx: <iri>`` declarations (prefixed names are resolved against
   the vocab by their ``pfx:local`` spelling; the IRI documents provenance),
 * ``CONSTRUCT { ... }`` templates (vars, constants, ``_:rowN`` row nodes
-  for the decomposer's binding-graph protocol),
+  for the decomposer's binding-graph protocol) or the ``SELECT ?x ?y``
+  query form (projection; lowered onto the same binding-graph protocol —
+  one ``(_:row0, ?:var, ?var)`` template per projected variable),
 * ``FROM STREAM <...> [RANGE TRIPLES n STEP m]`` / ``FROM <...>`` dataset
-  clauses (parsed into :class:`ParseInfo`; window geometry stays owned by
-  :class:`~repro.core.session.ExecutionConfig`),
+  clauses (parsed into :class:`ParseInfo`; with
+  ``ExecutionConfig(window_from_query=True)`` the RANGE clause drives the
+  registered query's own window geometry),
 * ``WHERE`` with: stream triple patterns, ``GRAPH <kb> { ... }`` blocks
   (plain KB patterns, fixed-length property paths ``p1/p2/p3`` with
-  length <= 3, hierarchy reasoning ``type/subClassOf*``), ``OPTIONAL``,
-  ``{...} UNION {...}``, and numeric ``FILTER`` comparisons.
+  length <= 3, variable-length closure paths ``p+`` / ``p*`` compiled
+  through the fused closure kernel, hierarchy reasoning
+  ``type/subClassOf*``), ``OPTIONAL``, ``{...} UNION {...}``, and
+  ``FILTER`` with numeric comparisons combined by ``&&`` / ``||`` / ``!``
+  (SPARQL three-valued semantics).
 
 Term resolution is positional, matching the hand-built query builders:
 names in predicate position intern via ``vocab.pred``; subject/object
@@ -87,21 +93,22 @@ _TOKEN_RE = re.compile(
   | (?P<nsdecl>[A-Za-z][A-Za-z0-9_.-]*:)
   | (?P<word>[A-Za-z_][A-Za-z0-9_]*)
   | (?P<op><=|>=|!=|=|<|>)
-  | (?P<punct>[{}().\[\]/*])
+  | (?P<lop>&&|\|\|)
+  | (?P<punct>[{}().\[\]/*+!])
     """,
     re.VERBOSE,
 )
 
 _KEYWORDS = {
-    "REGISTER", "QUERY", "AS", "PREFIX", "CONSTRUCT", "FROM", "STREAM",
-    "RANGE", "TRIPLES", "STEP", "WHERE", "GRAPH", "OPTIONAL", "UNION",
-    "FILTER",
+    "REGISTER", "QUERY", "AS", "PREFIX", "CONSTRUCT", "SELECT", "FROM",
+    "STREAM", "RANGE", "TRIPLES", "STEP", "WHERE", "GRAPH", "OPTIONAL",
+    "UNION", "FILTER",
 }
 
 
 @dataclasses.dataclass(frozen=True)
 class Token:
-    kind: str          # var | row | iri | num | pname | nsdecl | word | op | punct | eof
+    kind: str   # var | row | iri | num | pname | nsdecl | word | op | lop | punct | eof
     text: str
     line: int
     col: int
@@ -222,8 +229,8 @@ class _Parser:
                 "<dscep:id:N>" % tok.text, tok)
         raise self.error("expected a term, found %r" % tok.text, tok)
 
-    def _pred_segment(self) -> Tuple[int, bool]:
-        """One path segment: pname or <dscep:id:N>, with optional '*'."""
+    def _pred_segment(self) -> Tuple[int, str]:
+        """One path segment: pname or <dscep:id:N>, optionally '*' / '+'."""
         tok = self.next()
         if tok.kind == "pname":
             pid = self._resolve_pname(tok, "pred")
@@ -232,11 +239,10 @@ class _Parser:
         else:
             raise self.error(
                 "expected a predicate name, found %r" % tok.text, tok)
-        star = False
-        if self.at_punct("*"):
-            self.next()
-            star = True
-        return pid, star
+        mod = ""
+        if self.at_punct("*") or self.at_punct("+"):
+            mod = self.next().text
+        return pid, mod
 
     # -- prologue ----------------------------------------------------------
     def parse_prologue(self, info: dict) -> None:
@@ -289,6 +295,33 @@ class _Parser:
                 if iri.kind != "iri":
                     raise self.error("expected <iri> after FROM", iri)
                 info.setdefault("kb_iris", []).append(iri.text[1:-1])
+
+    # -- SELECT ------------------------------------------------------------
+    def parse_select(
+        self,
+    ) -> Tuple[Tuple[str, ...], Tuple[Q.ConstructTemplate, ...]]:
+        """``SELECT ?x ?y`` — lowered onto the binding-graph protocol.
+
+        Each projected variable becomes one ``(_:row0, ?:var, ?var)``
+        template, so every runtime publishes SELECT rows exactly like the
+        decomposer publishes intermediate binding streams (one RDF-graph
+        event per result row, keyed by a synthetic row node).
+        """
+        self.expect_word("SELECT")
+        names: List[str] = []
+        while self.peek().kind == "var":
+            name = self.next().text[1:]
+            if name in names:
+                raise self.error("duplicate SELECT variable ?%s" % name)
+            names.append(name)
+        if not names:
+            raise self.error("SELECT needs at least one ?variable")
+        construct = tuple(
+            Q.ConstructTemplate(Q.RowId(0),
+                                Q.Const(self.vocab.pred("?:" + v)), Q.Var(v))
+            for v in names
+        )
+        return tuple(names), construct
 
     # -- CONSTRUCT ---------------------------------------------------------
     def parse_construct(self) -> Tuple[Q.ConstructTemplate, ...]:
@@ -369,20 +402,28 @@ class _Parser:
         return self._finish_path(s, segs, subj_tok, forced_path=False)
 
     def _finish_path(
-        self, s: Q.Term, segs: List[Tuple[int, bool]], subj_tok: Token,
+        self, s: Q.Term, segs: List[Tuple[int, str]], subj_tok: Token,
         forced_path: bool,
     ) -> Q.WhereItem:
         o = self.term("term")
         self.expect_punct(".")
-        stars = [star for _, star in segs]
-        if any(stars):
-            # hierarchy reasoning: exactly `type/subClassOf*` with a
-            # variable instance and a constant super-class
-            if len(segs) != 2 or stars != [False, True]:
+        mods = [mod for _, mod in segs]
+        if len(segs) == 1 and mods[0]:
+            # variable-length closure path `?x p+ ?y` / `?x p* ?y`
+            if isinstance(s, Q.RowId) or isinstance(o, Q.RowId):
+                raise self.error("row nodes cannot anchor a property path",
+                                 subj_tok)
+            return Q.PathClosure(s, segs[0][0], o,
+                                 min_hops=0 if mods[0] == "*" else 1)
+        if any(mods):
+            # multi-segment modifiers: only the paper's hierarchy form
+            # `type/subClassOf*` (variable instance, constant super-class)
+            if len(segs) != 2 or mods != ["", "*"]:
                 raise self.error(
-                    "'*' is only supported as the hierarchy form "
-                    "'?x type/subClassOf* Class' (exactly two segments, "
-                    "star on the second)", subj_tok)
+                    "path modifiers are only supported as a single-segment "
+                    "closure path '?x p+ ?y' / '?x p* ?y' or the hierarchy "
+                    "form '?x type/subClassOf* Class' (exactly two "
+                    "segments, star on the second)", subj_tok)
             if not isinstance(s, Q.Var):
                 raise self.error(
                     "hierarchy filter subject must be a variable", subj_tok)
@@ -447,9 +488,47 @@ class _Parser:
             raise self.error("UNION branch is empty")
         return tuple(pats)
 
-    def parse_filter(self) -> Q.FilterNum:
+    def parse_filter(self) -> Union[Q.FilterNum, Q.FilterBool]:
+        """``FILTER( <bool expr> )`` — ``||`` < ``&&`` < ``!`` precedence.
+
+        Operand lists at one precedence level become one n-ary
+        :class:`~repro.core.query.FilterBool` node (``a && b && c`` is a
+        single 3-ary ``and``); explicit parentheses nest instead, so every
+        tree shape round-trips.  A bare comparison stays a
+        :class:`~repro.core.query.FilterNum`.
+        """
         self.expect_word("FILTER")
         self.expect_punct("(")
+        expr = self._filter_or()
+        self.expect_punct(")")
+        return expr
+
+    def _filter_or(self) -> Q.FilterExpr:
+        parts = [self._filter_and()]
+        while self.peek().kind == "lop" and self.peek().text == "||":
+            self.next()
+            parts.append(self._filter_and())
+        return parts[0] if len(parts) == 1 else Q.FilterBool("or", tuple(parts))
+
+    def _filter_and(self) -> Q.FilterExpr:
+        parts = [self._filter_unary()]
+        while self.peek().kind == "lop" and self.peek().text == "&&":
+            self.next()
+            parts.append(self._filter_unary())
+        return parts[0] if len(parts) == 1 else Q.FilterBool("and", tuple(parts))
+
+    def _filter_unary(self) -> Q.FilterExpr:
+        if self.at_punct("!"):
+            self.next()
+            return Q.FilterBool("not", (self._filter_unary(),))
+        if self.at_punct("("):
+            self.next()
+            expr = self._filter_or()
+            self.expect_punct(")")
+            return expr
+        return self._filter_cmp()
+
+    def _filter_cmp(self) -> Q.FilterNum:
         var_tok = self.next()
         if var_tok.kind != "var":
             raise self.error(
@@ -462,7 +541,6 @@ class _Parser:
         num_tok = self.next()
         if num_tok.kind != "num":
             raise self.error("expected a numeric literal in FILTER", num_tok)
-        self.expect_punct(")")
         return Q.FilterNum(var_tok.text[1:], _CMP_TO_OP[cmp_tok.text],
                            Vocab.number(float(num_tok.text)))
 
@@ -470,14 +548,19 @@ class _Parser:
     def parse(self, default_name: Optional[str]) -> Tuple[Q.Query, ParseInfo]:
         info: dict = {}
         self.parse_prologue(info)
-        construct = self.parse_construct()
+        select: Tuple[str, ...] = ()
+        if self.at_word("SELECT"):
+            select, construct = self.parse_select()
+        else:
+            construct = self.parse_construct()
         self.parse_from_clauses(info)
         where = self.parse_where()
         t = self.peek()
         if t.kind != "eof":
             raise self.error("unexpected trailing input %r" % t.text, t)
         name = info.get("name") or default_name or "query"
-        q = Q.Query(name=name, where=where, construct=construct)
+        q = Q.Query(name=name, where=where, construct=construct,
+                    select=select)
         _validate(q, self)
         return q, ParseInfo(
             name=info.get("name"),
@@ -494,11 +577,13 @@ def _where_variables(q: Q.Query) -> set:
     for item in q.where:
         if isinstance(item, Q.Pattern):
             out |= set(item.vars())
-        elif isinstance(item, Q.PathKB):
+        elif isinstance(item, (Q.PathKB, Q.PathClosure)):
             out |= {t.name for t in (item.start, item.end)
                     if isinstance(t, Q.Var)}
         elif isinstance(item, (Q.FilterNum, Q.FilterSubclass)):
             out.add(item.var)
+        elif isinstance(item, Q.FilterBool):
+            out |= set(item.vars())
         elif isinstance(item, Q.OptionalGroup):
             for p in item.patterns:
                 out |= set(p.vars())
@@ -510,11 +595,12 @@ def _where_variables(q: Q.Query) -> set:
 
 def _validate(q: Q.Query, parser: Optional[_Parser] = None) -> None:
     bound = _where_variables(q)
+    kind = "SELECT" if q.select else "CONSTRUCT"
     for tpl in q.construct:
         for t in (tpl.s, tpl.p, tpl.o):
             if isinstance(t, Q.Var) and t.name not in bound:
-                err = ("CONSTRUCT variable ?%s is not bound by any WHERE "
-                       "pattern" % t.name)
+                err = ("%s variable ?%s is not bound by any WHERE "
+                       "pattern" % (kind, t.name))
                 raise (parser.error(err) if parser else SparqlError(err))
 
 
@@ -593,6 +679,10 @@ class _Serializer:
                 path = "(%s)" % path     # disambiguate from a plain pattern
             return "%s%s %s %s ." % (
                 indent, self.term(item.start), path, self.term(item.end))
+        if isinstance(item, Q.PathClosure):
+            return "%s%s %s%s %s ." % (
+                indent, self.term(item.start), self.const(item.pred, "pred"),
+                "*" if item.min_hops == 0 else "+", self.term(item.end))
         if isinstance(item, Q.FilterSubclass):
             return "%s?%s %s/%s* %s ." % (
                 indent, item.var, self.const(item.type_pred, "pred"),
@@ -600,9 +690,33 @@ class _Serializer:
                 self.const(item.super_class, "term"))
         raise SparqlError("cannot serialize %r inside a graph block" % item)
 
-    def serialize(self, q: Q.Query) -> str:
+    def filter_text(self, e: Q.FilterExpr) -> str:
+        """Canonical boolean-filter text; parses back to the same tree.
+
+        Minimal parenthesization under ``|| < && < !`` precedence: nested
+        same-op nodes and ``or`` under ``and`` keep explicit parens (the
+        parser builds n-ary nodes from each syntactic operand list, so the
+        parens are what preserve the nesting); ``!`` always parenthesizes
+        its argument.
+        """
+        if isinstance(e, Q.FilterNum):
+            return "?%s %s %s" % (e.var, _OP_TO_CMP[e.op],
+                                  _num_text(e.value_id))
+        if e.op == "not":
+            return "!(%s)" % self.filter_text(e.args[0])
+        sep = " && " if e.op == "and" else " || "
+        parts = []
+        for a in e.args:
+            text = self.filter_text(a)
+            if isinstance(a, Q.FilterBool) and a.op != "not" and (
+                    a.op == e.op or (e.op == "and" and a.op == "or")):
+                text = "(%s)" % text
+            parts.append(text)
+        return sep.join(parts)
+
+    def serialize(self, q: Q.Query, info: Optional[ParseInfo] = None) -> str:
         body: List[str] = []
-        kb_kinds = (Q.PathKB, Q.FilterSubclass)
+        kb_kinds = (Q.PathKB, Q.PathClosure, Q.FilterSubclass)
         i = 0
         where = list(q.where)
         while i < len(where):
@@ -626,9 +740,8 @@ class _Serializer:
             elif isinstance(item, Q.Pattern):
                 body.append(self.item(item, "  "))
                 i += 1
-            elif isinstance(item, Q.FilterNum):
-                body.append("  FILTER(?%s %s %s)" % (
-                    item.var, _OP_TO_CMP[item.op], _num_text(item.value_id)))
+            elif isinstance(item, (Q.FilterNum, Q.FilterBool)):
+                body.append("  FILTER(%s)" % self.filter_text(item))
                 i += 1
             elif isinstance(item, Q.OptionalGroup):
                 body.append("  OPTIONAL {")
@@ -655,15 +768,46 @@ class _Serializer:
             else:
                 raise SparqlError("cannot serialize where item %r" % (item,))
 
-        construct = ["  %s %s %s ." % (self.term(t.s), self.term(t.p, "pred"),
-                                       self.term(t.o)) for t in q.construct]
+        if q.select:
+            # SELECT is sugar for the binding-graph templates the parser
+            # synthesizes; anything else cannot re-parse to the same AST
+            expected = tuple(
+                Q.ConstructTemplate(Q.RowId(0),
+                                    Q.Const(self.vocab.pred("?:" + v)),
+                                    Q.Var(v))
+                for v in q.select
+            )
+            if q.construct != expected:
+                raise SparqlError(
+                    "SELECT query %r carries construct templates that do "
+                    "not match its projection — cannot serialize" % q.name)
+            construct = []
+        else:
+            construct = ["  %s %s %s ." % (self.term(t.s),
+                                           self.term(t.p, "pred"),
+                                           self.term(t.o))
+                         for t in q.construct]
         lines = ["REGISTER QUERY %s AS" % q.name]
         for pfx in sorted(self.prefixes):
             iri = self.prefix_iris.get(pfx, "urn:dscep:%s" % pfx)
             lines.append("PREFIX %s: <%s>" % (pfx, iri))
-        lines.append("CONSTRUCT {")
-        lines.extend(construct)
-        lines.append("}")
+        if q.select:
+            lines.append("SELECT " + " ".join("?%s" % v for v in q.select))
+        else:
+            lines.append("CONSTRUCT {")
+            lines.extend(construct)
+            lines.append("}")
+        if info is not None:
+            if info.stream_iri:
+                clause = "FROM STREAM <%s>" % info.stream_iri
+                if info.window_triples:
+                    clause += " [RANGE TRIPLES %d" % info.window_triples
+                    if info.window_step:
+                        clause += " STEP %d" % info.window_step
+                    clause += "]"
+                lines.append(clause)
+            for kb_iri in info.kb_iris:
+                lines.append("FROM <%s>" % kb_iri)
         lines.append("WHERE {")
         lines.extend(body)
         lines.append("}")
@@ -673,6 +817,7 @@ class _Serializer:
 def serialize_query(
     q: Q.Query, vocab: Vocab,
     prefix_iris: Optional[Mapping[str, str]] = None,
+    info: Optional[ParseInfo] = None,
 ) -> str:
     """Serialize a Query AST to canonical C-SPARQL text.
 
@@ -682,5 +827,8 @@ def serialize_query(
     ``prefix_iris`` overrides the emitted ``PREFIX`` IRIs (e.g. the
     declarations captured in :class:`ParseInfo`); well-known namespaces
     default to their real IRIs, anything else to ``urn:dscep:<prefix>``.
+    ``info`` additionally emits the registration's dataset clauses
+    (``FROM STREAM <...> [RANGE TRIPLES n STEP m]`` / ``FROM <...>``), so
+    per-query window geometry survives a serialize/parse round trip.
     """
-    return _Serializer(vocab, prefix_iris).serialize(q)
+    return _Serializer(vocab, prefix_iris).serialize(q, info)

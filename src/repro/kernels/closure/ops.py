@@ -69,3 +69,20 @@ def closure_descendants(
     )
     # padded rows are unreachable, so ids never exceed n - 1
     return ids, count
+
+
+def closure_ancestors(
+    adj: jax.Array, root: int, out_cap: int, max_depth: int | None = None,
+    block: int = 128, use_pallas: bool = True, interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Ancestor set of node ``root``: everything ``root`` reaches.
+
+    The dual of :func:`closure_descendants` — descendants are the rows of
+    the closure column ``R*[:, root]`` (x reaches root), ancestors the
+    columns of the row ``R*[root, :]`` (root reaches y), which is exactly
+    the descendants computation on the transposed adjacency.  Same fused
+    final squaring + in-kernel compaction, same ``(ids, count)`` contract.
+    """
+    return closure_descendants(
+        jnp.swapaxes(adj, -1, -2), root, out_cap, max_depth=max_depth,
+        block=block, use_pallas=use_pallas, interpret=interpret)

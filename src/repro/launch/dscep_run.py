@@ -57,6 +57,10 @@ def main(argv=None):
     ap.add_argument("--shows", type=int, default=24)
     ap.add_argument("--filler", type=int, default=1000)
     ap.add_argument("--window-cap", type=int, default=256)
+    ap.add_argument("--window-from-query", action="store_true",
+                    help="let the query's [RANGE TRIPLES n STEP m] clause "
+                         "drive its window geometry instead of --window-cap "
+                         "(per-query windows)")
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas hash-join kernel")
     ap.add_argument("--fuse", action="store_true",
@@ -90,6 +94,7 @@ def main(argv=None):
         use_pallas=args.pallas, fuse_compaction=args.fuse,
         interpret=not args.no_interpret,
         placement=args.placement, channel_capacity=args.channel_capacity,
+        window_from_query=args.window_from_query,
     )
     session = Session(cfg, vocab=vocab, kb=kbd.kb)
     if args.rq:
@@ -100,8 +105,12 @@ def main(argv=None):
         reg = session.register(QUERIES[qname])
 
     total_kb = int(np.asarray(kbd.kb.count()))
+    win, step = reg.window_geometry
     print(f"[dscep] query={qname} method={args.method} mode={args.mode} "
           f"stream={len(rows)} triples in {len(chunks)} chunks, KB={total_kb}")
+    print(f"[dscep] window geometry: {win} triples"
+          + (f" (STEP {step})" if step else "")
+          + (" [from query RANGE clause]" if args.window_from_query else ""))
 
     if args.mode != "monolithic":
         dag = reg.dag

@@ -4,10 +4,13 @@ The real package is preferred (``pip install -r requirements-dev.txt``); when
 it is missing, :func:`install` registers this module as ``hypothesis`` /
 ``hypothesis.strategies`` in ``sys.modules`` *before* test modules import it
 (conftest.py runs first).  It implements exactly the API surface the tests
-use — ``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``
-and the ``integers`` / ``floats`` / ``lists`` / ``tuples`` / ``sampled_from``
-strategies — by drawing deterministic pseudo-random examples: example ``i``
-of every test draws from ``random.Random(i)``, so failures reproduce.
+use — ``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``,
+the flat ``integers`` / ``floats`` / ``lists`` / ``tuples`` /
+``sampled_from`` / ``just`` / ``one_of`` / ``builds`` strategies, and the
+grammar combinators ``recursive`` / ``deferred`` / ``composite`` that
+tests/strategies.py builds random Query ASTs with — by drawing deterministic
+pseudo-random examples: example ``i`` of every test draws from
+``random.Random(i)``, so failures reproduce.
 
 No shrinking, no database, no adaptive search: this is a fallback that keeps
 property tests *running* (as seeded fuzz tests), not a replacement.
@@ -63,6 +66,71 @@ def lists(elements: SearchStrategy, min_size=0, max_size=None) -> SearchStrategy
 
 def tuples(*strategies: SearchStrategy) -> SearchStrategy:
     return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    """Accepts varargs or a single iterable, like the real API."""
+    if len(strategies) == 1 and not isinstance(strategies[0], SearchStrategy):
+        strategies = tuple(strategies[0])
+    return SearchStrategy(lambda rng: rng.choice(strategies).example(rng))
+
+
+def _draw_arg(arg, rng):
+    return arg.example(rng) if isinstance(arg, SearchStrategy) else arg
+
+
+def builds(target, *args, **kwargs) -> SearchStrategy:
+    return SearchStrategy(lambda rng: target(
+        *(_draw_arg(a, rng) for a in args),
+        **{k: _draw_arg(v, rng) for k, v in kwargs.items()},
+    ))
+
+
+def recursive(base: SearchStrategy, extend, max_leaves: int = 100) -> SearchStrategy:
+    """Bounded-depth stand-in for ``st.recursive``.
+
+    The real strategy grows trees adaptively under a leaf budget; the
+    fallback unrolls three extension levels (``extend`` applied to a mix of
+    base and already-extended strategies), which covers the nesting the
+    suite's grammars exercise while always terminating.
+    """
+    levels = base
+    for _ in range(3):
+        levels = one_of(base, extend(levels))
+    return levels
+
+
+def deferred(definition) -> SearchStrategy:
+    """Lazily-resolved strategy (self-/forward-references in grammars)."""
+    resolved = []
+
+    def draw(rng):
+        if not resolved:
+            resolved.append(definition())
+        return resolved[0].example(rng)
+
+    return SearchStrategy(draw)
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_example(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+
+        return SearchStrategy(draw_example)
+
+    return factory
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
@@ -128,8 +196,10 @@ def install() -> None:
     mod.SearchStrategy = SearchStrategy
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "sampled_from", "lists",
-                 "tuples"):
+                 "tuples", "just", "none", "one_of", "builds", "recursive",
+                 "deferred", "composite"):
         setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
     mod.strategies = st
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,225 @@
+"""Hypothesis strategies generating random well-formed Query ASTs.
+
+The frontend's totality claim — ``parse_query(serialize_query(q)) == q`` for
+*every* AST — is pinned by golden paper queries in tests/test_sparql.py; the
+strategies here widen that to the whole grammar: stream/KB patterns,
+fixed-length and variable-length (closure) property paths, hierarchy
+filters, boolean FILTER trees (via ``st.recursive``/``st.deferred``),
+OPTIONAL/UNION groups, CONSTRUCT templates with row nodes, and the SELECT
+projection form — all over one small deterministic :class:`GenWorld`
+vocab/KB so drawn constants are real interned ids.
+
+Works with real hypothesis and with tests/_hypothesis_fallback.py (the
+seeded-fuzz stand-in used when the dep is absent) — conftest.py installs the
+fallback before this module imports ``hypothesis.strategies``.
+"""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+
+from repro.core import query as Q
+from repro.core.kb import KnowledgeBase, kb_from_triples
+from repro.core.rdf import NUM_BASE, Vocab
+
+
+class GenWorld:
+    """Deterministic tiny vocab + KB the generated queries range over.
+
+    The subclass graph under ``gk:sub`` deliberately contains a diamond and
+    a cycle (C4 <-> C5) so closure paths exercise DAG- and cycle-safety.
+    """
+
+    def __init__(self) -> None:
+        v = self.vocab = Vocab()
+        self.stream_preds = [v.pred("gs:p%d" % i) for i in range(4)]
+        self.kb_preds = [v.pred("gk:k%d" % i) for i in range(3)]
+        self.type_pred = v.pred("gk:type")
+        self.sub_pred = v.pred("gk:sub")
+        self.classes = [v.term("gk:C%d" % i) for i in range(6)]
+        self.entities = [v.term("gk:e%d" % i) for i in range(8)]
+        C, E = self.classes, self.entities
+        rows = [
+            # diamond: C2 -> {C0, C1} -> C0-root side; plus a 2-cycle
+            (C[1], self.sub_pred, C[0]),
+            (C[2], self.sub_pred, C[0]),
+            (C[3], self.sub_pred, C[1]),
+            (C[3], self.sub_pred, C[2]),
+            (C[4], self.sub_pred, C[5]),
+            (C[5], self.sub_pred, C[4]),
+        ]
+        for i, e in enumerate(E):
+            rows.append((e, self.type_pred, C[i % len(C)]))
+            rows.append((e, self.kb_preds[i % len(self.kb_preds)],
+                         E[(i + 3) % len(E)]))
+        self.kb_rows = rows
+        self.kb: KnowledgeBase = kb_from_triples(rows)
+
+
+WORLD = GenWorld()
+
+_VAR_NAMES = ("a", "b", "c", "x", "y", "z")
+_NUM_OPS = ("lt", "le", "gt", "ge", "eq", "ne")
+
+
+def variables():
+    return st.builds(Q.Var, st.sampled_from(_VAR_NAMES))
+
+
+def kb_consts(world: GenWorld = WORLD):
+    return st.builds(Q.Const, st.sampled_from(world.entities + world.classes))
+
+
+def num_consts():
+    # fixed-point ids two decimals deep: every id formats/parses exactly
+    return st.builds(lambda k: Q.Const(int(NUM_BASE) + k),
+                     st.integers(0, 999))
+
+
+def terms(world: GenWorld = WORLD):
+    return st.one_of(variables(), kb_consts(world), num_consts())
+
+
+def stream_patterns(world: GenWorld = WORLD):
+    return st.builds(
+        Q.Pattern, variables(),
+        st.builds(Q.Const, st.sampled_from(world.stream_preds)),
+        terms(world), st.just(Q.STREAM),
+    )
+
+
+def kb_patterns(world: GenWorld = WORLD):
+    return st.builds(
+        Q.Pattern, st.one_of(variables(), kb_consts(world)),
+        st.builds(Q.Const, st.sampled_from(world.kb_preds)),
+        st.one_of(variables(), kb_consts(world)), st.just(Q.KB),
+    )
+
+
+def paths_kb(world: GenWorld = WORLD):
+    return st.builds(
+        lambda s, preds, e: Q.PathKB(s, tuple(preds), e),
+        st.one_of(variables(), kb_consts(world)),
+        st.lists(st.sampled_from(world.kb_preds), min_size=1, max_size=3),
+        st.one_of(variables(), kb_consts(world)),
+    )
+
+
+def paths_closure(world: GenWorld = WORLD):
+    return st.builds(
+        Q.PathClosure, st.one_of(variables(), kb_consts(world)),
+        st.sampled_from([world.sub_pred] + world.kb_preds),
+        st.one_of(variables(), kb_consts(world)),
+        st.integers(0, 1),
+    )
+
+
+def filters_subclass(world: GenWorld = WORLD):
+    return st.builds(
+        Q.FilterSubclass, st.sampled_from(_VAR_NAMES),
+        st.just(world.type_pred), st.just(world.sub_pred),
+        st.sampled_from(world.classes),
+    )
+
+
+def filter_leaves():
+    return st.builds(Q.FilterNum, st.sampled_from(_VAR_NAMES),
+                     st.sampled_from(_NUM_OPS),
+                     st.builds(lambda k: int(NUM_BASE) + k,
+                               st.integers(0, 999)))
+
+
+# boolean FILTER trees: st.deferred breaks the self-reference, st.recursive
+# bounds the growth — exactly the combinators the fallback must now cover
+filter_exprs = st.deferred(lambda: st.recursive(
+    filter_leaves(),
+    lambda children: st.one_of(
+        st.builds(lambda a: Q.FilterBool("not", (a,)), children),
+        st.builds(lambda a, b: Q.FilterBool("and", (a, b)),
+                  children, children),
+        st.builds(lambda a, b: Q.FilterBool("or", (a, b)),
+                  children, children),
+        st.builds(lambda a, b, c: Q.FilterBool("or", (a, b, c)),
+                  children, children, children),
+    ),
+    max_leaves=6,
+))
+
+
+def filters_bool():
+    # only composite nodes: a bare leaf is a FilterNum where-item, not a tree
+    return st.builds(
+        lambda kind, a, b: Q.FilterBool(*(("not", (a,)) if kind == "not"
+                                          else (kind, (a, b)))),
+        st.sampled_from(("and", "or", "not")), filter_exprs, filter_exprs,
+    )
+
+
+def optional_groups(world: GenWorld = WORLD):
+    return st.builds(
+        lambda ps: Q.OptionalGroup(tuple(ps)),
+        st.lists(st.one_of(stream_patterns(world), kb_patterns(world)),
+                 min_size=1, max_size=2),
+    )
+
+
+def union_groups(world: GenWorld = WORLD):
+    branch = st.lists(st.one_of(stream_patterns(world), kb_patterns(world)),
+                      min_size=1, max_size=2)
+    return st.builds(
+        lambda l, r: Q.UnionGroup(tuple(l), tuple(r)), branch, branch,
+    )
+
+
+def where_items(world: GenWorld = WORLD):
+    return st.one_of(
+        stream_patterns(world), kb_patterns(world), paths_kb(world),
+        paths_closure(world), filters_subclass(world), filter_leaves(),
+        filters_bool(), optional_groups(world), union_groups(world),
+    )
+
+
+def select_templates(names, vocab: Vocab):
+    """The construct templates the SELECT form lowers to (must mirror the
+    parser's synthesis exactly, or parse(serialize(q)) != q)."""
+    return tuple(
+        Q.ConstructTemplate(Q.RowId(0), Q.Const(vocab.pred("?:" + n)),
+                            Q.Var(n))
+        for n in names
+    )
+
+
+@st.composite
+def queries(draw, world: GenWorld = WORLD):
+    """A random well-formed Query AST (CONSTRUCT or SELECT form)."""
+    n_stream = draw(st.integers(1, 2))
+    n_other = draw(st.integers(0, 3))
+    where = [draw(stream_patterns(world)) for _ in range(n_stream)]
+    where += [draw(where_items(world)) for _ in range(n_other)]
+    bound = sorted(Q.Query(name="tmp", where=tuple(where),
+                           construct=()).variables())
+    if not bound:           # all-constant where: bind something projectable
+        where.append(Q.Pattern(Q.Var("a"),
+                               Q.Const(world.stream_preds[0]),
+                               Q.Var("b"), Q.STREAM))
+        bound = ["a", "b"]
+    if draw(st.booleans()):
+        k = draw(st.integers(1, min(3, len(bound))))
+        names = tuple(bound[:k])
+        return Q.Query(name="genq", where=tuple(where),
+                       construct=select_templates(names, world.vocab),
+                       select=names)
+    n_tpl = draw(st.integers(1, 2))
+    construct = []
+    for i in range(n_tpl):
+        subj = draw(st.one_of(
+            st.builds(Q.Var, st.sampled_from(bound)), kb_consts(world),
+            st.builds(Q.RowId, st.integers(0, 3))))
+        pred = draw(st.one_of(
+            st.builds(Q.Var, st.sampled_from(bound)),
+            st.builds(Q.Const, st.sampled_from(world.stream_preds))))
+        obj = draw(st.one_of(
+            st.builds(Q.Var, st.sampled_from(bound)), kb_consts(world),
+            num_consts()))
+        construct.append(Q.ConstructTemplate(subj, pred, obj))
+    return Q.Query(name="genq", where=tuple(where),
+                   construct=tuple(construct))

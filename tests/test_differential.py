@@ -1,0 +1,599 @@
+"""Generative cross-mode differential harness + pure-Python oracle.
+
+Two layers of defence for the frontend expansion (variable-length closure
+paths, boolean FILTER trees, SELECT, per-query windows):
+
+* **cross-mode**: every generated query + random stream must produce
+  bit-identical output chunks and overflow counts across ``monolithic``,
+  ``single_program`` and ``pipelined`` — the paper's "All results are the
+  same" claim, now property-tested over a query *grammar* instead of three
+  golden queries;
+* **oracle**: a pure-Python triple-store evaluator (no JAX anywhere in the
+  oracle path) independently computes each window's result set — windowing
+  (greedy graph-preserving packing), join/closure/filter semantics and
+  CONSTRUCT/SELECT projection — and must agree with the engine per chunk.
+
+Failing examples are dumped as reprs under ``diff_failures/`` so the CI
+``differential-smoke`` job can upload them as artifacts.
+
+Example budgets honour ``DSCEP_DIFF_EXAMPLES`` (reduced in CI smoke).
+"""
+from __future__ import annotations
+
+import os
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import hypothesis.strategies as st
+
+from repro.core import query as Q
+from repro.core.engine import KBJoin
+from repro.core.kb import kb_from_triples
+from repro.core.planner import closure_path_specs, compile_query
+from repro.core.rdf import (
+    CLOSURE_PRED_BASE, NUM_BASE, ROW_BASE, Vocab, make_triples, to_host_rows,
+)
+from repro.core.session import ExecutionConfig, MODES, Session
+
+N_EXAMPLES = int(os.environ.get("DSCEP_DIFF_EXAMPLES", "6"))
+FAIL_DIR = os.path.join(os.path.dirname(__file__), "..", "diff_failures")
+
+
+def _dump_failure(tag: str, payload: str) -> None:
+    os.makedirs(FAIL_DIR, exist_ok=True)
+    path = os.path.join(FAIL_DIR, "%s.txt" % tag)
+    with open(path, "a") as f:
+        f.write(payload + "\n" + "-" * 72 + "\n")
+
+
+# --------------------------------------------------------------------------
+# a deterministic executable world (cycle + diamond in both closure graphs)
+# --------------------------------------------------------------------------
+
+class DiffWorld:
+    def __init__(self) -> None:
+        v = self.vocab = Vocab()
+        self.mentions = v.pred("ds:mentions")
+        self.score = v.pred("ds:score")
+        self.tag = v.pred("ds:tag")
+        self.out = v.pred("ds:out")
+        self.type_pred = v.pred("dk:type")
+        self.sub_pred = v.pred("dk:sub")
+        self.link = v.pred("dk:link")
+        self.classes = [v.term("dk:C%d" % i) for i in range(5)]
+        self.entities = [v.term("dk:e%d" % i) for i in range(8)]
+        self.tweets = [v.term("dt:t%d" % i) for i in range(4)]
+        C, E = self.classes, self.entities
+        rows = [
+            (C[1], self.sub_pred, C[0]),
+            (C[2], self.sub_pred, C[0]),
+            (C[3], self.sub_pred, C[1]),
+            (C[3], self.sub_pred, C[2]),      # diamond under C0
+            (C[4], self.sub_pred, C[3]),
+            (C[0], self.sub_pred, C[4]),      # cycle back to the root
+        ]
+        for i, e in enumerate(E):
+            rows.append((e, self.type_pred, C[i % len(C)]))
+            rows.append((e, self.link, E[(i + 3) % len(E)]))
+        self.kb_rows = [tuple(int(x) for x in r) for r in rows]
+        self.kb = kb_from_triples(self.kb_rows)
+
+    def stream_rows(self, seed: int, n_events: int = 8):
+        rng = random.Random(seed)
+        rows = []
+        for i in range(1, n_events + 1):
+            t = rng.choice(self.tweets)
+            g = i
+            rows.append((t, self.mentions, rng.choice(self.entities), i, g))
+            rows.append((t, self.score, int(NUM_BASE) + rng.randrange(300),
+                         i, g))
+            if rng.random() < 0.6:
+                rows.append((t, self.tag, rng.choice(self.entities), i, g))
+        return [tuple(int(x) for x in r) for r in rows]
+
+
+DW = DiffWorld()
+
+
+# --------------------------------------------------------------------------
+# the pure-Python oracle (no JAX)
+# --------------------------------------------------------------------------
+
+def oracle_windows(rows, capacity: int, max_windows: int):
+    """Greedy graph-preserving packing — mirrors window.count_windows."""
+    rows = sorted(rows, key=lambda r: (r[3], r[4]))     # stable (ts, graph)
+    runs: List[List[tuple]] = []
+    for r in rows:
+        if runs and runs[-1][-1][4] == r[4]:
+            runs[-1].append(r)
+        else:
+            runs.append([r])
+    windows: List[List[tuple]] = [[]]
+    fill, wid = 0, 0
+    for run in runs:
+        size = min(len(run), capacity)
+        if fill + size > capacity:
+            wid += 1
+            fill = size
+            windows.append([])
+        else:
+            fill += size
+        if wid < max_windows:
+            windows[wid].extend(run[:size])
+    return [w for w in windows[:max_windows] if w]
+
+
+def _reach_star(edges) -> Dict[int, Set[int]]:
+    out_edges: Dict[int, List[int]] = {}
+    for s, o in edges:
+        out_edges.setdefault(s, []).append(o)
+    reach: Dict[int, Set[int]] = {}
+    for start in {x for e in edges for x in e}:
+        seen, frontier = {start}, [start]
+        while frontier:
+            nxt = []
+            for n in frontier:
+                for m in out_edges.get(n, ()):
+                    if m not in seen:
+                        seen.add(m)
+                        nxt.append(m)
+            frontier = nxt
+        reach[start] = seen
+    return reach
+
+
+def oracle_closure_pairs(kb_rows, q: Q.Query, pred: int,
+                         min_hops: int) -> Set[Tuple[int, int]]:
+    """Mirror of planner._closure_pairs semantics, independently derived."""
+    edges = [(s, o) for s, p, o in kb_rows if p == pred]
+    pairs: Set[Tuple[int, int]] = set()
+    if min_hops == 0:
+        refl = {x for e in edges for x in e}
+        for it in q.where:
+            if (isinstance(it, Q.PathClosure)
+                    and (it.pred, it.min_hops) == (pred, 0)):
+                for t in (it.start, it.end):
+                    if isinstance(t, Q.Const):
+                        refl.add(int(t.id))
+        pairs |= {(x, x) for x in refl}
+    reach = _reach_star(edges)
+    if min_hops == 0:
+        for x, ys in reach.items():
+            pairs |= {(x, y) for y in ys}
+    else:
+        for s, o in edges:
+            pairs |= {(s, y) for y in reach[o]}
+    return pairs
+
+
+def _match(pat_terms, triples) -> List[dict]:
+    out = []
+    for row in triples:
+        b, ok = {}, True
+        for term, val in zip(pat_terms, row):
+            if isinstance(term, Q.Const):
+                ok = int(term.id) == val
+            elif isinstance(term, Q.Var):
+                if term.name in b and b[term.name] != val:
+                    ok = False
+                else:
+                    b[term.name] = val
+            else:
+                ok = False
+            if not ok:
+                break
+        if ok:
+            out.append(b)
+    return out
+
+
+def _join(cur: List[dict], rows: List[dict], shared) -> List[dict]:
+    out = []
+    for b in cur:
+        for r in rows:
+            if all(b.get(v, 0) == r.get(v, 0) for v in shared):
+                m = dict(b)
+                for k, val in r.items():
+                    if m.get(k, 0) == 0:
+                        m[k] = val
+                out.append(m)
+    return out
+
+
+def _eval_filter(e, b) -> Optional[bool]:
+    """SPARQL three-valued logic: True / False / None (= error)."""
+    if isinstance(e, Q.FilterNum):
+        v = b.get(e.var, 0)
+        if v < int(NUM_BASE):
+            return None
+        t = e.value_id
+        return {"lt": v < t, "le": v <= t, "gt": v > t, "ge": v >= t,
+                "eq": v == t, "ne": v != t}[e.op]
+    vals = [_eval_filter(a, b) for a in e.args]
+    if e.op == "not":
+        return None if vals[0] is None else not vals[0]
+    if e.op == "and":
+        if any(v is False for v in vals):
+            return False
+        return None if any(v is None for v in vals) else True
+    if any(v is True for v in vals):
+        return True
+    return None if any(v is None for v in vals) else False
+
+
+def oracle_window_result(q: Q.Query, win_rows, kb_rows,
+                         world: DiffWorld) -> Set[tuple]:
+    """One window's output triples as comparison keys.
+
+    Row-node subjects (SELECT / binding-graph templates) depend on engine
+    row order, so their keys drop the subject: ``("row", p, o, ts)``;
+    ordinary triples key as ``("spo", s, p, o, ts)``.
+    """
+    spo = [(s, p, o) for (s, p, o, ts, g) in win_rows]
+    ts_max = max(ts for (_, _, _, ts, _) in win_rows)
+
+    closures = {
+        spec: oracle_closure_pairs(kb_rows, q, *spec)
+        for spec in closure_path_specs(q)
+    }
+    sub_star = _reach_star(
+        [(s, o) for s, p, o in kb_rows if p == world.sub_pred])
+
+    bindings: List[dict] = [{}]
+    bound: Set[str] = set()
+    filters: List[Q.WhereItem] = []
+    groups: List[Q.WhereItem] = []
+    aux = [0]
+
+    def join_item(cur, terms, rows):
+        names = {t.name for t in terms if isinstance(t, Q.Var)}
+        matched = _match(terms, rows)
+        out = _join(cur, matched, sorted(names & bound))
+        bound.update(names)
+        return out
+
+    for item in q.where:
+        if isinstance(item, Q.Pattern):
+            rows = spo if item.src == Q.STREAM else [
+                (s, p, o) for s, p, o in kb_rows]
+            bindings = join_item(bindings, (item.s, item.p, item.o), rows)
+        elif isinstance(item, Q.PathKB):
+            cur_t = item.start
+            for i, pid in enumerate(item.preds):
+                aux[0] += 1
+                nxt = item.end if i == len(item.preds) - 1 else (
+                    Q.Var("__ora%d" % aux[0]))
+                bindings = join_item(
+                    bindings, (cur_t, Q.Const(pid), nxt), kb_rows)
+                cur_t = nxt
+        elif isinstance(item, Q.PathClosure):
+            pairs = closures[(item.pred, item.min_hops)]
+            bindings = join_item(
+                bindings, (item.start, item.end),
+                [(x, y) for x, y in sorted(pairs)])
+        elif isinstance(item, Q.FilterSubclass):
+            # classes reaching the super-class (descendants), incl. itself
+            allowed = {c for c, ys in sub_star.items()
+                       if item.super_class in ys} | {item.super_class}
+            bindings = [
+                b for b in bindings
+                if any(s == b.get(item.var, 0) and p == item.type_pred
+                       and o in allowed for s, p, o in kb_rows)
+            ]
+            bound.add(item.var)
+        elif isinstance(item, (Q.FilterNum, Q.FilterBool)):
+            filters.append(item)
+        else:
+            groups.append(item)
+
+    for item in groups:
+        if isinstance(item, Q.OptionalGroup):
+            gvars = {v for p in item.patterns for v in p.vars()}
+            shared = sorted(gvars & bound)
+            sub: List[dict] = [{}]
+            sub_bound: Set[str] = set()
+            for p in item.patterns:
+                rows = spo if p.src == Q.STREAM else [
+                    (s, pp, o) for s, pp, o in kb_rows]
+                names = set(p.vars())
+                sub = _join(sub, _match((p.s, p.p, p.o), rows),
+                            sorted(names & sub_bound))
+                sub_bound |= names
+            out = []
+            for b in bindings:
+                hits = [s for s in sub
+                        if all(b.get(v, 0) == s.get(v, 0) for v in shared)]
+                if hits:
+                    for s in hits:
+                        m = dict(b)
+                        for k, val in s.items():
+                            if m.get(k, 0) == 0:
+                                m[k] = val
+                        out.append(m)
+                else:
+                    out.append(b)
+            bindings = out
+            bound |= gvars
+        elif isinstance(item, Q.UnionGroup):
+            def branch(pats):
+                ext = bindings
+                br_bound = set(bound)
+                for p in pats:
+                    rows = spo if p.src == Q.STREAM else [
+                        (s, pp, o) for s, pp, o in kb_rows]
+                    names = set(p.vars())
+                    ext = _join(ext, _match((p.s, p.p, p.o), rows),
+                                sorted(names & br_bound))
+                    br_bound |= names
+                bound.update(br_bound)
+                return ext
+
+            bindings = branch(item.left) + branch(item.right)
+
+    for f in filters:
+        bindings = [b for b in bindings if _eval_filter(f, b) is True]
+
+    out_vars = sorted({
+        t.name for tpl in q.construct for t in (tpl.s, tpl.p, tpl.o)
+        if isinstance(t, Q.Var)
+    })
+    projected = {tuple(b.get(v, 0) for v in out_vars) for b in bindings}
+
+    keys: Set[tuple] = set()
+    for row in projected:
+        b = dict(zip(out_vars, row))
+
+        def val(t):
+            if isinstance(t, Q.Const):
+                return int(t.id)
+            if isinstance(t, Q.Var):
+                return b[t.name]
+            return None                      # RowId
+
+        for tpl in q.construct:
+            s, p, o = val(tpl.s), val(tpl.p), val(tpl.o)
+            if s is None:
+                keys.add(("row", p, o, ts_max))
+            else:
+                keys.add(("spo", s, p, o, ts_max))
+    return keys
+
+
+def oracle_chunk_result(q, chunk_rows, kb_rows, world,
+                        capacity, max_windows) -> Set[tuple]:
+    keys: Set[tuple] = set()
+    for win in oracle_windows(chunk_rows, capacity, max_windows):
+        keys |= oracle_window_result(q, win, kb_rows, world)
+    return keys
+
+
+def engine_chunk_keys(out_batch) -> Set[tuple]:
+    keys = set()
+    for s, p, o, ts, g in to_host_rows(out_batch):
+        if int(ROW_BASE) <= s < int(NUM_BASE):
+            keys.add(("row", p, o, ts))
+        else:
+            keys.add(("spo", s, p, o, ts))
+    return keys
+
+
+# --------------------------------------------------------------------------
+# constrained executable-query generator (every var chains off the stream)
+# --------------------------------------------------------------------------
+
+@st.composite
+def exec_queries(draw, world: DiffWorld = DW):
+    where: List[Q.WhereItem] = [
+        Q.Pattern(Q.Var("t"), Q.Const(world.mentions), Q.Var("e"), Q.STREAM),
+        Q.Pattern(Q.Var("t"), Q.Const(world.score), Q.Var("s"), Q.STREAM),
+    ]
+    kind = draw(st.sampled_from(
+        ("plus_const", "star_const", "plus_var", "star_var", "typed_closure",
+         "subclass", "pathkb")))
+    if kind in ("plus_const", "star_const"):
+        where.append(Q.Pattern(Q.Var("e"), Q.Const(world.type_pred),
+                               Q.Var("c"), Q.KB))
+        where.append(Q.PathClosure(
+            Q.Var("c"), world.sub_pred,
+            Q.Const(draw(st.sampled_from(world.classes))),
+            min_hops=1 if kind == "plus_const" else 0))
+    elif kind in ("plus_var", "star_var"):
+        where.append(Q.PathClosure(
+            Q.Var("e"), world.link, Q.Var("x"),
+            min_hops=1 if kind == "plus_var" else 0))
+    elif kind == "typed_closure":
+        where.append(Q.Pattern(Q.Var("e"), Q.Const(world.type_pred),
+                               Q.Var("c"), Q.KB))
+        where.append(Q.PathClosure(Q.Var("c"), world.sub_pred, Q.Var("d"),
+                                   min_hops=draw(st.integers(0, 1))))
+    elif kind == "subclass":
+        where.append(Q.FilterSubclass(
+            "e", world.type_pred, world.sub_pred,
+            draw(st.sampled_from(world.classes))))
+    else:
+        where.append(Q.PathKB(Q.Var("e"), (world.link, world.link),
+                              Q.Var("x")))
+
+    f_kind = draw(st.sampled_from(("none", "num", "bool")))
+    thresh = int(NUM_BASE) + draw(st.integers(0, 299))
+    if f_kind == "num":
+        where.append(Q.FilterNum("s", draw(st.sampled_from(
+            ("lt", "le", "gt", "ge"))), thresh))
+    elif f_kind == "bool":
+        lo = int(NUM_BASE) + draw(st.integers(0, 150))
+        where.append(Q.FilterBool("or", (
+            Q.FilterNum("s", "ge", thresh),
+            Q.FilterBool("and", (
+                Q.FilterNum("s", "lt", lo),
+                Q.FilterBool("not", (Q.FilterNum("e", "ge", lo),)),
+            )),
+        )))
+    if draw(st.booleans()):
+        where.append(Q.OptionalGroup((
+            Q.Pattern(Q.Var("t"), Q.Const(world.tag), Q.Var("g"), Q.STREAM),
+        )))
+
+    bound = sorted(Q.Query(name="tmp", where=tuple(where),
+                           construct=()).variables())
+    if draw(st.booleans()):
+        k = draw(st.integers(1, min(2, len(bound))))
+        names = tuple(bound[:k])
+        construct = tuple(
+            Q.ConstructTemplate(Q.RowId(0),
+                                Q.Const(world.vocab.pred("?:" + n)),
+                                Q.Var(n))
+            for n in names
+        )
+        return Q.Query(name="dq", where=tuple(where), construct=construct,
+                       select=names)
+    obj = draw(st.sampled_from(bound))
+    construct = (Q.ConstructTemplate(Q.Var("t"), Q.Const(world.out),
+                                     Q.Var(obj)),)
+    return Q.Query(name="dq", where=tuple(where), construct=construct)
+
+
+CFG = ExecutionConfig(window_capacity=48, max_windows=4, bind_cap=2048,
+                      scan_cap=256, out_cap=2048, out_stream_cap=4096,
+                      intermediate_cap=1024)
+
+
+def _chunks_for(seed: int):
+    rows_a = DW.stream_rows(seed, n_events=8)
+    rows_b = DW.stream_rows(seed + 1000, n_events=8)
+    rows_b = [(s, p, o, ts + 8, g + 8) for s, p, o, ts, g in rows_b]
+    return [rows_a, rows_b], [make_triples(rows_a, capacity=48),
+                              make_triples(rows_b, capacity=48)]
+
+
+# --------------------------------------------------------------------------
+# properties
+# --------------------------------------------------------------------------
+
+@settings(max_examples=N_EXAMPLES, deadline=None, derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16))
+def test_engine_matches_python_oracle(q, seed):
+    host_rows, chunks = _chunks_for(seed)
+    sess = Session(CFG.replace(mode="monolithic"), vocab=DW.vocab, kb=DW.kb)
+    reg = sess.register(q)
+    try:
+        for rows, chunk in zip(host_rows, chunks):
+            out, overflow = reg.process_chunk(chunk)
+            assert not any(overflow.values()), (
+                "capacities clipped a differential example", overflow)
+            want = oracle_chunk_result(q, rows, DW.kb_rows, DW,
+                                       CFG.window_capacity, CFG.max_windows)
+            got = engine_chunk_keys(out)
+            assert got == want, {
+                "only_engine": sorted(got - want)[:10],
+                "only_oracle": sorted(want - got)[:10],
+            }
+    except AssertionError:
+        _dump_failure("oracle", "seed=%d\nquery=%r" % (seed, q))
+        raise
+
+
+@settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
+          derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16))
+def test_modes_bit_identical_on_generated_queries(q, seed):
+    _, chunks = _chunks_for(seed)
+    try:
+        outs, ovfs = {}, {}
+        for mode in MODES:
+            sess = Session(CFG.replace(mode=mode), vocab=DW.vocab, kb=DW.kb)
+            outs[mode], ovfs[mode] = sess.register(q).run(chunks)
+        for mode in MODES:
+            assert not any(ovfs[mode].values()), (mode, ovfs[mode])
+        for mode in MODES[1:]:
+            for i, (a, b) in enumerate(zip(outs[MODES[0]], outs[mode])):
+                for col, ca, cb in zip(a._fields, a, b):
+                    assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                        mode, i, col)
+        assert ovfs["single_program"] == ovfs["pipelined"]
+    except AssertionError:
+        _dump_failure("cross_mode", "seed=%d\nquery=%r" % (seed, q))
+        raise
+
+
+# --------------------------------------------------------------------------
+# acceptance: closure compiles through the kernel relation (no join chain),
+# and one Session runs two .rq queries with different RANGE windows
+# --------------------------------------------------------------------------
+
+def test_closure_path_compiles_to_single_kb_join():
+    q = Q.Query(
+        name="c", where=(
+            Q.Pattern(Q.Var("t"), Q.Const(DW.mentions), Q.Var("e"), Q.STREAM),
+            Q.PathClosure(Q.Var("e"), DW.link, Q.Var("x"), min_hops=1),
+        ),
+        construct=(Q.ConstructTemplate(Q.Var("t"), Q.Const(DW.out),
+                                       Q.Var("x")),),
+    )
+    plan = compile_query(q)
+    joins = [s for s in plan.steps if isinstance(s, KBJoin)]
+    assert len(joins) == 1, "closure must not unroll into a join chain"
+    assert joins[0].pat.p.const >= CLOSURE_PRED_BASE
+
+
+RQ_SMALL = """\
+REGISTER QUERY win_small AS
+PREFIX ds: <urn:dscep:ds>
+CONSTRUCT { ?t ds:out ?e . }
+FROM STREAM <stream> [RANGE TRIPLES 24 STEP 8]
+FROM <kb>
+WHERE { ?t ds:mentions ?e . }
+"""
+
+RQ_LARGE = """\
+REGISTER QUERY win_large AS
+PREFIX ds: <urn:dscep:ds>
+PREFIX dk: <urn:dscep:dk>
+CONSTRUCT { ?t ds:out ?c . }
+FROM STREAM <stream> [RANGE TRIPLES 80 STEP 80]
+FROM <kb>
+WHERE {
+  ?t ds:mentions ?e .
+  GRAPH <kb> {
+    ?e dk:type ?c .
+    ?c dk:sub+ dk:C0 .
+  }
+}
+"""
+
+
+def test_two_rq_with_different_windows_in_one_session():
+    """The per-query window acceptance criterion: one Session hosts two
+    ``.rq`` registrations whose RANGE TRIPLES clauses differ, both run
+    concurrently in every mode, each bit-identical across modes."""
+    host_rows, chunks = _chunks_for(7)
+    outs = {name: {} for name in ("win_small", "win_large")}
+    geoms = {}
+    for mode in MODES:
+        sess = Session(
+            CFG.replace(mode=mode, window_from_query=True),
+            vocab=DW.vocab, kb=DW.kb)
+        regs = [sess.register(RQ_SMALL), sess.register(RQ_LARGE)]
+        assert set(sess.queries) == {"win_small", "win_large"}
+        for reg in regs:
+            geoms[reg.query.name] = reg.window_geometry
+            outs[reg.query.name][mode], overflow = reg.run(chunks)
+            assert not any(overflow.values()), (mode, overflow)
+    assert geoms == {"win_small": (24, 8), "win_large": (80, 80)}
+    for name, per_mode in outs.items():
+        for mode in MODES[1:]:
+            for i, (a, b) in enumerate(zip(per_mode[MODES[0]],
+                                           per_mode[mode])):
+                for col, ca, cb in zip(a._fields, a, b):
+                    assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                        name, mode, i, col)
+    # the small window also agrees with the oracle evaluated at RANGE 24
+    q_small = sess.queries["win_small"].query
+    for rows, chunk in zip(host_rows, chunks):
+        out, _ = sess.queries["win_small"].process_chunk(chunk)
+        want = oracle_chunk_result(q_small, rows, DW.kb_rows, DW, 24,
+                                   CFG.max_windows)
+        assert engine_chunk_keys(out) == want

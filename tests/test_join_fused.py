@@ -222,3 +222,127 @@ def test_closure_descendants_overflow_and_chain():
     )
     assert int(count) == n and bool(int(count) > 4)
     np.testing.assert_array_equal(np.asarray(ids), np.arange(4))
+
+
+# --------------------------------------------------------------------------
+# closure-pair materialization (PathClosure lowering) edge cases:
+# empty KB, root without an edge, cycles — Pallas path vs host BFS path
+# --------------------------------------------------------------------------
+
+from repro.core import query as Q
+from repro.core.kb import host_rows
+from repro.core.planner import augment_kb_with_closures, closure_path_specs
+from repro.core.rdf import CLOSURE_PRED_BASE
+
+
+def _closure_query(pred, start, end, min_hops):
+    return Q.Query(
+        name="cq", where=(
+            Q.Pattern(Q.Var("t"), Q.Const(1), Q.Var("e"), Q.STREAM),
+            Q.PathClosure(start, pred, end, min_hops=min_hops),
+        ),
+        construct=(Q.ConstructTemplate(Q.Var("t"), Q.Const(2), Q.Var("e")),),
+    )
+
+
+def _pair_rows(kb, q):
+    cp = CLOSURE_PRED_BASE + 0
+    assert closure_path_specs(q), "query must carry a closure path"
+    return sorted(
+        (int(s), int(o)) for s, p, o in host_rows(kb) if int(p) == cp
+    )
+
+
+@pytest.mark.parametrize("min_hops,endpoint", [
+    (0, "var"), (1, "var"), (0, "const"), (1, "const"),
+])
+def test_closure_pairs_pallas_matches_host(min_hops, endpoint):
+    sub = 7
+    C = list(range(9000, 9006))
+    rows = [
+        (C[1], sub, C[0]), (C[2], sub, C[0]), (C[3], sub, C[1]),
+        (C[3], sub, C[2]),                       # diamond
+        (C[4], sub, C[5]), (C[5], sub, C[4]),    # detached 2-cycle
+    ]
+    kb = kb_from_triples(rows)
+    end = Q.Const(C[0]) if endpoint == "const" else Q.Var("y")
+    q = _closure_query(sub, Q.Var("x"), end, min_hops)
+    pal = _pair_rows(augment_kb_with_closures(q, kb, use_pallas=True), q)
+    host = _pair_rows(augment_kb_with_closures(q, kb, use_pallas=False), q)
+    assert pal == host and pal
+    if endpoint == "const":
+        # descendants of the diamond root: {C0..C3} (*) / {C1..C3} (+)
+        want = {(c, C[0]) for c in C[:4]} if min_hops == 0 else {
+            (c, C[0]) for c in C[1:4]}
+        assert {p for p in pal if p[1] == C[0]} == want
+    if min_hops == 0:
+        assert all((x, x) in pal for x, _ in pal)   # star is reflexive
+
+
+def test_closure_pairs_cycle_plus_is_reflexive_on_cycle():
+    """In a cycle every node reaches itself in >= 1 hops: p+ must contain
+    the diagonal for cycle members (unlike a DAG, where it must not)."""
+    sub = 7
+    a, b, c, d = 9100, 9101, 9102, 9103
+    kb = kb_from_triples([(a, sub, b), (b, sub, a), (c, sub, d)])
+    q = _closure_query(sub, Q.Var("x"), Q.Var("y"), 1)
+    for use_pallas in (True, False):
+        pairs = set(_pair_rows(
+            augment_kb_with_closures(q, kb, use_pallas=use_pallas), q))
+        assert {(a, a), (b, b), (a, b), (b, a), (c, d)} <= pairs
+        assert (d, d) not in pairs and (c, c) not in pairs
+
+
+def test_closure_pairs_empty_kb_and_rootless_star():
+    """No edges at all: p+ is empty; p* toward a constant endpoint still
+    contains that endpoint's reflexive pair (zero-length path)."""
+    kb = kb_from_triples([(9200, 3, 9201)])      # KB without the path pred
+    root = 9300
+    for use_pallas in (True, False):
+        q_plus = _closure_query(7, Q.Var("x"), Q.Const(root), 1)
+        assert _pair_rows(
+            augment_kb_with_closures(q_plus, kb, use_pallas=use_pallas),
+            q_plus) == []
+        q_star = _closure_query(7, Q.Var("x"), Q.Const(root), 0)
+        assert _pair_rows(
+            augment_kb_with_closures(q_star, kb, use_pallas=use_pallas),
+            q_star) == [(root, root)]
+
+
+def test_closure_pairs_root_not_in_edge_graph():
+    """Edges exist but none touches the constant root: its p* set is just
+    itself, its p+ set empty — for the kernel path and the host path."""
+    sub = 7
+    kb = kb_from_triples([(9400, sub, 9401)])
+    lone = 9500
+    for use_pallas in (True, False):
+        q_star = _closure_query(sub, Q.Var("x"), Q.Const(lone), 0)
+        pairs = _pair_rows(
+            augment_kb_with_closures(q_star, kb, use_pallas=use_pallas),
+            q_star)
+        assert (lone, lone) in pairs
+        assert all(y != lone or x == lone for x, y in pairs)
+        q_plus = _closure_query(sub, Q.Var("x"), Q.Const(lone), 1)
+        plus = _pair_rows(
+            augment_kb_with_closures(q_plus, kb, use_pallas=use_pallas),
+            q_plus)
+        assert all(y != lone for x, y in plus)
+
+
+def test_closure_pairs_both_endpoints_constant():
+    """`C3 sub* C0 .` / `C3 sub+ C0 .` — a degenerate static check: the
+    relation must contain exactly the anchored pair when the path holds
+    (regression: the both-const case must anchor descendants on the end,
+    not ancestors on the start)."""
+    sub = 7
+    C = list(range(9600, 9604))
+    kb = kb_from_triples([(C[1], sub, C[0]), (C[2], sub, C[1]),
+                          (C[3], sub, C[2])])
+    for min_hops in (0, 1):
+        q = _closure_query(sub, Q.Const(C[3]), Q.Const(C[0]), min_hops)
+        for use_pallas in (True, False):
+            pairs = set(_pair_rows(
+                augment_kb_with_closures(q, kb, use_pallas=use_pallas), q))
+            assert (C[3], C[0]) in pairs, (min_hops, use_pallas)
+            # and the reverse direction must NOT hold
+            assert (C[0], C[3]) not in pairs

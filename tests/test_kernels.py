@@ -87,6 +87,72 @@ def test_closure_chain_depth():
     assert reach[0, 9] and reach[0, 0] and not reach[9, 0]
 
 
+def test_closure_cycle_reaches_everything():
+    """A directed cycle: every node reaches every node; the squaring
+    fixpoint must saturate, not loop or overshoot."""
+    n = 6
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n):
+        adj[i, (i + 1) % n] = 1.0
+    reach = np.asarray(cl_ops.transitive_closure(jnp.asarray(adj), max_depth=n))
+    assert reach.all()
+    ids, count = cl_ops.closure_descendants(jnp.asarray(adj), root=2,
+                                            out_cap=n, max_depth=n)
+    assert int(count) == n
+    np.testing.assert_array_equal(np.asarray(ids), np.arange(n))
+
+
+def test_closure_descendants_empty_and_isolated_root():
+    """Zero-edge adjacency: the closure is reflexive only — every root's
+    descendant set is exactly itself."""
+    for n in (1, 8):
+        adj = np.zeros((n, n), np.float32)
+        ids, count = cl_ops.closure_descendants(jnp.asarray(adj), root=0,
+                                                out_cap=max(n, 2),
+                                                max_depth=n)
+        assert int(count) == 1
+        assert int(np.asarray(ids)[0]) == 0
+
+
+def test_closure_ancestors_is_transposed_descendants():
+    rng = np.random.default_rng(3)
+    n = 24
+    adj = (rng.random((n, n)) < 0.12).astype(np.float32)
+    for root in (0, 5, 17):
+        a_ids, a_count = cl_ops.closure_ancestors(
+            jnp.asarray(adj), root=root, out_cap=n, max_depth=n)
+        d_ids, d_count = cl_ops.closure_descendants(
+            jnp.asarray(adj.T), root=root, out_cap=n, max_depth=n)
+        assert int(a_count) == int(d_count)
+        np.testing.assert_array_equal(np.asarray(a_ids), np.asarray(d_ids))
+        # oracle: rows the root reaches in the closure matrix
+        reach = np.asarray(cl_ops.transitive_closure(
+            jnp.asarray(adj), max_depth=n, use_pallas=False))
+        want = np.nonzero(reach[root])[0]
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(a_ids)[: int(a_count)]), want)
+
+
+def test_closure_ops_interpret_parity():
+    """interpret=True (Pallas interpreter) and interpret=False (compiled)
+    must agree bit-for-bit; compiled mode needs a real accelerator, so the
+    pair only runs where one is attached."""
+    rng = np.random.default_rng(11)
+    n = 8
+    adj = (rng.random((n, n)) < 0.2).astype(np.float32)
+    i_ids, i_count = cl_ops.closure_descendants(
+        jnp.asarray(adj), root=1, out_cap=n, max_depth=n, interpret=True)
+    try:
+        c_ids, c_count = cl_ops.closure_descendants(
+            jnp.asarray(adj), root=1, out_cap=n, max_depth=n,
+            interpret=False)
+        c_ids, c_count = jax.block_until_ready((c_ids, c_count))
+    except Exception as e:                       # pragma: no cover - CPU CI
+        pytest.skip("interpret=False needs a real accelerator: %r" % (e,))
+    np.testing.assert_array_equal(np.asarray(i_ids), np.asarray(c_ids))
+    assert int(i_count) == int(c_count)
+
+
 # --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------

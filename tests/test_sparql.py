@@ -261,7 +261,7 @@ def test_star_outside_hierarchy_form_rejected(vw):
       ?a p:x ?b .
       GRAPH <kb> { ?a p:one*/p:two ?b . }
     }
-    """, vocab, r"'\*' is only supported as the hierarchy form")
+    """, vocab, r"path modifiers are only supported as a single-segment")
 
 
 def test_hierarchy_super_class_must_be_constant(vw):
@@ -338,3 +338,162 @@ def test_variables_linear_on_wide_machine_generated_query(vw):
     vars_ = q.variables()
     assert len(vars_) == 97 + 600
     assert vars_[0] == "s0" and vars_[1] == "o0" and vars_[2] == "s1"
+
+
+# --------------------------------------------------------------------------
+# variable-length closure paths, boolean FILTER, SELECT form
+# --------------------------------------------------------------------------
+
+def test_closure_path_parse_and_round_trip(vw):
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY cp AS
+    PREFIX m: <urn:m>
+    CONSTRUCT { ?a m:out ?b . }
+    WHERE {
+      ?a m:link ?c .
+      GRAPH <kb> {
+        ?c m:hop+ ?b .
+        ?b m:near* ?d .
+      }
+    }
+    """
+    q = parse_query(text, vocab)
+    plus, star = q.where[1], q.where[2]
+    assert isinstance(plus, Q.PathClosure) and plus.min_hops == 1
+    assert isinstance(star, Q.PathClosure) and star.min_hops == 0
+    assert plus.pred == vocab.pred("m:hop")
+    assert parse_query(serialize_query(q, vocab), vocab) == q
+    text2 = serialize_query(q, vocab)
+    assert serialize_query(parse_query(text2, vocab), vocab) == text2
+
+
+def test_hierarchy_form_still_wins_over_closure(vw):
+    """`?x type/subClassOf* Cls` stays a FilterSubclass; the new single-
+    segment closure form must not shadow the paper's hierarchy reasoning."""
+    vocab, ts, kbs = vw
+    q = parse_query(PQ.Q15_RQ, vocab)
+    kinds = [type(it).__name__ for it in q.where]
+    assert "FilterSubclass" in kinds and "PathClosure" not in kinds
+
+
+def test_boolean_filter_parse_shapes(vw):
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY bf AS
+    PREFIX s: <urn:x>
+    CONSTRUCT { ?a s:out ?v . }
+    WHERE {
+      ?a s:speed ?v .
+      ?a s:heat ?w .
+      FILTER(?v < 19.75 && ?w >= 2.00 || !(?v = 3.00))
+    }
+    """
+    q = parse_query(text, vocab)
+    flt = q.where[-1]
+    assert isinstance(flt, Q.FilterBool) and flt.op == "or"
+    a, b = flt.args
+    assert isinstance(a, Q.FilterBool) and a.op == "and" and len(a.args) == 2
+    assert isinstance(b, Q.FilterBool) and b.op == "not"
+    assert set(flt.vars()) == {"v", "w"}
+    assert parse_query(serialize_query(q, vocab), vocab) == q
+
+
+def test_boolean_filter_nary_and_parens_round_trip(vw):
+    """`a && b && c` is one 3-ary node; `(a && b) && c` keeps its nesting."""
+    vocab, _, _ = vw
+    def parse_filter(body):
+        text = ("PREFIX s: <urn:x>\nCONSTRUCT { ?a s:out ?v . }\n"
+                "WHERE { ?a s:speed ?v . FILTER(%s) }" % body)
+        q = parse_query(text, vocab)
+        assert parse_query(serialize_query(q, vocab), vocab) == q
+        return q.where[-1]
+
+    flat = parse_filter("?v < 1.00 && ?v < 2.00 && ?v < 3.00")
+    assert flat.op == "and" and len(flat.args) == 3
+    nested = parse_filter("(?v < 1.00 && ?v < 2.00) && ?v < 3.00")
+    assert nested.op == "and" and len(nested.args) == 2
+    assert isinstance(nested.args[0], Q.FilterBool)
+    assert flat != nested
+
+
+def test_select_form_lowers_to_binding_templates(vw):
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY sel AS
+    PREFIX s: <urn:x>
+    SELECT ?a ?v
+    WHERE { ?a s:speed ?v . }
+    """
+    q = parse_query(text, vocab)
+    assert q.select == ("a", "v")
+    assert q.construct == (
+        Q.ConstructTemplate(Q.RowId(0), Q.Const(vocab.pred("?:a")),
+                            Q.Var("a")),
+        Q.ConstructTemplate(Q.RowId(0), Q.Const(vocab.pred("?:v")),
+                            Q.Var("v")),
+    )
+    text2 = serialize_query(q, vocab)
+    assert "SELECT ?a ?v" in text2 and "CONSTRUCT" not in text2
+    assert parse_query(text2, vocab) == q
+
+
+def test_select_errors(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX s: <urn:x>
+    SELECT ?a ?a
+    WHERE { ?a s:speed ?v . }
+    """, vocab, r"duplicate SELECT variable")
+    _expect_error("""
+    PREFIX s: <urn:x>
+    SELECT ?ghost
+    WHERE { ?a s:speed ?v . }
+    """, vocab, r"SELECT variable \?ghost is not bound")
+
+
+def test_serialize_with_info_round_trips_window_geometry(vw):
+    vocab, _, _ = vw
+    q, info = parse_query_info(PQ.Q15_RQ, vocab)
+    text = serialize_query(q, vocab, dict(info.prefixes), info=info)
+    assert "FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]" in text
+    q2, info2 = parse_query_info(text, vocab)
+    assert q2 == q
+    assert (info2.stream_iri, info2.window_triples, info2.window_step,
+            info2.kb_iris) == ("stream", 1000, 1, ("kb",))
+
+
+# --------------------------------------------------------------------------
+# generative round trips: parse(serialize(q)) == q over the whole grammar
+# --------------------------------------------------------------------------
+
+from hypothesis import given, settings  # noqa: E402  (fallback-compatible)
+
+import strategies as gen  # noqa: E402  (tests/ dir is on sys.path)
+
+
+@settings(max_examples=150, deadline=None, derandomize=True)
+@given(q=gen.queries())
+def test_generated_ast_round_trips(q):
+    vocab = gen.WORLD.vocab
+    text = serialize_query(q, vocab)
+    assert parse_query(text, vocab) == q
+    # canonical: a second round trip emits byte-identical text
+    assert serialize_query(parse_query(text, vocab), vocab) == text
+
+
+@settings(max_examples=50, deadline=None, derandomize=True)
+@given(e=gen.filter_exprs)
+def test_generated_filter_trees_round_trip(e):
+    vocab = gen.WORLD.vocab
+    q = Q.Query(
+        name="f", where=(
+            Q.Pattern(Q.Var("a"), Q.Const(gen.WORLD.stream_preds[0]),
+                      Q.Var("x"), Q.STREAM),
+            e if isinstance(e, Q.FilterBool) else Q.FilterBool("not", (e,)),
+        ),
+        construct=(Q.ConstructTemplate(Q.Var("a"),
+                                       Q.Const(gen.WORLD.stream_preds[1]),
+                                       Q.Var("x")),),
+    )
+    assert parse_query(serialize_query(q, vocab), vocab) == q
