@@ -141,9 +141,7 @@ def bench_join_fused():
     the fusion targets the HBM-traffic ratio (O(M*N) -> O(M*N read-once +
     out_cap)).
     """
-    import json
     from repro.core import algebra
-    from repro.kernels.hash_join.ref import join_compact_ref
 
     rows, out = [], {}
     for m, n, cap in [(128, 2048, 256), (256, 4096, 512), (256, 8192, 512)]:
@@ -180,20 +178,128 @@ def bench_join_fused():
                      "exact" if exact else "MISMATCH",
                      f"{ms(tb['median_s'])} -> {ms(tf['median_s'])} "
                      f"({speedup:.1f}x)"])
+    return out, rows
+
+
+def _probe_world(m, n, fanout, seed=None):
+    """An anchored const-predicate join with controlled fan-out.
+
+    ``n`` KB rows under one predicate, subjects drawn from a pool so every
+    subject carries exactly ``fanout`` rows; binding rows anchor on pool
+    subjects.  Subject-anchored probes and scans emit matches in the same
+    (p,s)-view order, so scan-vs-probe results must be bit-identical.
+    """
+    rng = np.random.default_rng(seed if seed is not None else m + n)
+    base = 5000
+    pool = max(1, n // fanout)
+    subs = base + np.repeat(np.arange(pool, dtype=np.int64), fanout)[: n - 8]
+    kb_rows = [(int(s), 1, int(rng.integers(base, base + pool)))
+               for s in subs]
+    kb = kb_from_triples(kb_rows, capacity=n)
+    cols = rng.integers(base, base + pool, size=(m, 3)).astype(np.uint32)
+    bind = Bindings(jnp.asarray(cols), jnp.ones((m,), bool),
+                    jnp.zeros((), bool))
+    pat = CompiledPattern(Slot.bound(0), Slot.const_(1), Slot.free(1))
+    return bind, kb, pat
+
+
+def bench_probe_join():
+    """Cost-based KB access: fused scan vs probe -> BENCH_join.json "probe".
+
+    The paper's Figs. 5-7 relationship at kernel granularity: the scan pays
+    the whole partition per join while the probe pays O(log N) + k_max
+    gathers per binding row, so the gap widens linearly with KB size.  Each
+    shape runs the planner's actual cost model
+    (:func:`repro.core.planner._choose_kb_method` over
+    :func:`repro.core.kb.collect_kb_stats`) to confirm "auto" picks the
+    probe and to derive its ``k_max``; *exact* certifies the probe result
+    (and the fused Pallas probe kernel in interpret mode) bit-identical to
+    the fused scan — the CI tripwire asserts it stays true.
+    """
+    from repro.core import algebra
+    from repro.core.kb import collect_kb_stats
+    from repro.core.planner import _choose_kb_method
+
+    rows, out = [], {}
+    for m, n, fanout in [(256, 8192, 4), (256, 32768, 4), (256, 131072, 4)]:
+        bind, kb, pat = _probe_world(m, n, fanout)
+        cap = m * fanout
+        stats = collect_kb_stats(kb)
+        method, k_max = _choose_kb_method(pat, stats, 8)
+        assert method == "probe", (method, stats.preds.get(1))
+
+        def scan_run(c, v):
+            return algebra.kb_join_scan(
+                Bindings(c, v, jnp.zeros((), bool)), kb, pat, cap,
+                fuse_compaction=True,
+            )
+
+        def probe_run(c, v, k=k_max):
+            return algebra.kb_join_probe(
+                Bindings(c, v, jnp.zeros((), bool)), kb, pat, cap, k)
+
+        scan_fn = jax.jit(scan_run)
+        probe_fn = jax.jit(probe_run)
+        want = scan_fn(bind.cols, bind.valid)
+        got = probe_fn(bind.cols, bind.valid)
+        exact = bool(jnp.all(got.cols == want.cols)
+                     & jnp.all(got.valid == want.valid)
+                     & (got.overflow == want.overflow))
+        # fused Pallas probe kernel: parity only (interpret mode, not timed)
+        got_pl = algebra.kb_join_probe(bind, kb, pat, cap, k_max,
+                                       use_pallas=True)
+        exact &= bool(jnp.all(got_pl.cols == want.cols)
+                      & jnp.all(got_pl.valid == want.valid)
+                      & (got_pl.overflow == want.overflow))
+        ts = time_fn(scan_fn, bind.cols, bind.valid, iters=5)
+        tp = time_fn(probe_fn, bind.cols, bind.valid, iters=5)
+        speedup = ts["median_s"] / max(tp["median_s"], 1e-9)
+        key = f"m{m}xn{n}f{fanout}"
+        out[key] = {
+            "exact": exact,
+            "auto_method": method,
+            "derived_k_max": k_max,
+            "fused_scan_s": ts["median_s"],
+            "probe_s": tp["median_s"],
+            "speedup": speedup,
+        }
+        rows.append(["probe_join", f"{m}x{n} fan{fanout} k{k_max}",
+                     "exact" if exact else "MISMATCH",
+                     f"{ms(ts['median_s'])} -> {ms(tp['median_s'])} "
+                     f"({speedup:.1f}x)"])
+    return out, rows
+
+
+def write_bench_join(fused_out, probe_out):
+    """Combine the scan-fusion and probe sections into BENCH_join.json."""
+    import json
 
     payload = {
         "what": "scan-method KB join: unfused (materialize [M,N] + compact) "
                 "vs fused join->compaction, jit on this host",
-        "note": "Pallas fused kernel verified bit-exact in interpret mode; "
-                "timings are the jnp twin of the fused algorithm (the path "
-                "XLA runs on CPU hosts).",
-        "results": out,
+        "note": "Pallas fused kernels verified bit-exact in interpret mode; "
+                "timings are the jnp paths XLA runs on CPU hosts.",
+        "results": fused_out,
+        "probe": {
+            "what": "cost-based KB access: fused scan vs probe on an "
+                    "anchored const-predicate join, k_max derived by the "
+                    "planner's cost model from collect_kb_stats",
+            "results": probe_out,
+        },
     }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_join.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=float)
-    print(f"[bench_join_fused] wrote {os.path.normpath(path)}")
-    return out, rows
+    print(f"[bench_join] wrote {os.path.normpath(path)}")
+
+
+def bench_join():
+    """The ``--only join`` entry: both join sections + the combined file."""
+    fused_out, fused_rows = bench_join_fused()
+    probe_out, probe_rows = bench_probe_join()
+    write_bench_join(fused_out, probe_out)
+    return {"bench_join_fused": fused_out, "bench_probe_join": probe_out}, \
+        fused_rows + probe_rows
 
 
 def bench_hash_join():
@@ -226,11 +332,13 @@ def bench_hash_join():
 
 def run() -> dict:
     all_rows, results = [], {}
-    for fn in (bench_hash_join, bench_join_fused, bench_closure,
-               bench_flash_attention, bench_decode_attention, bench_ssd):
+    for fn in (bench_hash_join, bench_join_fused, bench_probe_join,
+               bench_closure, bench_flash_attention, bench_decode_attention,
+               bench_ssd):
         out, rows = fn()
         results[fn.__name__] = out
         all_rows += rows
+    write_bench_join(results["bench_join_fused"], results["bench_probe_join"])
     print(format_table(
         "Pallas kernels — fidelity sweeps (interpret mode) + jnp-path wall time",
         ["kernel", "shape", "vs ref", "jnp time"], all_rows,

@@ -64,7 +64,7 @@ def _throughput(run_pass, num_chunks: int, iters: int) -> dict:
 
 
 def run(iters: Optional[int] = None, smoke: bool = False,
-        query: str = "cquery1"):
+        query: str = "cquery1", kb_method: str = "auto"):
     if iters is None:
         iters = 1 if smoke else 3
     if smoke:
@@ -72,13 +72,14 @@ def run(iters: Optional[int] = None, smoke: bool = False,
                             filler=100, chunk_capacity=192)
         base = ExecutionConfig(window_capacity=64, max_windows=4, bind_cap=512,
                                scan_cap=128, out_cap=512, intermediate_cap=256,
+                               kb_method=kb_method,
                                channel_capacity=CHANNEL_CAPACITY)
     else:
         world = build_world(num_tweets=256, num_artists=64, num_shows=32,
                             filler=2000, chunk_capacity=1024)
         base = ExecutionConfig(window_capacity=256, max_windows=4,
                                bind_cap=2048, scan_cap=512, out_cap=2048,
-                               intermediate_cap=1024,
+                               intermediate_cap=1024, kb_method=kb_method,
                                channel_capacity=CHANNEL_CAPACITY)
 
     if query == "cquery1":
@@ -89,7 +90,7 @@ def run(iters: Optional[int] = None, smoke: bool = False,
             q = parse_query(f.read(), world.vocab)
     chunks = world.chunks
     print(f"[bench_pipeline] {query}, {len(chunks)} chunks, "
-          f"smoke={smoke}, iters={iters}")
+          f"smoke={smoke}, iters={iters}, kb_method={kb_method}")
 
     # one Session per execution mode — the unified API this benchmark compares
     mono = make_session(world, base.replace(mode="monolithic")).register(q)
@@ -146,17 +147,55 @@ def run(iters: Optional[int] = None, smoke: bool = False,
     print(format_table("%s sustained throughput" % query,
                        ["mode", "stream pass (median)", "chunks/s"], rows))
 
+    # -- KB-access comparison: scan vs probe vs auto on one runtime ----------
+    # (the trajectory record for the cost-based access-method work: same
+    # query, same stream, only kb_method varies; the gate asserts the three
+    # methods stay bit-identical and overflow-free.  Measured on the
+    # *monolithic* runtime — the full KB is attached there, so the access
+    # method dominates; decomposed modes already shrink each operator's
+    # partition via used-KB pruning, the paper's alternative cure)
+    kb_access = {}
+    for method in ("scan", "probe", "auto"):
+        sess_m = make_session(
+            world, base.replace(mode="monolithic", kb_method=method)
+        ).register(q)
+        outs_m, ovf_m = sess_m.run(chunks)
+        for i, (a, b) in enumerate(zip(outs_single, outs_m)):
+            for col_a, col_b in zip(a, b):
+                assert bool(np.all(np.asarray(col_a) == np.asarray(col_b))), (
+                    "kb_method=%s chunk %d diverges" % (method, i))
+        clipped = {n: c for n, c in ovf_m.items() if c}
+        assert not clipped, (
+            "kb_method=%s overflowed windows %s" % (method, clipped))
+        kb_access[method] = _throughput(
+            lambda s=sess_m: s.run(chunks)[0], len(chunks), iters)
+    rows = [
+        [method, f"{r['median_s'] * 1e3:.1f} ms", f"{r['chunks_per_s']:.2f}"]
+        for method, r in kb_access.items()
+    ]
+    print(format_table("%s KB-access methods (monolithic, full KB)" % query,
+                       ["kb_method", "stream pass (median)", "chunks/s"],
+                       rows))
+
     payload = {
         "what": "sustained chunks/sec over one stream pass, one Session per "
                 "ExecutionConfig mode: monolithic vs single-program DAG vs "
                 "pipelined dataflow (2 chunks in flight, sink-only blocking)",
         "query": query,
+        "kb_method": kb_method,
         "num_chunks": len(chunks),
         "channel_capacity": CHANNEL_CAPACITY,
         "smoke": smoke,
         "bit_exact_vs_single_program": True,
         "overflowed_windows": 0,
         "results": results,
+        "kb_access": {
+            "what": "same query/stream on the monolithic (full-KB) runtime "
+                    "with only ExecutionConfig.kb_method varying; all "
+                    "methods bit-identical and overflow-free",
+            "bit_exact_across_methods": True,
+            "results": kb_access,
+        },
     }
     name = ("BENCH_pipeline.json" if query == "cquery1"
             else "BENCH_pipeline_%s.json" % query)
@@ -178,8 +217,14 @@ def main(argv=None):
                     help="workload: the paper's CQuery1, or the expanded "
                          "frontend surface (SELECT + closure path + boolean "
                          "FILTER)")
+    ap.add_argument("--kb-method", default="auto",
+                    choices=["scan", "probe", "auto"],
+                    help="KB access method for the three benchmarked modes "
+                         "(the kb_access section always compares all three "
+                         "on the monolithic full-KB runtime)")
     args = ap.parse_args(argv)
-    run(iters=args.iters, smoke=args.smoke, query=args.query)
+    run(iters=args.iters, smoke=args.smoke, query=args.query,
+        kb_method=args.kb_method)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,9 @@ One benchmark per paper artifact (DESIGN.md §5):
 * step2    — Tables 2-3 (CQuery1 monolithic vs decomposed, both methods)
 * step3    — Figs. 5-7 (used-KB and total-KB scaling)
 * kernels  — Pallas kernel fidelity + shape sweeps
-* join     — fused join->compaction before/after microbenchmark (also part
-             of ``kernels``); records speedups to BENCH_join.json
+* join     — fused join->compaction before/after + scan-vs-probe KB-access
+             microbenchmarks (also part of ``kernels``); records speedups
+             to BENCH_join.json
 * pipeline — sustained chunks/sec: monolithic vs single-program DAG vs
              pipelined dataflow runtime; records to BENCH_pipeline.json
 * roofline — per-(arch x shape x mesh) roofline terms from the dry-run
@@ -50,7 +51,7 @@ def main(argv=None) -> int:
                 kernels.run()
             elif name == "join":
                 from . import kernels
-                kernels.bench_join_fused()
+                kernels.bench_join()
             elif name == "pipeline":
                 from . import pipeline
                 pipeline.run(iters=args.iters)

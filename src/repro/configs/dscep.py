@@ -63,12 +63,28 @@ register_deployment(DSCEPDeployment(
                 "KB access.",
 ))
 
+# cost-based KB access: the default for every non-baseline preset below.
+# Each operator's used-KB slice is profiled at build time; every KB join
+# independently picks probe (with a derived k_max covering the observed
+# fan-out) or the fused scan, and the join sequence is selectivity-ordered.
+register_deployment(DSCEPDeployment(
+    name="paper-eval-auto",
+    config=ExecutionConfig(mode="single_program",
+                           window_capacity=1000, max_windows=8,
+                           bind_cap=4096, scan_cap=1024, out_cap=4096,
+                           kb_method="auto"),
+    description="Paper §4.4 settings with cost-based per-join KB access "
+                "(probe where anchored fan-out is small, fused scan "
+                "otherwise) and selectivity-ordered joins.",
+))
+
 # container-scale smoke (tests/examples)
 register_deployment(DSCEPDeployment(
     name="smoke",
     config=ExecutionConfig(mode="single_program",
                            window_capacity=128, max_windows=4,
-                           bind_cap=1024, scan_cap=128, out_cap=1024),
+                           bind_cap=1024, scan_cap=128, out_cap=1024,
+                           kb_method="auto"),
     description="Reduced capacities for CPU smoke runs.",
 ))
 
@@ -88,7 +104,7 @@ register_deployment(DSCEPDeployment(
     config=ExecutionConfig(mode="single_program",
                            window_capacity=1000, max_windows=8,
                            bind_cap=4096, scan_cap=1024, out_cap=4096,
-                           window_from_query=True),
+                           kb_method="auto", window_from_query=True),
     description="One Session, many queries: each registered query's "
                 "[RANGE TRIPLES n STEP m] clause drives its own window "
                 "geometry (window_capacity is only the default for queries "
@@ -101,7 +117,7 @@ register_deployment(DSCEPDeployment(
     config=ExecutionConfig(mode="pipelined",
                            window_capacity=1000, max_windows=8,
                            bind_cap=4096, scan_cap=1024, out_cap=4096,
-                           channel_capacity=2),
+                           kb_method="auto", channel_capacity=2),
     description="Per-operator jitted steps over bounded device channels, "
                 "software-pipelined schedule (2 chunks in flight).",
 ))

@@ -5,8 +5,10 @@ evaluation uses (§4.3 CQuery1 characteristics) has a static-shape, jit-able
 operator here:
 
 * basic graph patterns      -> ``scan_pattern`` + ``join``
-* KB access (two methods)   -> ``kb_join`` (``method="scan" | "probe"``)
-* FILTER (numeric / set)    -> ``filter_num`` / ``filter_in``
+* KB access (two methods)   -> ``kb_join`` (``method="scan" | "probe"``;
+                               the planner's ``kb_method="auto"`` cost model
+                               resolves the choice per join at plan time)
+* FILTER (numeric / term-eq / set) -> ``filter_num`` / ``filter_in``
 * UNION                     -> ``union``
 * OPTIONAL                  -> ``optional_join``
 * property paths (len<=3)   -> chained ``kb_join`` steps (planner emits them)
@@ -200,7 +202,8 @@ def kb_join_scan(
 
 def kb_join_probe(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
-    k_max: int = 8,
+    k_max: int = 8, use_pallas: bool = False, fuse_compaction: bool = False,
+    bm: Optional[int] = None, interpret: bool = True,
 ) -> Bindings:
     """Join bindings against the KB via sorted-index probes.
 
@@ -208,8 +211,23 @@ def kb_join_probe(
     searchsorted + <= k_max gathers, independent of unused-KB size.  Requires
     a CONST predicate and at least one CONST/BOUND endpoint (the planner
     guarantees this or falls back to scan).
+
+    ``use_pallas=True`` runs the fused Pallas probe kernel
+    (:func:`repro.kernels.hash_join.ops.probe_compact`: searchsorted +
+    bounded gather + anchor re-check + compaction in one kernel pass);
+    ``fuse_compaction=True`` without Pallas selects the winner-gather jnp
+    twin.  All three paths are bit-identical, including both overflow
+    sources (``out_cap`` clipping and probe ranges wider than ``k_max``).
     """
-    assert pat.p.mode == SlotMode.CONST, "probe requires a constant predicate"
+    if use_pallas or fuse_compaction:
+        from repro.kernels.hash_join import ops as hj_ops
+        if use_pallas:
+            return hj_ops.probe_compact(bind, kb, pat, out_cap, k_max,
+                                        bm=bm, interpret=interpret)
+        return hj_ops.probe_compact_jnp(bind, kb, pat, out_cap, k_max)
+
+    from .kb import probe_view
+
     p_const = jnp.uint32(pat.p.const)
     ca = bind.capacity
 
@@ -218,15 +236,8 @@ def kb_join_probe(
             return jnp.full((ca,), jnp.uint32(slot.const))
         return bind.cols[:, slot.var]
 
-    if pat.s.mode != SlotMode.FREE:
-        keys = composite_key(p_const, anchor_val(pat.s))
-        sorted_keys, cols = kb.key_ps, (kb.s_ps, kb.p_ps, kb.o_ps)
-        check_slot, check_col = pat.o, 2
-    else:
-        assert pat.o.mode != SlotMode.FREE, "probe needs an anchored endpoint"
-        keys = composite_key(p_const, anchor_val(pat.o))
-        sorted_keys, cols = kb.key_po, (kb.s_po, kb.p_po, kb.o_po)
-        check_slot, check_col = pat.s, 0
+    sorted_keys, cols, anchor, _ = probe_view(kb, pat)
+    keys = composite_key(p_const, anchor_val(anchor))
 
     lo, hi = probe_range(sorted_keys, keys)
     (ms, mp, mo), ok, overflow_rows = gather_matches(cols, lo, hi, k_max)
@@ -255,10 +266,23 @@ def kb_join(
     fuse_compaction: bool = False, bm: Optional[int] = None,
     bn: Optional[int] = None, interpret: bool = True,
 ) -> Bindings:
+    """Dispatch one KB join to its access method.
+
+    ``method`` arrives resolved from the plan: the planner's
+    ``kb_method="auto"`` cost model has already replaced itself with
+    ``"scan"`` or ``"probe"`` (plus a derived ``k_max``) per
+    :class:`~repro.core.engine.KBJoin` step, so no cost decision happens at
+    trace time.  An ineligible probe (variable predicate or no anchored
+    endpoint) still falls back to the scan, preserving semantics for
+    hand-built plans.
+    """
     if method == "probe" and pat.p.mode == SlotMode.CONST and not (
         pat.s.mode == SlotMode.FREE and pat.o.mode == SlotMode.FREE
     ):
-        return kb_join_probe(bind, kb, pat, out_cap, k_max)
+        return kb_join_probe(bind, kb, pat, out_cap, k_max,
+                             use_pallas=use_pallas,
+                             fuse_compaction=fuse_compaction, bm=bm,
+                             interpret=interpret)
     return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas,
                         fuse_compaction=fuse_compaction, bm=bm, bn=bn,
                         interpret=interpret)
@@ -272,15 +296,24 @@ _NUM_OPS = ("lt", "le", "gt", "ge", "eq", "ne")
 
 
 def _num_cmp(bind: Bindings, var: int, op: str, value_id: int):
-    """Shared numeric-comparison leaf: ``(true mask, error mask)``.
+    """Shared comparison leaf: ``(true mask, error mask)``.
 
-    The error mask marks non-numeric bindings (SPARQL type error).  Both
-    ``filter_num`` and the boolean-tree evaluator consume this, so the
-    comparison semantics live in exactly one place.
+    Numeric right-hand sides (``value_id >= NUM_BASE``) compare fixed-point
+    ids; the error mask marks non-numeric bindings (SPARQL type error).
+    Term right-hand sides (IRI/string ids) are SPARQL *term equality* —
+    only ``eq``/``ne``, no type coercion; the error mask marks unbound
+    bindings.  Both ``filter_num`` and the boolean-tree evaluator consume
+    this, so the comparison semantics live in exactly one place.
     """
     assert op in _NUM_OPS, op
     v = bind.cols[:, var]
     t = jnp.uint32(value_id)
+    if int(value_id) < int(NUM_BASE):
+        assert op in ("eq", "ne"), (
+            "term comparisons support only eq/ne, got %r" % op)
+        err = v == jnp.uint32(PAD_ID)
+        cmp = (v == t) if op == "eq" else (v != t)
+        return cmp & ~err, err
     is_num = v >= jnp.uint32(NUM_BASE)
     cmp = {
         "lt": v < t, "le": v <= t, "gt": v > t,

@@ -117,6 +117,59 @@ def host_rows(kb: KnowledgeBase) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# plan-time KB statistics (the planner's cost model inputs)
+# --------------------------------------------------------------------------
+
+class PredStat(NamedTuple):
+    """Per-predicate access statistics of one (static) KB partition.
+
+    ``k_ps`` / ``k_po`` are the widest probe range any composite key spans in
+    the corresponding sorted view — i.e. the max fan-out of a subject- /
+    object-anchored probe on this predicate, *including* composite-key hash
+    collisions (a probe must gather the whole range before re-checking), so
+    a ``k_max`` at or above this bound can never overflow.
+    """
+
+    rows: int
+    k_ps: int
+    k_po: int
+
+
+class KBStats(NamedTuple):
+    """Host-side statistics of a KB partition, computed once at plan time
+    (the KB is static) and fed to the planner's KB-access cost model."""
+
+    total_rows: int
+    preds: dict            # {pred_id: PredStat}
+
+
+def collect_kb_stats(kb: KnowledgeBase) -> KBStats:
+    """Scan one partition's sorted views into :class:`KBStats` (host-side).
+
+    Both views keep valid rows in their first ``count()`` slots (pads carry
+    the max sort key), so per-predicate cardinalities and max probe-range
+    widths fall out of two ``np.unique`` passes over the valid key prefix.
+    """
+    v = np.asarray(kb.valid)
+    preds_col = np.asarray(kb.p_ps)[v]
+    stats: dict = {}
+    pids, counts = np.unique(preds_col, return_counts=True)
+    rows_by_pred = {int(p): int(c) for p, c in zip(pids, counts)}
+    widest = {int(p): [0, 0] for p in pids}
+    for i, keys in enumerate((np.asarray(kb.key_ps)[v],
+                              np.asarray(kb.key_po)[v])):
+        uk, uc = np.unique(keys, return_counts=True)
+        key_pred = (uk >> np.uint32(TERM_BITS)).astype(np.int64)
+        for p in widest:
+            m = key_pred == p
+            if m.any():
+                widest[p][i] = int(uc[m].max())
+    for p, n in rows_by_pred.items():
+        stats[p] = PredStat(rows=n, k_ps=widest[p][0], k_po=widest[p][1])
+    return KBStats(total_rows=int(preds_col.shape[0]), preds=stats)
+
+
+# --------------------------------------------------------------------------
 # The paper's technique: used-KB pruning (plan-time, host-side)
 # --------------------------------------------------------------------------
 
@@ -188,6 +241,24 @@ def shard_rows(kb: KnowledgeBase, num_shards: int) -> KnowledgeBase:
 # --------------------------------------------------------------------------
 # jit-side probes
 # --------------------------------------------------------------------------
+
+def probe_view(kb: KnowledgeBase, pat) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array], object, bool]:
+    """``(sorted keys, (s, p, o) columns, anchor slot, anchor_is_subject)``
+    for a probe on ``pat`` (const predicate + anchored endpoint required).
+
+    Subject anchors are preferred when both endpoints are anchored — every
+    probe implementation (:func:`repro.core.algebra.kb_join_probe` and the
+    fused :mod:`repro.kernels.hash_join` paths) derives its view from this
+    one function, so they can never disagree on row order.
+    """
+    from .pattern import SlotMode
+
+    assert pat.p.mode == SlotMode.CONST, "probe requires a constant predicate"
+    if pat.s.mode != SlotMode.FREE:
+        return kb.key_ps, (kb.s_ps, kb.p_ps, kb.o_ps), pat.s, True
+    assert pat.o.mode != SlotMode.FREE, "probe needs an anchored endpoint"
+    return kb.key_po, (kb.s_po, kb.p_po, kb.o_po), pat.o, False
+
 
 def probe_range(keys_sorted: jax.Array, query_key: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """[lo, hi) row range whose composite key equals ``query_key``."""

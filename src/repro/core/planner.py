@@ -20,6 +20,7 @@ another SCEP engine".
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -29,7 +30,7 @@ from .engine import (
     DistinctStep, FilterBoolStep, FilterInStep, FilterNumStep, KBJoin,
     OptionalSteps, Plan, ProjectStep, ScanJoin, Step, UnionSteps,
 )
-from .kb import KnowledgeBase, host_rows, kb_from_triples, prune
+from .kb import KBStats, KnowledgeBase, host_rows, kb_from_triples, prune
 from .pattern import CompiledPattern, Slot, SlotMode
 from .rdf import CLOSURE_PRED_BASE, PRED_SPACE, Vocab
 from .reasoner import (
@@ -216,6 +217,132 @@ def augment_kb_with_closures(
 
 
 # --------------------------------------------------------------------------
+# KB-access cost model (``kb_method="auto"``)
+# --------------------------------------------------------------------------
+
+PROBE_K_CAP = 64    # largest k_max the planner will derive for a probe
+
+
+def _round_up_k(fanout: int) -> int:
+    """Derived probe width: observed max fan-out rounded up to a multiple of
+    8 (gather-lane friendly), floor 8."""
+    return max(8, ((int(fanout) + 7) // 8) * 8)
+
+
+def _choose_kb_method(
+    cp: CompiledPattern, kb_stats: Optional[KBStats], default_k: int,
+) -> Tuple[str, int]:
+    """Per-join access-method selection from host-side KB statistics.
+
+    A probe requires a const predicate and an anchored endpoint; its
+    derived ``k_max`` is the observed max probe-range width (composite-key
+    collisions included, see :class:`repro.core.kb.PredStat`) rounded up —
+    so a selected probe can never overflow its gather.  The cost comparison
+    is the paper's Figs. 5-7 asymmetry: a scan pays the *whole* partition
+    per join, a probe pays O(log N) + ``k_max`` gathers per binding row.
+    Fan-outs above :data:`PROBE_K_CAP` fall back to the fused scan (wide
+    gathers erase the probe's advantage and the scan vectorizes perfectly).
+    """
+    if kb_stats is None:
+        return "scan", default_k
+    if cp.p.mode != SlotMode.CONST or (
+            cp.s.mode == SlotMode.FREE and cp.o.mode == SlotMode.FREE):
+        return "scan", default_k
+    stat = kb_stats.preds.get(int(cp.p.const))
+    if stat is None:
+        # predicate absent from this slice: every probe is an instant miss
+        return "probe", _round_up_k(0)
+    fanout = stat.k_ps if cp.s.mode != SlotMode.FREE else stat.k_po
+    if fanout > PROBE_K_CAP:
+        return "scan", default_k
+    k = _round_up_k(fanout)
+    n = max(1, kb_stats.total_rows)
+    if math.ceil(math.log2(n + 1)) + k >= n:
+        return "scan", default_k          # tiny partition: scan is cheaper
+    return "probe", k
+
+
+def _kb_item_var_names(item: Q.WhereItem) -> Set[str]:
+    if isinstance(item, Q.Pattern):
+        return set(item.vars())
+    if isinstance(item, (Q.PathKB, Q.PathClosure)):
+        return {t.name for t in (item.start, item.end)
+                if isinstance(t, Q.Var)}
+    if isinstance(item, Q.FilterSubclass):
+        return {item.var}
+    return set()
+
+
+def _kb_item_cost(
+    item: Q.WhereItem, kb_stats: KBStats,
+    closure_specs: Sequence[Tuple[int, int]], bound_names: Set[str],
+) -> float:
+    """Estimated per-binding fan-out of one KB item (lower = more
+    selective), given the variable names bound before it runs."""
+
+    def pat_cost(s_term, pred: Optional[int], o_term) -> float:
+        if pred is None:                       # variable predicate: full scan
+            return float(kb_stats.total_rows)
+        stat = kb_stats.preds.get(int(pred))
+        if stat is None:
+            return 0.0                         # empty relation: kills all rows
+
+        def anchored(t) -> bool:
+            return isinstance(t, Q.Const) or (
+                isinstance(t, Q.Var) and t.name in bound_names)
+
+        if anchored(s_term):
+            return float(stat.k_ps)
+        if anchored(o_term):
+            return float(stat.k_po)
+        return float(stat.rows)                # unanchored: rows x bindings
+
+    if isinstance(item, Q.Pattern):
+        pred = item.p.id if isinstance(item.p, Q.Const) else None
+        return pat_cost(item.s, pred, item.o)
+    if isinstance(item, Q.PathKB):
+        end = item.end if len(item.preds) == 1 else Q.Var("__chain")
+        return pat_cost(item.start, item.preds[0], end)
+    if isinstance(item, Q.PathClosure):
+        cp = CLOSURE_PRED_BASE + closure_specs.index(
+            (item.pred, item.min_hops))
+        return pat_cost(item.start, cp, item.end)
+    if isinstance(item, Q.FilterSubclass):
+        return pat_cost(Q.Var(item.var), item.type_pred, Q.Var("__cls"))
+    return float("inf")
+
+
+def order_kb_items(
+    items: List[Q.WhereItem], kb_stats: KBStats,
+    closure_specs: Sequence[Tuple[int, int]], bound_names: Set[str],
+) -> List[Q.WhereItem]:
+    """Greedy selectivity ordering of a query's KB-join sequence.
+
+    At every step the cheapest remaining item under the current bound-name
+    set runs next (anchored low-fan-out joins first), shrinking the
+    intermediate binding population every downstream step sees.  Ties keep
+    listed order, so the ordering is deterministic.  Safe by construction:
+    the binding *set* a join sequence produces is order-independent, and
+    since PR 4 the published row order is canonical
+    (:func:`repro.core.algebra.canonical_order`), so reordering can never
+    change the output stream.
+    """
+    names = set(bound_names)
+    pending = list(enumerate(items))
+    ordered: List[Q.WhereItem] = []
+    while pending:
+        idx, best = min(
+            pending,
+            key=lambda t: (_kb_item_cost(t[1], kb_stats, closure_specs,
+                                         names), t[0]),
+        )
+        pending.remove((idx, best))
+        ordered.append(best)
+        names |= _kb_item_var_names(best)
+    return ordered
+
+
+# --------------------------------------------------------------------------
 # compilation
 # --------------------------------------------------------------------------
 
@@ -281,6 +408,7 @@ def compile_query(
     join_bm: int | None = None,
     join_bn: int | None = None,
     interpret: bool = True,
+    kb_stats: Optional[KBStats] = None,
 ) -> Plan:
     """Compile the AST into a Plan.
 
@@ -289,6 +417,16 @@ def compile_query(
     then filters as soon as their variable is bound, then OPTIONAL/UNION
     groups, preserving SPARQL's left-biased semantics for the shapes the
     paper uses.
+
+    ``kb_method="auto"`` (with ``kb_stats`` from
+    :func:`repro.core.kb.collect_kb_stats` over the operator's attached
+    partition) turns the single global method knob into a per-join cost
+    decision: each KB join independently picks probe — with a *derived*
+    ``k_max`` covering the observed fan-out — or the fused scan
+    (:func:`_choose_kb_method`), and the KB-join sequence itself is
+    greedily selectivity-ordered (:func:`order_kb_items`) instead of
+    executing in listed order.  Without stats, ``"auto"`` degrades to the
+    scan method.
     """
     vt = _VarTable()
     bound: Set[int] = set()
@@ -298,7 +436,10 @@ def compile_query(
     closure_specs = closure_path_specs(q)
 
     def _kb_step(cp: CompiledPattern) -> KBJoin:
-        return KBJoin(cp, kb_method, k_max, use_pallas, fuse_compaction,
+        method, k = kb_method, k_max
+        if kb_method == "auto":
+            method, k = _choose_kb_method(cp, kb_stats, k_max)
+        return KBJoin(cp, method, k, use_pallas, fuse_compaction,
                       join_bm, join_bn, interpret)
 
     def fresh_aux() -> str:
@@ -347,8 +488,19 @@ def compile_query(
         steps.append(ScanJoin(cp, shared))
         flush_filters()
 
-    # pass 2: KB patterns / paths / subclass reasoning
-    for item in q.where:
+    # pass 2: KB patterns / paths / subclass reasoning.  Listed order by
+    # default; under kb_method="auto" with statistics the sequence is
+    # greedily reordered by estimated selectivity (cheap anchored joins
+    # first) — output-invariant thanks to algebra.canonical_order.
+    kb_items: List[Q.WhereItem] = [
+        it for it in q.where
+        if (isinstance(it, Q.Pattern) and it.src == Q.KB)
+        or isinstance(it, (Q.PathKB, Q.PathClosure, Q.FilterSubclass))
+    ]
+    if kb_method == "auto" and kb_stats is not None and len(kb_items) > 1:
+        kb_items = order_kb_items(kb_items, kb_stats, closure_specs,
+                                  bound_names)
+    for item in kb_items:
         if isinstance(item, Q.Pattern) and item.src == Q.KB:
             cp = _compile_pattern(item, vt, bound)
             steps.append(_kb_step(cp))

@@ -91,9 +91,18 @@ class PathClosure:
 
 @dataclasses.dataclass(frozen=True)
 class FilterNum:
+    """One FILTER comparison leaf.
+
+    ``value_id >= rdf.NUM_BASE`` is a fixed-point numeric literal and admits
+    every ordering operator; a ``value_id`` below the numeric band is an
+    IRI/string term id and the comparison is SPARQL *term equality* —
+    ``eq``/``ne`` only (the parser enforces this), unbound variables are a
+    type error either way.
+    """
+
     var: str
     op: str           # lt | le | gt | ge | eq | ne
-    value_id: int     # fixed-point numeric literal id
+    value_id: int     # fixed-point numeric literal id, or an IRI/string id
 
 
 @dataclasses.dataclass(frozen=True)

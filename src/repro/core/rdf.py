@@ -7,7 +7,10 @@ sort keys fit in 32 bits without requiring x64:
 
 * predicates:      ``[1, PRED_SPACE)``            (< 2**12 ids)
 * URIs / strings:  ``[PRED_SPACE, NUM_BASE)``     (< 2**20 ids)
-* numeric literals: ``[NUM_BASE, 2**31)`` encoded as ``NUM_BASE + round(v * NUM_SCALE)``
+* numeric literals: ``[NUM_BASE, 2**32)`` encoded as
+  ``NUM_BASE + NUM_OFFSET + round(v * NUM_SCALE)`` — the ``NUM_OFFSET``
+  zero point keeps ids order-isomorphic to values while admitting negative
+  literals (``v >= -NUM_OFFSET / NUM_SCALE``)
 
 id 0 is the reserved PAD/NULL term (also the SPARQL unbound value produced by
 OPTIONAL).  Composite probe keys are ``(p << TERM_BITS) | term`` which fits in
@@ -34,6 +37,10 @@ CLOSURE_PRED_BASE = PRED_SPACE - 64
 TERM_SPACE = 1 << TERM_BITS          # term ids live in [PRED_SPACE, 2**20)
 NUM_BASE = np.uint32(1 << 30)        # numeric literals live above this
 NUM_SCALE = 100.0                    # fixed-point scale for numeric literals
+# fixed-point zero: value v encodes as NUM_BASE + NUM_OFFSET + round(v*SCALE),
+# so ids above NUM_BASE stay order-isomorphic to values and negative literals
+# (FILTER(?v > -5)) encode below the zero point instead of being rejected
+NUM_OFFSET = 1 << 29
 # synthetic per-binding row nodes (the binding-graph protocol between SCEP
 # operators) live in the free band between URI terms and numeric literals
 ROW_BASE = np.uint32(1 << 21)
@@ -85,10 +92,16 @@ class Vocab:
 
     @staticmethod
     def number(value: float) -> int:
-        """Encode a numeric literal as a fixed-point id."""
-        q = int(round(value * NUM_SCALE))
+        """Encode a numeric literal as a fixed-point id (order-isomorphic)."""
+        q = int(round(value * NUM_SCALE)) + NUM_OFFSET
         if q < 0:
-            raise VocabError("negative literals unsupported: %r" % value)
+            raise VocabError(
+                "literal %r below the encodable range (min %s)"
+                % (value, -NUM_OFFSET / NUM_SCALE))
+        if int(NUM_BASE) + q > 0xFFFFFFFF:
+            raise VocabError(
+                "literal %r above the encodable range (max %s)"
+                % (value, (0xFFFFFFFF - int(NUM_BASE) - NUM_OFFSET) / NUM_SCALE))
         return int(NUM_BASE) + q
 
     @staticmethod
@@ -97,7 +110,7 @@ class Vocab:
 
     @staticmethod
     def decode_number(term_id: int) -> float:
-        return (int(term_id) - int(NUM_BASE)) / NUM_SCALE
+        return (int(term_id) - int(NUM_BASE) - NUM_OFFSET) / NUM_SCALE
 
     # -- decoding ----------------------------------------------------------
     def to_str(self, term_id: int) -> str:

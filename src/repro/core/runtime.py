@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import Plan, run_plan_windows
-from .kb import KnowledgeBase, pad_to
+from .kb import KnowledgeBase, collect_kb_stats, pad_to
 from .operator import OperatorConfig, SCEPOperator
 from .planner import (
     OperatorDAG, SubQuery, augment_kb_with_closures, compile_query,
@@ -48,7 +48,11 @@ class RuntimeConfig:
     window_capacity: int = 1000
     max_windows: int = 8
     out_stream_cap: int = 2048
-    kb_method: str = "scan"          # paper method: "scan" | "probe"
+    # KB-access method: the paper's two measured methods plus cost-based
+    # per-join selection — "scan" | "probe" | "auto" ("auto" profiles each
+    # operator's used-KB slice at build time, picks probe-with-derived-k_max
+    # or fused scan per join, and selectivity-orders the join sequence)
+    kb_method: str = "scan"
     kb_capacity: Optional[int] = None
     scan_cap: int = 128
     bind_cap: int = 256
@@ -118,6 +122,25 @@ def build_operators(
     join_bm, join_bn = config.join_block_shapes or (None, None)
     operators: Dict[str, SCEPOperator] = {}
     for name, sub in dag.subqueries.items():
+        # the paper's core move: each operator gets its own used-KB slice.
+        # Pruning runs first so closure-pair materialization works on the
+        # predicate-sized slice, not the full KB (prune_kb_for keeps every
+        # edge a closure path traverses); capacity padding comes last so
+        # the synthetic pair rows fit inside it.  With kb_method="auto" the
+        # finished slice is profiled (the KB is static, so this is pure
+        # plan time) and its statistics drive per-join method selection and
+        # selectivity ordering in compile_query.
+        op_kb = None
+        kb_stats = None
+        if sub.touches_kb:
+            op_kb = prune_kb_for(sub.query, kb)
+            op_kb = augment_kb_with_closures(
+                sub.query, op_kb, use_pallas=config.use_pallas,
+                interpret=config.interpret)
+            if config.kb_method == "auto":
+                kb_stats = collect_kb_stats(op_kb)
+            if config.kb_capacity:
+                op_kb = pad_to(op_kb, config.kb_capacity)
         plan = compile_query(
             sub.query,
             kb_method=config.kb_method,
@@ -129,20 +152,8 @@ def build_operators(
             fuse_compaction=config.fuse_compaction,
             join_bm=join_bm, join_bn=join_bn,
             interpret=config.interpret,
+            kb_stats=kb_stats,
         )
-        # the paper's core move: each operator gets its own used-KB slice.
-        # Pruning runs first so closure-pair materialization works on the
-        # predicate-sized slice, not the full KB (prune_kb_for keeps every
-        # edge a closure path traverses); capacity padding comes last so
-        # the synthetic pair rows fit inside it.
-        op_kb = None
-        if sub.touches_kb:
-            op_kb = prune_kb_for(sub.query, kb)
-            op_kb = augment_kb_with_closures(
-                sub.query, op_kb, use_pallas=config.use_pallas,
-                interpret=config.interpret)
-            if config.kb_capacity:
-                op_kb = pad_to(op_kb, config.kb_capacity)
         env = prepare_env(sub.query, kb, use_pallas=config.use_pallas,
                           interpret=config.interpret)
         operators[name] = SCEPOperator(name, plan, op_kb, env, op_cfg)
@@ -287,6 +298,9 @@ class MonolithicRuntime:
             fuse_compaction=config.fuse_compaction,
             join_bm=join_bm, join_bn=join_bn,
             interpret=config.interpret,
+            kb_stats=(collect_kb_stats(kb)
+                      if config.kb_method == "auto" and kb is not None
+                      else None),
         )
         env = prepare_env(q, kb, use_pallas=config.use_pallas,
                           interpret=config.interpret)

@@ -43,6 +43,7 @@ from .runtime import (
 from .sparql import ParseInfo, parse_query_info, serialize_query
 
 MODES = ("monolithic", "single_program", "pipelined")
+KB_METHODS = ("scan", "probe", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +60,7 @@ class ExecutionConfig:
     window_capacity: int = 1000
     max_windows: int = 8
     out_stream_cap: int = 2048
-    kb_method: str = "scan"            # "scan" | "probe"
+    kb_method: str = "scan"            # "scan" | "probe" | "auto" (cost-based)
     kb_capacity: Optional[int] = None
     scan_cap: int = 128
     bind_cap: int = 256
@@ -89,6 +90,10 @@ class ExecutionConfig:
         if self.mode not in MODES:
             raise ValueError(
                 "unknown mode %r (expected one of %s)" % (self.mode, list(MODES)))
+        if self.kb_method not in KB_METHODS:
+            raise ValueError(
+                "unknown kb_method %r (expected one of %s)"
+                % (self.kb_method, list(KB_METHODS)))
         if self.mode == "pipelined" and self.mesh is not None:
             raise ValueError(
                 "pipelined mode distributes via placement=, not mesh= "

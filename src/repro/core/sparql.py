@@ -28,8 +28,9 @@ Supported subset (§4.3's query characteristics, Tables 1-3):
   length <= 3, variable-length closure paths ``p+`` / ``p*`` compiled
   through the fused closure kernel, hierarchy reasoning
   ``type/subClassOf*``), ``OPTIONAL``, ``{...} UNION {...}``, and
-  ``FILTER`` with numeric comparisons combined by ``&&`` / ``||`` / ``!``
-  (SPARQL three-valued semantics).
+  ``FILTER`` with numeric comparisons (negative literals included) and
+  ``=`` / ``!=`` term equality on IRI/string ids, combined by ``&&`` /
+  ``||`` / ``!`` (SPARQL three-valued semantics).
 
 Term resolution is positional, matching the hand-built query builders:
 names in predicate position intern via ``vocab.pred``; subject/object
@@ -88,7 +89,7 @@ _TOKEN_RE = re.compile(
   | (?P<var>\?[A-Za-z_][A-Za-z0-9_]*)
   | (?P<row>_:row[0-9]+)
   | (?P<iri><[^<>\s]*>)
-  | (?P<num>[0-9]+(?:\.[0-9]+)?)
+  | (?P<num>-?[0-9]+(?:\.[0-9]+)?)
   | (?P<pname>[A-Za-z][A-Za-z0-9_.-]*:[A-Za-z0-9_.-]+)
   | (?P<nsdecl>[A-Za-z][A-Za-z0-9_.-]*:)
   | (?P<word>[A-Za-z_][A-Za-z0-9_]*)
@@ -280,14 +281,15 @@ class _Parser:
                     self.expect_word("RANGE")
                     self.expect_word("TRIPLES")
                     n = self.next()
-                    if n.kind != "num" or "." in n.text:
-                        raise self.error("RANGE TRIPLES takes an integer", n)
+                    if n.kind != "num" or "." in n.text or "-" in n.text:
+                        raise self.error(
+                            "RANGE TRIPLES takes a positive integer", n)
                     info["window_triples"] = int(n.text)
                     if self.at_word("STEP"):
                         self.next()
                         s = self.next()
-                        if s.kind != "num" or "." in s.text:
-                            raise self.error("STEP takes an integer", s)
+                        if s.kind != "num" or "." in s.text or "-" in s.text:
+                            raise self.error("STEP takes a positive integer", s)
                         info["window_step"] = int(s.text)
                     self.expect_punct("]")
             else:
@@ -538,11 +540,26 @@ class _Parser:
         if cmp_tok.kind != "op":
             raise self.error(
                 "expected a comparison operator (< <= > >= = !=)", cmp_tok)
-        num_tok = self.next()
-        if num_tok.kind != "num":
-            raise self.error("expected a numeric literal in FILTER", num_tok)
-        return Q.FilterNum(var_tok.text[1:], _CMP_TO_OP[cmp_tok.text],
-                           Vocab.number(float(num_tok.text)))
+        op = _CMP_TO_OP[cmp_tok.text]
+        rhs = self.next()
+        if rhs.kind == "num":
+            return Q.FilterNum(var_tok.text[1:], op,
+                               Vocab.number(float(rhs.text)))
+        # term equality: `=` / `!=` against an IRI/string id — SPARQL term
+        # equality, no numeric-type coercion (and no ordering comparisons)
+        if op not in ("eq", "ne"):
+            raise self.error(
+                "ordering comparisons (< <= > >=) need a numeric literal; "
+                "IRIs and strings only support = and !=", rhs)
+        if rhs.kind == "pname":
+            tid = self._resolve_pname(rhs, "term")
+        elif rhs.kind == "iri" and _ID_IRI_RE.match(rhs.text):
+            tid = int(_ID_IRI_RE.match(rhs.text).group(1))
+        else:
+            raise self.error(
+                "expected a numeric literal, prefixed name or <dscep:id:N> "
+                "in FILTER", rhs)
+        return Q.FilterNum(var_tok.text[1:], op, tid)
 
     # -- top level ---------------------------------------------------------
     def parse(self, default_name: Optional[str]) -> Tuple[Q.Query, ParseInfo]:
@@ -700,8 +717,9 @@ class _Serializer:
         its argument.
         """
         if isinstance(e, Q.FilterNum):
-            return "?%s %s %s" % (e.var, _OP_TO_CMP[e.op],
-                                  _num_text(e.value_id))
+            rhs = (_num_text(e.value_id) if e.value_id >= int(NUM_BASE)
+                   else self.const(e.value_id, "term"))
+            return "?%s %s %s" % (e.var, _OP_TO_CMP[e.op], rhs)
         if e.op == "not":
             return "!(%s)" % self.filter_text(e.args[0])
         sep = " && " if e.op == "and" else " || "

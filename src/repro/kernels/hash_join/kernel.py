@@ -13,6 +13,12 @@ predicates as vector compares (VPU).  Two entry points:
   O(M*N / tile-resident) reads + O(out_cap) writes, and the output positions
   are *globally row-major deterministic* — bit-identical to materializing the
   candidate matrix and running :func:`repro.core.pattern.compact_rows`.
+* :func:`probe_compact_pallas` — the probe-method analogue: per binding row
+  a binary search over the resident sorted composite-key view, a bounded
+  ``k_max``-wide gather, the exact anchor re-check, and the same
+  scatter-compaction — all in one kernel pass whose cost is independent of
+  unused-KB size (the planner's ``kb_method="auto"`` picks this whenever
+  the pattern is anchored and the observed fan-out is small).
 
 The fused pipeline is classic two-phase stream compaction:
 
@@ -181,6 +187,153 @@ def _scatter_kernel(pat: CompiledPattern, out_cap: int, cols_ref, bvalid_ref,
         ext.reshape(bm * bn, nv)
     )
     rowbase_ref[...] = base + rc
+
+
+# --------------------------------------------------------------------------
+# fused probe kernel: searchsorted + bounded gather + re-check + compaction
+# --------------------------------------------------------------------------
+
+def _probe_match(pat: CompiledPattern, cols, bvalid, ms, mp, mo, ok):
+    """Anchor/const re-check on gathered ``[bm, k]`` candidate rows.
+
+    Exact parity with :func:`repro.core.algebra.kb_join_probe`'s
+    verification loop: the composite probe key hashes numeric literals, so
+    anchors must be re-checked with true equality, and the non-anchored
+    endpoint is verified here too.
+    """
+    m = ok & bvalid[:, None]
+    kcols = {0: ms, 1: mp, 2: mo}
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.CONST:
+            m = m & (kcols[i] == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            m = m & (kcols[i] == cols[:, slot.var][:, None])
+    return m
+
+
+def _probe_extend(pat: CompiledPattern, cols, ms, mp, mo):
+    """[bm, nv] binding rows -> [bm, k, nv] rows with FREE vars gathered."""
+    bm, nv = cols.shape
+    k = ms.shape[1]
+    ext = jnp.broadcast_to(cols[:, None, :], (bm, k, nv))
+    kcols = {0: ms, 1: mp, 2: mo}
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            ext = ext.at[..., slot.var].set(kcols[i])
+    return ext
+
+
+def _probe_kernel(pat: CompiledPattern, anchor_is_s: bool, k_max: int,
+                  out_cap: int, cols_ref, bvalid_ref, ks_ref, kp_ref, ko_ref,
+                  keys_ref, out_ref, counts_ref, fan_ref, base_ref):
+    """One ``[bm]`` binding tile: probe, gather, re-check, scatter-compact.
+
+    The grid is 1-D over binding tiles and TPU grids run sequentially, so
+    ``base_ref`` (a ``[1]`` output revisited by every tile) carries the
+    global running match count — output positions are globally row-major
+    over the virtual ``[M, k_max]`` candidate block, bit-identical to
+    compacting the unfused probe's extension.  Row ``out_cap`` of the
+    resident output is the dump slot for overflowing matches.
+
+    Lowering note: like the scan-path scatter, this kernel leans on
+    runtime-indexed ``.at[].set`` plus ``jnp.searchsorted``/``jnp.take``
+    gathers; all are exercised in interpret mode here and must be validated
+    under Mosaic before flipping ``interpret=False`` on real hardware.
+    """
+    from repro.core.rdf import composite_key
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        base_ref[...] = jnp.zeros_like(base_ref)
+
+    cols = cols_ref[...]
+    keys = keys_ref[...]
+    bm = cols.shape[0]
+    anchor = pat.s if anchor_is_s else pat.o
+    if anchor.mode == SlotMode.CONST:
+        aval = jnp.full((bm,), jnp.uint32(anchor.const))
+    else:
+        aval = cols[:, anchor.var]
+    qk = composite_key(jnp.uint32(pat.p.const), aval)
+    lo = jnp.searchsorted(keys, qk, side="left")
+    hi = jnp.searchsorted(keys, qk, side="right")
+    idx = lo[:, None] + jnp.arange(k_max, dtype=lo.dtype)
+    ok = idx < hi[:, None]
+    idx_safe = jnp.minimum(idx, keys.shape[0] - 1)
+    ms = jnp.take(ks_ref[...], idx_safe, axis=0)
+    mp = jnp.take(kp_ref[...], idx_safe, axis=0)
+    mo = jnp.take(ko_ref[...], idx_safe, axis=0)
+    m = _probe_match(pat, cols, bvalid_ref[...], ms, mp, mo, ok)
+
+    rc = jnp.sum(m.astype(jnp.int32), axis=1)                     # [bm]
+    ext = _probe_extend(pat, cols, ms, mp, mo)                    # [bm, k, nv]
+    flat_m = m.reshape(bm * k_max)
+    rank = jnp.cumsum(flat_m.astype(jnp.int32)) - 1
+    base = base_ref[0]
+    tgt = base + rank
+    tgt = jnp.where(flat_m & (tgt < out_cap), tgt, out_cap)       # dump slot
+    nv = cols.shape[1]
+    out_ref[...] = out_ref[...].at[tgt].set(ext.reshape(bm * k_max, nv))
+    counts_ref[...] = rc
+    fan_ref[...] = ((hi - lo) > k_max).astype(jnp.int32)
+    base_ref[0] = base + jnp.sum(rc)
+
+
+def probe_compact_pallas(
+    cols: jax.Array,        # [M, NV] uint32 (M multiple of bm)
+    bvalid: jax.Array,      # [M] bool
+    ks: jax.Array, kp: jax.Array, ko: jax.Array,   # [N] view columns
+    keys: jax.Array,        # [N] uint32 sorted composite keys (pads = max)
+    pat: CompiledPattern,
+    anchor_is_s: bool,
+    out_cap: int,
+    k_max: int = 8,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused probe join.  Returns ``(rows [out_cap, nv], counts [M],
+    fan_overflow [M])``.
+
+    ``rows[k]`` is the k-th match of the virtual row-major ``[M, k_max]``
+    candidate block, extended with the pattern's FREE variables;
+    ``fan_overflow[r]`` flags probe ranges wider than ``k_max`` (clipped
+    gathers).  The sorted view stays resident in VMEM (one block), so each
+    tile pays O(bm log N) compares + O(bm * k_max) gathers — no O(N) scan.
+    """
+    m, nv = cols.shape
+    n = ks.shape[0]
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    kern = functools.partial(_probe_kernel, pat, anchor_is_s, k_max, out_cap)
+    out, counts, fan, _ = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, nv), lambda i: (i, 0)),   # binding tile
+            pl.BlockSpec((bm,), lambda i: (i,)),        # binding validity
+            pl.BlockSpec((n,), lambda i: (0,)),         # view subjects
+            pl.BlockSpec((n,), lambda i: (0,)),         # view predicates
+            pl.BlockSpec((n,), lambda i: (0,)),         # view objects
+            pl.BlockSpec((n,), lambda i: (0,)),         # sorted keys
+        ],
+        out_specs=[
+            pl.BlockSpec((out_cap + 1, nv), lambda i: (0, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),         # running base
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_cap + 1, nv), jnp.uint32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cols, bvalid, ks, kp, ko, keys)
+    return out[:out_cap], counts, fan
 
 
 def join_compact_pallas(

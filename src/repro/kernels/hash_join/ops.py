@@ -1,6 +1,6 @@
 """Public wrappers: pad to block multiples, run the kernel, slice back.
 
-Two join surfaces:
+Three join surfaces:
 
 * :func:`match_matrix` — original path; returns the bool ``[M, N]`` candidate
   matrix that the caller compacts (kept for parity tests and as a fallback).
@@ -11,6 +11,11 @@ Two join surfaces:
   gathers only the ``out_cap`` winning rows instead of materializing and
   compacting the ``[M, N, nv]`` extension — the dominant memory traffic of
   the unfused path.
+* :func:`probe_compact` / :func:`probe_compact_jnp` — the probe-method
+  analogue (``kb_method="probe"``/``"auto"``): searchsorted + bounded
+  gather + anchor re-check + compaction fused into one kernel pass (or the
+  winner-gather jnp twin), bit-identical to the unfused
+  ``algebra.kb_join_probe`` pipeline.
 
 Both fused paths are bit-identical to the unfused
 ``match -> extend -> compact_rows`` pipeline, including row order (global
@@ -23,8 +28,11 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kb import KnowledgeBase
+from repro.core.kb import (
+    KnowledgeBase, gather_matches, probe_range, probe_view,
+)
 from repro.core.pattern import Bindings, CompiledPattern, SlotMode
+from repro.core.rdf import composite_key
 
 from . import kernel
 from .ref import match_matrix_ref
@@ -104,6 +112,79 @@ def join_compact(
     valid = jnp.arange(out_cap) < jnp.minimum(total, out_cap)
     rows = jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
     return Bindings(rows, valid, (total > out_cap) | bind.overflow)
+
+
+def _anchor_values(bind: Bindings, anchor) -> jax.Array:
+    if anchor.mode == SlotMode.CONST:
+        return jnp.full((bind.capacity,), jnp.uint32(anchor.const))
+    return bind.cols[:, anchor.var]
+
+
+def probe_compact(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    k_max: int = 8, bm: int | None = None, interpret: bool = True,
+) -> Bindings:
+    """Fused Pallas probe join: one kernel pass, no per-stage HBM hops.
+
+    Bit-identical to the unfused :func:`repro.core.algebra.kb_join_probe`
+    pipeline (probe_range -> gather_matches -> re-check -> compact_rows),
+    including row order, zeroed invalid rows and both overflow sources
+    (compaction past ``out_cap`` and probe ranges wider than ``k_max``).
+    """
+    keys, (cs, cp, co), _, anchor_is_s = probe_view(kb, pat)
+    m = bind.capacity
+    bm = bm or min(kernel.DEFAULT_BM, max(8, m))
+    cols = _pad_to(bind.cols, bm, axis=0)
+    bvalid = _pad_to(bind.valid, bm, axis=0, fill=False)
+    # lane-align the resident view; pads carry the max sort key, which no
+    # real probe key reaches, so searchsorted results are unchanged
+    keys_p = _pad_to(keys, 128, fill=jnp.uint32(0xFFFFFFFF))
+    cs_p, cp_p, co_p = (_pad_to(c, 128) for c in (cs, cp, co))
+    rows, counts, fan = kernel.probe_compact_pallas(
+        cols, bvalid, cs_p, cp_p, co_p, keys_p, pat, anchor_is_s, out_cap,
+        k_max=k_max, bm=bm, interpret=interpret,
+    )
+    total = jnp.sum(counts)
+    valid = jnp.arange(out_cap) < jnp.minimum(total, out_cap)
+    rows = jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
+    fan_ovf = jnp.any((fan[:m] > 0) & bind.valid)
+    return Bindings(rows, valid, (total > out_cap) | fan_ovf | bind.overflow)
+
+
+def probe_compact_jnp(
+    bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
+    k_max: int = 8,
+) -> Bindings:
+    """Fused jnp probe twin: gather the ``out_cap`` winners directly.
+
+    Same move as :func:`join_compact_jnp` applied to the probe method: the
+    k-th output row is located by binary search on the cumulative match
+    count over the ``[cap, k_max]`` candidate block, so the row extension
+    is built only for rows that actually publish.
+    """
+    keys_sorted, kcols_v, anchor, _ = probe_view(kb, pat)
+    ca = bind.capacity
+    qk = composite_key(jnp.uint32(pat.p.const), _anchor_values(bind, anchor))
+    lo, hi = probe_range(keys_sorted, qk)
+    (ms, mp, mo), ok, fan_rows = gather_matches(kcols_v, lo, hi, k_max)
+    gathered = {0: ms, 1: mp, 2: mo}
+    # the kernel's re-check helper keeps the verification semantics in one
+    # place for both fused paths (ref.py stays independent as the oracle)
+    m = kernel._probe_match(pat, bind.cols, bind.valid, ms, mp, mo, ok)
+    cum = jnp.cumsum(m.reshape(-1).astype(jnp.int32))
+    total = cum[-1]
+    k = jnp.arange(out_cap, dtype=jnp.int32)
+    src = jnp.searchsorted(cum, k + 1, side="left").astype(jnp.int32)
+    valid = k < jnp.minimum(total, out_cap)
+    src = jnp.minimum(src, ca * k_max - 1)
+    rows = jnp.take(bind.cols, src // k_max, axis=0)
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            rows = rows.at[:, slot.var].set(gathered[i].reshape(-1)[src])
+    rows = jnp.where(valid[:, None], rows, jnp.zeros_like(rows))
+    overflow = ((total > out_cap) | jnp.any(fan_rows & bind.valid)
+                | bind.overflow)
+    return Bindings(rows, valid, overflow)
 
 
 def join_compact_jnp(

@@ -43,6 +43,51 @@ def match_matrix_ref(cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern):
     return m
 
 
+def probe_compact_ref(
+    cols, bvalid, vs, vp, vo, keys, pat: CompiledPattern, anchor_is_s: bool,
+    out_cap: int, k_max: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused probe: returns ``(rows, valid, overflow)``.
+
+    Materializes the bounded ``[M, k_max]`` gather (probe ranges on the
+    sorted composite-key ``keys`` over view columns ``vs/vp/vo``), re-checks
+    every CONST/BOUND slot exactly, extends FREE variables, and compacts in
+    global row-major order — the unfused formulation the fused kernel and
+    jnp twin must match bit-exactly.  ``overflow`` includes clipped probe
+    ranges (fan-out past ``k_max``) on valid binding rows.
+    """
+    from repro.core.rdf import composite_key
+
+    m, nv = cols.shape
+    anchor = pat.s if anchor_is_s else pat.o
+    if anchor.mode == SlotMode.CONST:
+        aval = jnp.full((m,), jnp.uint32(anchor.const))
+    else:
+        aval = cols[:, anchor.var]
+    qk = composite_key(jnp.uint32(pat.p.const), aval)
+    lo = jnp.searchsorted(keys, qk, side="left")
+    hi = jnp.searchsorted(keys, qk, side="right")
+    idx = lo[:, None] + jnp.arange(k_max, dtype=lo.dtype)
+    ok = idx < hi[:, None]
+    idx_safe = jnp.minimum(idx, keys.shape[0] - 1)
+    gathered = {i: jnp.take(c, idx_safe, axis=0)
+                for i, c in enumerate((vs, vp, vo))}
+    match = ok & bvalid[:, None]
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.CONST:
+            match = match & (gathered[i] == jnp.uint32(slot.const))
+        elif slot.mode == SlotMode.BOUND:
+            match = match & (gathered[i] == cols[:, slot.var][:, None])
+    ext = jnp.broadcast_to(cols[:, None, :], (m, k_max, nv))
+    for i, slot in enumerate((pat.s, pat.p, pat.o)):
+        if slot.mode == SlotMode.FREE:
+            ext = ext.at[..., slot.var].set(gathered[i])
+    rows, valid, overflow = compact_rows(
+        ext.reshape(m * k_max, nv), match.reshape(m * k_max), out_cap)
+    fan = jnp.any(((hi - lo) > k_max) & bvalid)
+    return rows, valid, overflow | fan
+
+
 def join_compact_ref(
     cols, bvalid, ks, kp, ko, kvalid, pat: CompiledPattern, out_cap: int,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:

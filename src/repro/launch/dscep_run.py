@@ -51,7 +51,11 @@ def main(argv=None):
                     help="execution mode: monolithic (no decomposition), "
                          "single_program (whole DAG in one XLA program) or "
                          "pipelined (per-operator steps over device channels)")
-    ap.add_argument("--method", default="scan", choices=["scan", "probe"])
+    ap.add_argument("--method", default="auto",
+                    choices=["scan", "probe", "auto"],
+                    help="KB access: the paper's scan/probe methods, or "
+                         "cost-based per-join selection from used-KB "
+                         "statistics (auto, the default)")
     ap.add_argument("--tweets", type=int, default=96)
     ap.add_argument("--artists", type=int, default=48)
     ap.add_argument("--shows", type=int, default=24)

@@ -19,7 +19,7 @@ import hypothesis.strategies as st
 
 from repro.core import query as Q
 from repro.core.kb import KnowledgeBase, kb_from_triples
-from repro.core.rdf import NUM_BASE, Vocab
+from repro.core.rdf import Vocab
 
 
 class GenWorld:
@@ -70,9 +70,10 @@ def kb_consts(world: GenWorld = WORLD):
 
 
 def num_consts():
-    # fixed-point ids two decimals deep: every id formats/parses exactly
-    return st.builds(lambda k: Q.Const(int(NUM_BASE) + k),
-                     st.integers(0, 999))
+    # fixed-point ids two decimals deep, negative values included (the
+    # NUM_OFFSET zero point): every id formats/parses exactly
+    return st.builds(lambda k: Q.Const(Vocab.number(k / 100.0)),
+                     st.integers(-999, 999))
 
 
 def terms(world: GenWorld = WORLD):
@@ -121,11 +122,17 @@ def filters_subclass(world: GenWorld = WORLD):
     )
 
 
-def filter_leaves():
-    return st.builds(Q.FilterNum, st.sampled_from(_VAR_NAMES),
-                     st.sampled_from(_NUM_OPS),
-                     st.builds(lambda k: int(NUM_BASE) + k,
-                               st.integers(0, 999)))
+def filter_leaves(world: GenWorld = WORLD):
+    # numeric comparisons (negative literals included) and term equality
+    # on IRI ids (=/!= only) — both FilterNum leaves of the boolean grammar
+    numeric = st.builds(Q.FilterNum, st.sampled_from(_VAR_NAMES),
+                        st.sampled_from(_NUM_OPS),
+                        st.builds(lambda k: Vocab.number(k / 100.0),
+                                  st.integers(-999, 999)))
+    term_eq = st.builds(Q.FilterNum, st.sampled_from(_VAR_NAMES),
+                        st.sampled_from(("eq", "ne")),
+                        st.sampled_from(world.entities + world.classes))
+    return st.one_of(numeric, term_eq)
 
 
 # boolean FILTER trees: st.deferred breaks the self-reference, st.recursive

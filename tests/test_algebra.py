@@ -84,6 +84,27 @@ def test_filters():
     assert rows_of(algebra.filter_bound(nb, 1)) == []
 
 
+def test_filter_negative_literals_order_isomorphic():
+    n_neg, n_pos = Vocab.number(-5.0), Vocab.number(2.0)
+    assert n_neg < Vocab.number(-4.99) < Vocab.number(0.0) < n_pos
+    b = mk_bindings([(A, n_neg), (B, n_pos)], 2)
+    gt = algebra.filter_num(b, var=1, op="gt", value_id=Vocab.number(-10.0))
+    assert rows_of(gt) == sorted([(A, n_neg), (B, n_pos)])
+    lt = algebra.filter_num(b, var=1, op="lt", value_id=Vocab.number(0.0))
+    assert rows_of(lt) == [(A, n_neg)]
+
+
+def test_filter_term_equality():
+    """=/!= on IRI/string ids: exact id equality, unbound is an error
+    (dropped for both operators), numerics are just different terms."""
+    n1 = Vocab.number(1.0)
+    b = mk_bindings([(A, B), (C, D), (A, 0), (A, n1)], 2, cap=8)
+    eq = algebra.filter_num(b, var=1, op="eq", value_id=B)
+    assert rows_of(eq) == [(A, B)]
+    ne = algebra.filter_num(b, var=1, op="ne", value_id=B)
+    assert rows_of(ne) == sorted([(C, D), (A, n1)])   # unbound row dropped
+
+
 def test_project_and_distinct():
     b = mk_bindings([(A, B), (A, C), (A, B)], 2, cap=4)
     p = algebra.project(b, keep=(0,))

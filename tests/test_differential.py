@@ -208,9 +208,15 @@ def _eval_filter(e, b) -> Optional[bool]:
     """SPARQL three-valued logic: True / False / None (= error)."""
     if isinstance(e, Q.FilterNum):
         v = b.get(e.var, 0)
+        t = e.value_id
+        if t < int(NUM_BASE):
+            # term equality on an IRI/string id: unbound is an error,
+            # everything else compares ids exactly (no numeric coercion)
+            if v == 0:
+                return None
+            return v == t if e.op == "eq" else v != t
         if v < int(NUM_BASE):
             return None
-        t = e.value_id
         return {"lt": v < t, "le": v <= t, "gt": v > t, "ge": v >= t,
                 "eq": v == t, "ne": v != t}[e.op]
     vals = [_eval_filter(a, b) for a in e.args]
@@ -418,11 +424,16 @@ def exec_queries(draw, world: DiffWorld = DW):
         where.append(Q.PathKB(Q.Var("e"), (world.link, world.link),
                               Q.Var("x")))
 
-    f_kind = draw(st.sampled_from(("none", "num", "bool")))
+    f_kind = draw(st.sampled_from(("none", "num", "bool", "term")))
     thresh = int(NUM_BASE) + draw(st.integers(0, 299))
     if f_kind == "num":
         where.append(Q.FilterNum("s", draw(st.sampled_from(
             ("lt", "le", "gt", "ge"))), thresh))
+    elif f_kind == "term":
+        # term equality on an IRI id (satellite: FILTER =/!= on non-numerics)
+        where.append(Q.FilterNum(
+            "e", draw(st.sampled_from(("eq", "ne"))),
+            draw(st.sampled_from(world.entities))))
     elif f_kind == "bool":
         lo = int(NUM_BASE) + draw(st.integers(0, 150))
         where.append(Q.FilterBool("or", (
@@ -498,13 +509,19 @@ def test_engine_matches_python_oracle(q, seed):
 
 @settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
           derandomize=True)
-@given(q=exec_queries(), seed=st.integers(0, 2**16))
-def test_modes_bit_identical_on_generated_queries(q, seed):
+@given(q=exec_queries(), seed=st.integers(0, 2**16),
+       method=st.sampled_from(("scan", "auto")))
+def test_modes_bit_identical_on_generated_queries(q, seed, method):
+    """Cross-mode bit-identity, under both the scan baseline and the
+    cost-based access planner (kb_method="auto" profiles each mode's own
+    used-KB slices, so monolithic and decomposed plans may pick different
+    per-join methods/orders — the published streams must not care)."""
     _, chunks = _chunks_for(seed)
     try:
         outs, ovfs = {}, {}
         for mode in MODES:
-            sess = Session(CFG.replace(mode=mode), vocab=DW.vocab, kb=DW.kb)
+            sess = Session(CFG.replace(mode=mode, kb_method=method),
+                           vocab=DW.vocab, kb=DW.kb)
             outs[mode], ovfs[mode] = sess.register(q).run(chunks)
         for mode in MODES:
             assert not any(ovfs[mode].values()), (mode, ovfs[mode])
@@ -515,7 +532,33 @@ def test_modes_bit_identical_on_generated_queries(q, seed):
                         mode, i, col)
         assert ovfs["single_program"] == ovfs["pipelined"]
     except AssertionError:
-        _dump_failure("cross_mode", "seed=%d\nquery=%r" % (seed, q))
+        _dump_failure("cross_mode", "seed=%d method=%s\nquery=%r"
+                      % (seed, method, q))
+        raise
+
+
+@settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
+          derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16))
+def test_kb_methods_bit_identical_on_generated_queries(q, seed):
+    """scan vs probe vs auto on the same generated query + stream: the
+    access method (and auto's join reordering) is an execution detail —
+    published streams must agree bit-exactly with zero overflow."""
+    _, chunks = _chunks_for(seed)
+    try:
+        outs = {}
+        for method in ("scan", "probe", "auto"):
+            sess = Session(CFG.replace(mode="monolithic", kb_method=method),
+                           vocab=DW.vocab, kb=DW.kb)
+            outs[method], ovf = sess.register(q).run(chunks)
+            assert not any(ovf.values()), (method, ovf)
+        for method in ("probe", "auto"):
+            for i, (a, b) in enumerate(zip(outs["scan"], outs[method])):
+                for col, ca, cb in zip(a._fields, a, b):
+                    assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                        method, i, col)
+    except AssertionError:
+        _dump_failure("kb_method", "seed=%d\nquery=%r" % (seed, q))
         raise
 
 

@@ -13,9 +13,16 @@ from repro.data.tweets import (
 
 def test_presets_registered():
     names = set(dscep.deployments())
-    assert {"paper-eval", "paper-eval-subquery", "smoke", "monolithic"} <= names
+    assert {"paper-eval", "paper-eval-subquery", "paper-eval-auto",
+            "smoke", "monolithic"} <= names
     assert dscep.get_deployment("paper-eval").runtime.window_capacity == 1000
     assert dscep.get_deployment("paper-eval-subquery").runtime.kb_method == "probe"
+    # the paper's two measured methods stay pinned as baselines; every
+    # non-baseline preset deploys the cost-based access planner
+    assert dscep.get_deployment("paper-eval").runtime.kb_method == "scan"
+    assert dscep.get_deployment("paper-eval-auto").runtime.kb_method == "auto"
+    assert dscep.get_deployment("smoke").runtime.kb_method == "auto"
+    assert dscep.get_deployment("pipelined").runtime.kb_method == "auto"
     assert not dscep.get_deployment("monolithic").decomposed
 
 

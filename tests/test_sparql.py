@@ -187,6 +187,81 @@ def test_numeric_literals_round_trip_fixed_point(vw):
     assert parse_query(serialize_query(q, vocab), vocab) == q
 
 
+def test_negative_literals_round_trip(vw):
+    """``FILTER(?v > -5)`` and negative stream-pattern objects (ROADMAP
+    frontend next-step): parsed through the NUM_OFFSET fixed-point zero
+    point and re-serialized exactly."""
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY negq AS
+    PREFIX s: <urn:x>
+    CONSTRUCT { ?a s:out ?v . }
+    WHERE {
+      ?a s:speed ?v .
+      ?a s:delta -3.25 .
+      FILTER(?v > -5 && !(?v <= -19.75))
+    }
+    """
+    q = parse_query(text, vocab)
+    pat = [it for it in q.where if isinstance(it, Q.Pattern)][1]
+    assert pat.o.id == Vocab.number(-3.25)
+    flt = [it for it in q.where if isinstance(it, Q.FilterBool)][0]
+    leaves = {(f.op, f.value_id) for f in (flt.args[0], flt.args[1].args[0])}
+    assert leaves == {("gt", Vocab.number(-5.0)),
+                      ("le", Vocab.number(-19.75))}
+    assert Vocab.decode_number(Vocab.number(-5.0)) == -5.0
+    assert parse_query(serialize_query(q, vocab), vocab) == q
+
+
+def test_negative_range_rejected(vw):
+    vocab, _, _ = vw
+    _expect_error("""
+    PREFIX p: <urn:p>
+    CONSTRUCT { ?a p:out ?b . }
+    FROM STREAM <s> [RANGE TRIPLES -5]
+    WHERE { ?a p:x ?b . }
+    """, vocab, r"RANGE TRIPLES takes a positive integer")
+
+
+def test_term_equality_filter_round_trip(vw):
+    """``FILTER(?c = dbo:MusicalArtist)`` — term equality on IRI ids
+    (second ROADMAP frontend next-step), lowered onto the same FilterNum
+    leaf/mask machinery and serialized back as the prefixed name."""
+    vocab, _, _ = vw
+    text = """
+    REGISTER QUERY termq AS
+    PREFIX p: <urn:p>
+    PREFIX dbo: <http://dbpedia.org/ontology/>
+    CONSTRUCT { ?a p:out ?c . }
+    WHERE {
+      ?a p:type ?c .
+      FILTER(?c = dbo:MusicalArtist || ?c != dbo:Band)
+    }
+    """
+    q = parse_query(text, vocab)
+    flt = [it for it in q.where if isinstance(it, Q.FilterBool)][0]
+    assert flt.args[0] == Q.FilterNum(
+        "c", "eq", vocab.term("dbo:MusicalArtist"))
+    assert flt.args[1] == Q.FilterNum("c", "ne", vocab.term("dbo:Band"))
+    round_trip = serialize_query(q, vocab)
+    assert "?c = dbo:MusicalArtist" in round_trip
+    assert parse_query(round_trip, vocab) == q
+
+
+def test_term_ordering_comparison_rejected(vw):
+    vocab, _, _ = vw
+    vocab.term("dbo:Band")
+    _expect_error("""
+    PREFIX p: <urn:p>
+    PREFIX dbo: <http://dbpedia.org/ontology/>
+    CONSTRUCT { ?a p:out ?c . }
+    WHERE {
+      ?a p:type ?c .
+      FILTER(?c >= dbo:Band)
+    }
+    """, vocab, r"IRIs and strings only support = and !=")
+
+
 def test_single_hop_path_vs_plain_kb_pattern(vw):
     """`?x (p) ?y` in GRAPH <kb> is a length-1 PathKB; `?x p ?y` is a plain
     KB pattern — both round-trip distinctly."""
