@@ -475,3 +475,105 @@ def construct(
         s=out[:, 0], p=out[:, 1], o=out[:, 2], ts=out[:, 3], graph=out[:, 4],
         valid=valid,
     ), overflow
+
+
+# --------------------------------------------------------------------------
+# incremental (delta) evaluation — slide-span tracking
+# --------------------------------------------------------------------------
+#
+# Sliding count windows overlap on whole slides (window w = slides
+# w..w+R-1, see core/window.py), and every plan step the planner emits for
+# a window-alignable query is *monotone* in the stream triples it consumes:
+# a joined binding row exists in window w iff all its contributing stream
+# triples do.  So instead of re-running the join chain per window, the
+# engine can evaluate the merged chunk ONCE, tracking for every binding row
+# the interval [min_slide, max_slide] of contributing slides, and then
+# select window w's rows with an interval test — the insert half of a
+# classic delta evaluation.  The retract half is just as cheap: spans only
+# grow under joins, so any row whose span already exceeds R-1 slides can
+# never again belong to a window and is retracted eagerly
+# (``delta_retract``), and per-window retraction of expired rows is the
+# ``min_slide >= w`` side of the membership test (``delta_window_mask``).
+#
+# The interval rides in two extra uint32 columns appended after the
+# ``num_vars`` variable columns, encoded so that the elementwise
+# ``jnp.maximum`` merge ``join`` already performs combines spans correctly:
+#
+#   col nv     = max_slide + 1                  ("enc_max"; 0 = no triples)
+#   col nv + 1 = SPAN_ENC_K - (min_slide + 1)   ("enc_min" complement)
+#
+# max of enc_max is the span's max; max of the complement is the span's
+# min.  A row with no stream triples yet (the universe row, or KB-only
+# derivations) has both columns 0 and belongs to every window.  All other
+# operators (kb_join, filters, union, compaction) treat binding columns
+# opaquely, so the span columns flow through the full step vocabulary
+# except OPTIONAL (non-monotone — plans containing it fall back to
+# per-window recompute; see planner.plan_supports_delta).
+
+SPAN_ENC_K = 0xFFFFFFFF
+
+
+def delta_universe(capacity: int, num_vars: int) -> Bindings:
+    """The BGP identity with empty span columns attached."""
+    from .pattern import universe_bindings
+    return universe_bindings(capacity, num_vars + 2)
+
+
+def scan_pattern_delta(
+    stream: TripleBatch, pat: CompiledPattern, num_vars: int, out_cap: int,
+    slide_of_row: jax.Array,
+) -> Bindings:
+    """``scan_pattern`` twin over the whole merged chunk: emits bindings
+    with ``num_vars + 2`` columns, the extra two holding the row's slide as
+    a degenerate span.  Rows the slide packing dropped (``slide_of_row ==
+    -1``) are excluded, matching the window materialization."""
+    cols = {0: stream.s, 1: stream.p, 2: stream.o}
+    m = stream.valid & (slide_of_row >= 0)
+    slots = (pat.s, pat.p, pat.o)
+    for i, slot in enumerate(slots):
+        m = m & _slot_match(slot, cols[i])
+    for i in range(3):
+        for j in range(i + 1, 3):
+            if (
+                slots[i].mode != SlotMode.CONST
+                and slots[j].mode != SlotMode.CONST
+                and slots[i].var == slots[j].var
+            ):
+                m = m & (cols[i] == cols[j])
+
+    n = stream.capacity
+    out = jnp.zeros((n, num_vars + 2), jnp.uint32)
+    for i, slot in enumerate(slots):
+        if slot.mode != SlotMode.CONST:
+            out = out.at[:, slot.var].set(cols[i])
+    enc = (jnp.maximum(slide_of_row, 0) + 1).astype(jnp.uint32)
+    out = out.at[:, num_vars].set(enc)
+    out = out.at[:, num_vars + 1].set(jnp.uint32(SPAN_ENC_K) - enc)
+    rows, valid, overflow = compact_rows(out, m, out_cap)
+    return Bindings(rows, valid, overflow)
+
+
+def delta_retract(bind: Bindings, num_vars: int, max_span: int) -> Bindings:
+    """Eagerly retract rows whose slide span exceeds ``max_span`` slides
+    (0-based: a span of k means max_slide - min_slide == k).  Spans only
+    grow under joins, so such rows can never re-enter any window."""
+    enc_max = bind.cols[:, num_vars]
+    enc_min = bind.cols[:, num_vars + 1]
+    # uint32 wraparound makes this exact: (mx+1) + (K-(mn+1)) - K == mx - mn
+    span = enc_max + enc_min - jnp.uint32(SPAN_ENC_K)
+    keep = (enc_max == 0) | (span <= jnp.uint32(max_span))
+    return bind._replace(valid=bind.valid & keep)
+
+
+def delta_window_mask(
+    bind: Bindings, num_vars: int, window: jax.Array, slides_per_window: int,
+) -> jax.Array:
+    """Validity mask of the rows belonging to window ``window`` (= slides
+    ``window .. window + R - 1``): the row's slide span must sit inside
+    that contiguous range.  Span-free rows (both columns 0) pass."""
+    w = jnp.asarray(window).astype(jnp.uint32)
+    enc_max = bind.cols[:, num_vars]
+    enc_min = bind.cols[:, num_vars + 1]
+    in_w = (enc_max <= w + jnp.uint32(slides_per_window)) \
+        & (jnp.uint32(SPAN_ENC_K) - 1 - enc_min >= w)
+    return bind.valid & in_w

@@ -17,7 +17,7 @@ from . import algebra
 from .kb import KnowledgeBase
 from .pattern import Bindings, CompiledPattern, universe_bindings
 from .rdf import TripleBatch
-from .window import Windows
+from .window import SlideView, Windows
 
 
 # --------------------------------------------------------------------------
@@ -118,6 +118,13 @@ class Plan:
 Env = Dict[str, jax.Array]
 
 
+def plan_out_vars(plan: Plan) -> Tuple[int, ...]:
+    """Columns the CONSTRUCT templates reference (the output signature)."""
+    return tuple(sorted({
+        val for tpl in plan.templates for kind, val in tpl if kind == "var"
+    }))
+
+
 def _apply(
     step: Step, cur: Bindings, window: TripleBatch, kb: Optional[KnowledgeBase],
     env: Env, plan: Plan,
@@ -178,9 +185,7 @@ def run_plan(
     cur = universe_bindings(plan.bind_cap, plan.num_vars)
     for step in plan.steps:
         cur = _apply(step, cur, window, kb, env, plan)
-    out_vars = tuple(sorted({
-        val for tpl in plan.templates for kind, val in tpl if kind == "var"
-    }))
+    out_vars = plan_out_vars(plan)
     emit = cur
     if out_vars:
         # significance by variable *name*: column numbering is plan-local
@@ -215,3 +220,107 @@ def run_plan_windows(
     return jax.vmap(one, in_axes=(0, 0, 0))(
         windows.triples, jnp.arange(w), windows.window_valid
     )
+
+
+# --------------------------------------------------------------------------
+# incremental (delta) execution over slides
+# --------------------------------------------------------------------------
+
+def _apply_delta(
+    step: Step, cur: Bindings, view: SlideView, kb: Optional[KnowledgeBase],
+    env: Env, plan: Plan, max_span: int,
+) -> Bindings:
+    """One plan step over span-tracked bindings (``num_vars + 2`` columns).
+
+    Every step here must be *monotone* (planner.plan_supports_delta gates
+    plans to this vocabulary): stream scans stamp each match with its slide
+    span, joins merge spans via the existing elementwise-max merge, and an
+    eager retract after every stream join drops rows whose span can no
+    longer fit inside any window.  KB joins and filters never look at the
+    extra columns — they treat binding columns opaquely.
+    """
+    if isinstance(step, ScanJoin):
+        b = algebra.scan_pattern_delta(
+            view.stream, step.pat, plan.num_vars, plan.scan_cap,
+            view.slide_of_row,
+        )
+        joined = algebra.join(cur, b, step.shared, plan.bind_cap)
+        return algebra.delta_retract(joined, plan.num_vars, max_span)
+    if isinstance(step, KBJoin):
+        assert kb is not None, "plan %s touches the KB but none attached" % plan.name
+        return algebra.kb_join(
+            cur, kb, step.pat, plan.bind_cap, method=step.method,
+            k_max=step.k_max, use_pallas=step.use_pallas,
+            fuse_compaction=step.fuse_compaction, bm=step.bm, bn=step.bn,
+            interpret=step.interpret,
+        )
+    if isinstance(step, FilterNumStep):
+        return algebra.filter_num(cur, step.var, step.op, step.value_id)
+    if isinstance(step, FilterBoolStep):
+        return algebra.filter_bool(cur, step.expr)
+    if isinstance(step, FilterInStep):
+        return algebra.filter_in(cur, step.var, env[step.set_name])
+    if isinstance(step, UnionSteps):
+        left = cur
+        for s in step.left:
+            left = _apply_delta(s, left, view, kb, env, plan, max_span)
+        right = cur
+        for s in step.right:
+            right = _apply_delta(s, right, view, kb, env, plan, max_span)
+        return algebra.union(left, right, plan.bind_cap)
+    raise TypeError(
+        "step %r is not delta-safe — plan_supports_delta should have routed "
+        "this plan to per-window recompute" % (step,)
+    )
+
+
+def run_plan_slides(
+    plan: Plan, view: SlideView, slides_per_window: int, max_windows: int,
+    kb: Optional[KnowledgeBase], env: Env,
+) -> Tuple[TripleBatch, jax.Array]:
+    """Incremental execution: one chunk-level pass, per-window selection.
+
+    The join chain (the compute hotspot — every KBJoin is O(bind_cap x KB))
+    runs ONCE over the merged stream with slide spans riding along, instead
+    of once per window as in :func:`run_plan_windows`; each window then
+    selects its rows with an O(bind_cap) interval test and runs only the
+    cheap finalize tail (project -> distinct -> canonical_order ->
+    construct).  Because that tail is the same set-to-stream function
+    recompute uses and the selected binding *sets* are equal (monotone
+    steps + exact span intervals), the published output is bit-identical to
+    per-window recompute — the invariant the differential harness pins.
+
+    Returns a ``[W, out_cap]``-leaf TripleBatch plus a ``[W]`` overflow
+    flag.  Note the chunk-level pass shares one scan_cap/bind_cap across
+    the whole chunk where recompute gets them per window; overflow trips
+    earlier here (size caps to the *sum* of window populations), which the
+    flag reports exactly as usual.
+    """
+    r = slides_per_window
+    cur = algebra.delta_universe(plan.bind_cap, plan.num_vars)
+    for step in plan.steps:
+        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1)
+    out_vars = plan_out_vars(plan)
+    assert out_vars, (
+        "plan %s has no output variables — plan_supports_delta should have "
+        "routed it to per-window recompute" % plan.name)
+    sig = tuple(sorted(out_vars, key=lambda c: plan.var_names[c]))
+    chunk_ovf = cur.overflow
+
+    widx = jnp.arange(max_windows)[:, None] + jnp.arange(r)[None, :]  # [W, R]
+    w_ts = jnp.max(jnp.take(view.slide_ts, widx, axis=0), axis=1)
+    w_valid = jnp.any(jnp.take(view.slide_valid, widx, axis=0), axis=1)
+
+    def one(wid, ts, wvalid):
+        memb = algebra.delta_window_mask(cur, plan.num_vars, wid, r)
+        rows = Bindings(cur.cols[:, : plan.num_vars], memb, chunk_ovf)
+        emit = algebra.canonical_order(
+            algebra.distinct(algebra.project(rows, out_vars)), sig)
+        out, c_ovf = algebra.construct(
+            emit, plan.templates, ts, plan.out_cap,
+            wid.astype(jnp.uint32) * plan.bind_cap,
+        )
+        out = out._replace(valid=out.valid & wvalid)
+        return out, chunk_ovf | emit.overflow | c_ovf
+
+    return jax.vmap(one)(jnp.arange(max_windows), w_ts, w_valid)

@@ -18,11 +18,15 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .engine import Plan, run_plan_windows
+from .engine import Plan, run_plan_slides, run_plan_windows
 from .kb import KnowledgeBase, pad_to
+from .planner import plan_supports_delta
 from .rdf import TripleBatch
 from .stream import merge_streams
-from .window import Windows, count_windows
+from .window import (
+    SlideView, Windows, count_slides, count_windows, window_slides,
+    windows_from_slides,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +37,8 @@ class OperatorConfig:
     window_capacity: int = 1000      # paper: "window size is a maximum of 1000 RDF triples"
     max_windows: int = 8             # windows per processed chunk
     out_stream_cap: int = 2048       # published stream chunk capacity
+    window_step: Optional[int] = None  # STEP m slide; None / >= capacity = tumbling
+    incremental: bool = False        # delta evaluation over slides (when plan allows)
 
 
 class SCEPOperator:
@@ -60,8 +66,14 @@ class SCEPOperator:
     ) -> Tuple[TripleBatch, jax.Array]:
         cfg = self.config
         merged = merge_streams(chunks)                       # Aggregator: merge+order
-        windows = count_windows(merged, cfg.window_capacity, cfg.max_windows)
-        out_w, overflow = run_plan_windows(self.plan, windows, kb, env)  # engines
+        if cfg.incremental:
+            view = count_slides(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+            out_w, overflow = self._engine_slides(view, kb, env)
+        else:
+            windows = count_windows(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+            out_w, overflow = run_plan_windows(self.plan, windows, kb, env)  # engines
         return self._publish(out_w), overflow
 
     def process_windows(
@@ -78,6 +90,32 @@ class SCEPOperator:
             self.plan, windows, kb if kb is not None else self.kb,
             env if env is not None else self.env,
         )
+
+    def process_slides(
+        self, view: SlideView, kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None,
+    ) -> Tuple[TripleBatch, jax.Array]:
+        """Slide-aligned engine step for incremental mode: evaluates the
+        chunk once with delta state when the plan is delta-safe, else
+        materializes the overlapping windows and recomputes per window —
+        either way the ``[W, out_cap]`` output is bit-identical."""
+        return self._engine_slides(
+            view, kb if kb is not None else self.kb,
+            env if env is not None else self.env,
+        )
+
+    def _engine_slides(
+        self, view: SlideView, kb: Optional[KnowledgeBase],
+        env: Dict[str, jax.Array],
+    ) -> Tuple[TripleBatch, jax.Array]:
+        cfg = self.config
+        _, r = window_slides(cfg.window_capacity, cfg.window_step)
+        if plan_supports_delta(self.plan):
+            return run_plan_slides(
+                self.plan, view, r, cfg.max_windows, kb, env)
+        windows = windows_from_slides(
+            view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        return run_plan_windows(self.plan, windows, kb, env)
 
     def _publish(self, out_w: TripleBatch) -> TripleBatch:
         """Publisher: flatten [W, cap] window outputs into one ordered chunk."""

@@ -53,7 +53,9 @@ from .runtime import (
     RuntimeConfig, _warn_legacy_constructor, augment_windows, build_operators,
 )
 from .stream import merge_streams
-from .window import Windows, count_windows
+from .window import (
+    SlideView, Windows, count_slides, window_slides, windows_from_slides,
+)
 
 
 def _zeros_windows(num_windows: int, capacity: int) -> Windows:
@@ -143,7 +145,12 @@ class PipelinedRuntime:
         # the aggregator's inbound edges buffer across ticks; upstream
         # operators consume windows the tick they are produced, so they get
         # a direct transfer instead of a pass-through queue.
-        win_example = _zeros_windows(cfg.max_windows, cfg.window_capacity)
+        # physical window width is R * slide_capacity (== window_capacity
+        # when tumbling, rounded up for a non-dividing STEP)
+        slide_cap, slides_per_win = window_slides(
+            cfg.window_capacity, cfg.window_step)
+        win_example = _zeros_windows(
+            cfg.max_windows, slide_cap * slides_per_win)
         up_out_cap = min(cfg.intermediate_cap, cfg.out_cap)
         pub_example = _zeros_publication(cfg.max_windows, up_out_cap)
         self._agg_win_ch: Channel = self._on_device(
@@ -179,18 +186,33 @@ class PipelinedRuntime:
         return jax.device_put(tree, self.placement[op_name])
 
     # -- stage implementations (each traces into its own XLA program) ----------
-    def _windows_impl(self, chunk: TripleBatch) -> Windows:
-        """Source stage: the shared Aggregator front-end (merge + window)."""
+    def _windows_impl(
+        self, chunk: TripleBatch
+    ) -> Tuple[Windows, Optional[SlideView]]:
+        """Source stage: the shared Aggregator front-end (merge + window).
+
+        Also returns the slide view in incremental mode — upstream operator
+        steps delta-evaluate over it while the materialized windows feed the
+        aggregator's window channel unchanged.
+        """
         cfg = self.config
-        return count_windows(
-            merge_streams([chunk]), cfg.window_capacity, cfg.max_windows)
+        merged = merge_streams([chunk])
+        view = count_slides(
+            merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        windows = windows_from_slides(
+            view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        return windows, (view if cfg.incremental else None)
 
     def _op_impl(
-        self, name: str, windows: Windows, kb: Optional[KnowledgeBase],
+        self, name: str, win_or_view, kb: Optional[KnowledgeBase],
         env: Dict[str, jax.Array],
     ) -> Tuple[TripleBatch, jax.Array]:
-        """Enrichment operator step: engine over this tick's windows."""
-        return self.operators[name].process_windows(windows, kb, env)
+        """Enrichment operator step: engine over this tick's windows (or
+        slide view, in incremental mode)."""
+        op = self.operators[name]
+        if isinstance(win_or_view, SlideView):
+            return op.process_slides(win_or_view, kb, env)
+        return op.process_windows(win_or_view, kb, env)
 
     def _sink_impl(
         self, win_ch: Channel, out_chs: Dict[str, Channel],
@@ -226,13 +248,14 @@ class PipelinedRuntime:
                 "channels full (%d chunks in flight); drain() first"
                 % self._in_flight
             )
-        windows = self._win_step(chunk)
+        windows, view = self._win_step(chunk)
         self._agg_win_ch = channel.push_jit(
             self._agg_win_ch, self._on_device(windows, self.final))
         for name in self.upstream:
             op = self.operators[name]
+            payload = view if view is not None else windows
             publication = self._op_step[name](
-                self._on_device(windows, name), op.kb, op.env)
+                self._on_device(payload, name), op.kb, op.env)
             self._out_ch[name] = channel.push_jit(
                 self._out_ch[name], self._on_device(publication, self.final))
         self._in_flight += 1

@@ -396,6 +396,35 @@ def _compile_filter_expr(e: Q.FilterExpr, vt: "_VarTable") -> Tuple:
     return (e.op,) + tuple(_compile_filter_expr(a, vt) for a in e.args)
 
 
+def plan_supports_delta(plan: Plan) -> bool:
+    """Whether incremental (slide-delta) evaluation is valid for ``plan``.
+
+    Delta evaluation (``engine.run_plan_slides``) tracks, per binding row,
+    the span of slides its stream triples came from, and selects each
+    window's rows by an interval test — which is only sound when every step
+    is *monotone* (a derivation exists in a window iff all its contributing
+    triples do): stream scans, KB joins (any method — the PR 5 cost model
+    composes unchanged since the span columns ride outside the variable
+    columns), filters, and UNION.  OPTIONAL is non-monotone (a binding's
+    extension depends on what else is in the window), and a plan without
+    output variables skips the pre-CONSTRUCT distinct, making row
+    multiplicity observable; both fall back to per-window recompute.
+    """
+    def steps_ok(steps: Sequence[Step]) -> bool:
+        for s in steps:
+            if isinstance(s, UnionSteps):
+                if not (steps_ok(s.left) and steps_ok(s.right)):
+                    return False
+            elif not isinstance(s, (ScanJoin, KBJoin, FilterNumStep,
+                                    FilterBoolStep, FilterInStep)):
+                return False
+        return True
+
+    has_out = any(
+        kind == "var" for tpl in plan.templates for kind, _ in tpl)
+    return has_out and steps_ok(plan.steps)
+
+
 def compile_query(
     q: Q.Query,
     kb_method: str = "scan",

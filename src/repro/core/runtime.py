@@ -37,7 +37,7 @@ from .planner import (
 )
 from .rdf import TripleBatch, Vocab, empty_triples
 from .stream import merge_streams
-from .window import Windows, count_windows
+from .window import Windows, count_slides, count_windows, windows_from_slides
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,14 @@ class RuntimeConfig:
     window_capacity: int = 1000
     max_windows: int = 8
     out_stream_cap: int = 2048
+    # sliding count windows: STEP m slide size (None / >= capacity tumbles)
+    window_step: Optional[int] = None
+    # incremental (delta) evaluation: evaluate each chunk once with
+    # slide-span tracking and select per-window results, instead of
+    # re-running the join chain per window.  Bit-identical output; plans
+    # with OPTIONAL (non-monotone) fall back per operator, and a sharding
+    # mesh disables it (windows must be materialized to shard).
+    incremental: bool = False
     # KB-access method: the paper's two measured methods plus cost-based
     # per-join selection — "scan" | "probe" | "auto" ("auto" profiles each
     # operator's used-KB slice at build time, picks probe-with-derived-k_max
@@ -118,6 +126,8 @@ def build_operators(
         window_capacity=config.window_capacity,
         max_windows=config.max_windows,
         out_stream_cap=config.out_stream_cap,
+        window_step=config.window_step,
+        incremental=config.incremental,
     )
     join_bm, join_bn = config.join_block_shapes or (None, None)
     operators: Dict[str, SCEPOperator] = {}
@@ -217,7 +227,18 @@ class DSCEPRuntime:
     ) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
         cfg = self.config
         merged = merge_streams([chunk])
-        windows = count_windows(merged, cfg.window_capacity, cfg.max_windows)
+        view = None
+        if cfg.incremental and self.mesh is None:
+            # delta evaluation needs the slide view; the materialized
+            # windows still feed the aggregator (upstream outputs are
+            # window-aligned batches with no slide structure to delta over)
+            view = count_slides(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+            windows = windows_from_slides(
+                view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        else:
+            windows = count_windows(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
         if self.mesh is not None:
             windows = shard_windows(windows, self.mesh, self.data_axis)
 
@@ -227,9 +248,14 @@ class DSCEPRuntime:
         for name in self.dag.subqueries:
             if name == final:
                 continue
-            out_w, ovf = self.operators[name].process_windows(
-                windows, kbs[name], envs[name]
-            )
+            if view is not None:
+                out_w, ovf = self.operators[name].process_slides(
+                    view, kbs[name], envs[name]
+                )
+            else:
+                out_w, ovf = self.operators[name].process_windows(
+                    windows, kbs[name], envs[name]
+                )
             upstream_out[name] = out_w
             overflow[name] = ovf
 
@@ -309,7 +335,9 @@ class MonolithicRuntime:
         self.operator = SCEPOperator(
             q.name, plan, kb, env,
             OperatorConfig(config.window_capacity, config.max_windows,
-                           config.out_stream_cap),
+                           config.out_stream_cap,
+                           window_step=config.window_step,
+                           incremental=config.incremental),
         )
 
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, jax.Array]:
@@ -335,10 +363,10 @@ def shard_windows(windows: Windows, mesh: Mesh, axis: str = "data") -> Windows:
 
 
 def balance_windows(stream: TripleBatch, num_engines: int, window_capacity: int,
-                    max_windows: int) -> Windows:
+                    max_windows: int, window_step: Optional[int] = None) -> Windows:
     """Straggler-aware packing: windows padded to equal triple counts so every
     engine (device) receives balanced work before sharding."""
-    w = count_windows(stream, window_capacity, max_windows)
+    w = count_windows(stream, window_capacity, max_windows, window_step)
     # count-based packing already equalizes triple counts up to one graph;
     # round window count up to a multiple of the engine count so the shard
     # axis divides evenly.

@@ -60,6 +60,17 @@ class ExecutionConfig:
     window_capacity: int = 1000
     max_windows: int = 8
     out_stream_cap: int = 2048
+    # sliding count windows: slide size in triples (C-SPARQL ``STEP m``).
+    # None or >= window_capacity tumbles; otherwise windows overlap on
+    # ceil(window_capacity / step) consecutive slides (see core/window.py
+    # for the graph-preserving packing and rounding rules)
+    window_step: Optional[int] = None
+    # incremental (delta) evaluation: evaluate each chunk once with
+    # slide-span state carried across slides instead of re-running the join
+    # chain per window — bit-identical output, large speedup at high
+    # overlap.  Per-operator fallback to recompute for non-monotone plans
+    # (OPTIONAL); disabled under a sharding mesh.
+    incremental: bool = False
     kb_method: str = "scan"            # "scan" | "probe" | "auto" (cost-based)
     kb_capacity: Optional[int] = None
     scan_cap: int = 128
@@ -98,6 +109,10 @@ class ExecutionConfig:
             raise ValueError(
                 "pipelined mode distributes via placement=, not mesh= "
                 "(window sharding belongs to single_program mode)")
+        if self.window_step is not None and self.window_step < 1:
+            raise ValueError(
+                "window_step must be >= 1 (triples per slide), got %d"
+                % self.window_step)
 
     def runtime_config(self) -> RuntimeConfig:
         """The engine-level slice of this config (shared by every mode)."""
@@ -105,6 +120,8 @@ class ExecutionConfig:
             window_capacity=self.window_capacity,
             max_windows=self.max_windows,
             out_stream_cap=self.out_stream_cap,
+            window_step=self.window_step,
+            incremental=self.incremental,
             kb_method=self.kb_method,
             kb_capacity=self.kb_capacity,
             scan_cap=self.scan_cap,
@@ -136,11 +153,13 @@ class RegisteredQuery:
         self.info = info
         cfg = session.config
         # per-query window geometry: the registration's RANGE TRIPLES clause
-        # overrides the session-wide default when the config opts in
+        # (and its STEP overlap, or tumbling when STEP is absent) overrides
+        # the session-wide default when the config opts in
         self._range_applied = bool(
             cfg.window_from_query and info is not None and info.window_triples)
         if self._range_applied:
-            cfg = cfg.replace(window_capacity=info.window_triples)
+            cfg = cfg.replace(window_capacity=info.window_triples,
+                              window_step=info.window_step)
         self.config = cfg
         self.mode = cfg.mode
         self.dag: Optional[OperatorDAG] = None
@@ -148,16 +167,20 @@ class RegisteredQuery:
 
     @property
     def window_geometry(self) -> Tuple[int, Optional[int]]:
-        """``(window_triples, window_step)`` this query executes with.
+        """``(window_triples, window_step)`` for this registration.
 
         ``window_triples`` is the effective per-query window capacity.
-        ``window_step`` echoes the registration's STEP clause only when the
-        RANGE clause is actually in effect (``window_from_query=True``);
-        execution is tumbling either way — each window advances by its full
-        extent, so STEP is recorded geometry, not an overlap factor.
+        ``window_step`` is the slide size: the registration's STEP clause
+        whenever the query text carries one (reported even when
+        ``window_from_query=False`` left it without effect), else the
+        session-wide ``ExecutionConfig.window_step``.  A step that is None
+        or >= the capacity means tumbling; smaller steps are real overlap —
+        each window spans ``ceil(window_triples / step)`` slides.
         """
-        return (self.config.window_capacity,
-                self.info.window_step if self._range_applied else None)
+        step = self.config.window_step
+        if self.info is not None and self.info.window_step:
+            step = self.info.window_step
+        return (self.config.window_capacity, step)
 
     # -- construction --------------------------------------------------------
     def _build_runtime(self):

@@ -22,7 +22,9 @@ Supported subset (§4.3's query characteristics, Tables 1-3):
 * ``FROM STREAM <...> [RANGE TRIPLES n STEP m]`` / ``FROM <...>`` dataset
   clauses (parsed into :class:`ParseInfo`; with
   ``ExecutionConfig(window_from_query=True)`` the RANGE clause drives the
-  registered query's own window geometry),
+  registered query's own window geometry, and ``STEP m < n`` is real
+  overlap: windows slide by ``m`` triples over slides the aggregator packs
+  graph-preservingly — see :mod:`repro.core.window`),
 * ``WHERE`` with: stream triple patterns, ``GRAPH <kb> { ... }`` blocks
   (plain KB patterns, fixed-length property paths ``p1/p2/p3`` with
   length <= 3, variable-length closure paths ``p+`` / ``p*`` compiled
@@ -281,14 +283,16 @@ class _Parser:
                     self.expect_word("RANGE")
                     self.expect_word("TRIPLES")
                     n = self.next()
-                    if n.kind != "num" or "." in n.text or "-" in n.text:
+                    if (n.kind != "num" or "." in n.text or "-" in n.text
+                            or int(n.text) < 1):
                         raise self.error(
                             "RANGE TRIPLES takes a positive integer", n)
                     info["window_triples"] = int(n.text)
                     if self.at_word("STEP"):
                         self.next()
                         s = self.next()
-                        if s.kind != "num" or "." in s.text or "-" in s.text:
+                        if (s.kind != "num" or "." in s.text or "-" in s.text
+                                or int(s.text) < 1):
                             raise self.error("STEP takes a positive integer", s)
                         info["window_step"] = int(s.text)
                     self.expect_punct("]")

@@ -20,6 +20,7 @@ import hypothesis.strategies as st
 from repro.core import query as Q
 from repro.core.kb import KnowledgeBase, kb_from_triples
 from repro.core.rdf import Vocab
+from repro.core.session import MODES, ExecutionConfig
 
 
 class GenWorld:
@@ -192,6 +193,36 @@ def select_templates(names, vocab: Vocab):
         Q.ConstructTemplate(Q.RowId(0), Q.Const(vocab.pred("?:" + n)),
                             Q.Var(n))
         for n in names
+    )
+
+
+def step_clauses(capacity: int):
+    """``STEP m`` values for a ``[RANGE TRIPLES capacity STEP m]`` clause.
+
+    Covers every regime the window geometry distinguishes: absent (None ->
+    tumbling), STEP == RANGE (degenerate overlap, must stay bit-exact with
+    tumbling), dividing fractions (50% / 75% overlap) and a ragged
+    non-divisor (effective window capacity rounds up to R * m).
+    """
+    divisors = [capacity, max(1, capacity // 2), max(1, capacity // 4)]
+    ragged = max(1, capacity // 3 + 1)
+    return st.one_of(
+        st.none(),
+        st.sampled_from(sorted(set(divisors + [ragged]))),
+    )
+
+
+def sliding_geometries(capacity: int = 48):
+    """``(window_capacity, window_step)`` pairs for differential runs."""
+    return st.builds(lambda s: (capacity, s), step_clauses(capacity))
+
+
+def incremental_configs(base: ExecutionConfig):
+    """Execution-config variants toggling runtime x incremental: the delta
+    evaluator must be a pure execution detail in every mode."""
+    return st.builds(
+        lambda mode, inc: base.replace(mode=mode, incremental=inc),
+        st.sampled_from(MODES), st.booleans(),
     )
 
 

@@ -39,6 +39,8 @@ from repro.core.rdf import (
 )
 from repro.core.session import ExecutionConfig, MODES, Session
 
+from strategies import incremental_configs, sliding_geometries
+
 N_EXAMPLES = int(os.environ.get("DSCEP_DIFF_EXAMPLES", "6"))
 FAIL_DIR = os.path.join(os.path.dirname(__file__), "..", "diff_failures")
 
@@ -103,28 +105,47 @@ DW = DiffWorld()
 # the pure-Python oracle (no JAX)
 # --------------------------------------------------------------------------
 
-def oracle_windows(rows, capacity: int, max_windows: int):
-    """Greedy graph-preserving packing — mirrors window.count_windows."""
-    rows = sorted(rows, key=lambda r: (r[3], r[4]))     # stable (ts, graph)
+def oracle_windows(rows, capacity: int, max_windows: int,
+                   step: Optional[int] = None):
+    """Greedy graph-preserving packing — mirrors window.count_windows.
+
+    Sliding count windows (``step < capacity``) pack the stream into slides
+    of ``step`` triples with the same graph-preserving greedy rule, and
+    window ``w`` is the concatenation of slides ``w .. w + R - 1`` with
+    ``R = ceil(capacity / step)`` — an independent reimplementation of the
+    slide geometry the engine uses, sliding one python list at a time.
+    """
+    if step is None or step >= capacity:
+        unit_cap, r = capacity, 1
+    else:
+        unit_cap, r = step, -(-capacity // step)
+    max_units = max_windows + r - 1
+    rows = sorted(rows, key=lambda row: (row[3], row[4]))   # stable (ts, graph)
     runs: List[List[tuple]] = []
-    for r in rows:
-        if runs and runs[-1][-1][4] == r[4]:
-            runs[-1].append(r)
+    for row in rows:
+        if runs and runs[-1][-1][4] == row[4]:
+            runs[-1].append(row)
         else:
-            runs.append([r])
-    windows: List[List[tuple]] = [[]]
-    fill, wid = 0, 0
+            runs.append([row])
+    units: List[List[tuple]] = [[]]
+    fill, uid = 0, 0
     for run in runs:
-        size = min(len(run), capacity)
-        if fill + size > capacity:
-            wid += 1
+        size = min(len(run), unit_cap)
+        if fill + size > unit_cap:
+            uid += 1
             fill = size
-            windows.append([])
+            units.append([])
         else:
             fill += size
-        if wid < max_windows:
-            windows[wid].extend(run[:size])
-    return [w for w in windows[:max_windows] if w]
+        if uid < max_units:
+            units[uid].extend(run[:size])
+    units = units[:max_units]
+    units += [[] for _ in range(max_units - len(units))]
+    windows = [
+        sum((units[u] for u in range(w, w + r)), [])
+        for w in range(max_windows)
+    ]
+    return [w for w in windows if w]
 
 
 def _reach_star(edges) -> Dict[int, Set[int]]:
@@ -370,9 +391,10 @@ def oracle_window_result(q: Q.Query, win_rows, kb_rows,
 
 
 def oracle_chunk_result(q, chunk_rows, kb_rows, world,
-                        capacity, max_windows) -> Set[tuple]:
+                        capacity, max_windows,
+                        step: Optional[int] = None) -> Set[tuple]:
     keys: Set[tuple] = set()
-    for win in oracle_windows(chunk_rows, capacity, max_windows):
+    for win in oracle_windows(chunk_rows, capacity, max_windows, step):
         keys |= oracle_window_result(q, win, kb_rows, world)
     return keys
 
@@ -562,6 +584,67 @@ def test_kb_methods_bit_identical_on_generated_queries(q, seed):
         raise
 
 
+@settings(max_examples=N_EXAMPLES, deadline=None, derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16),
+       cfg=incremental_configs(CFG), geom=sliding_geometries())
+def test_sliding_windows_match_python_oracle(q, seed, cfg, geom):
+    """Sliding-window adjudication: any runtime, delta or recompute, must
+    agree with the pure-Python oracle sliding independently over its own
+    greedy slide packing — the tentpole's semantic ground truth."""
+    cap, step = geom
+    host_rows, chunks = _chunks_for(seed)
+    cfg = cfg.replace(window_capacity=cap, window_step=step)
+    sess = Session(cfg, vocab=DW.vocab, kb=DW.kb)
+    reg = sess.register(q)
+    try:
+        for rows, chunk in zip(host_rows, chunks):
+            out, overflow = reg.process_chunk(chunk)
+            assert not any(overflow.values()), (
+                "capacities clipped a sliding-window example", overflow)
+            want = oracle_chunk_result(q, rows, DW.kb_rows, DW, cap,
+                                       CFG.max_windows, step=step)
+            got = engine_chunk_keys(out)
+            assert got == want, {
+                "only_engine": sorted(got - want)[:10],
+                "only_oracle": sorted(want - got)[:10],
+            }
+    except AssertionError:
+        _dump_failure("sliding_oracle",
+                      "seed=%d mode=%s incremental=%r geom=%r\nquery=%r"
+                      % (seed, cfg.mode, cfg.incremental, geom, q))
+        raise
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None, derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16),
+       geom=sliding_geometries())
+def test_incremental_bit_identical_to_recompute_across_modes(q, seed, geom):
+    """Delta-mode acceptance: every runtime with ``incremental=True`` emits
+    the exact bytes of the monolithic full-recompute baseline on generated
+    sliding-window queries, with zero overflow everywhere."""
+    cap, step = geom
+    _, chunks = _chunks_for(seed)
+    base_cfg = CFG.replace(window_capacity=cap, window_step=step)
+    try:
+        sess = Session(base_cfg.replace(mode="monolithic"),
+                       vocab=DW.vocab, kb=DW.kb)
+        base, ovf = sess.register(q).run(chunks)
+        assert not any(ovf.values()), ovf
+        for mode in MODES:
+            sess = Session(base_cfg.replace(mode=mode, incremental=True),
+                           vocab=DW.vocab, kb=DW.kb)
+            outs, ovf = sess.register(q).run(chunks)
+            assert not any(ovf.values()), (mode, ovf)
+            for i, (a, b) in enumerate(zip(base, outs)):
+                for col, ca, cb in zip(a._fields, a, b):
+                    assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                        mode, i, col)
+    except AssertionError:
+        _dump_failure("incremental",
+                      "seed=%d geom=%r\nquery=%r" % (seed, geom, q))
+        raise
+
+
 # --------------------------------------------------------------------------
 # acceptance: closure compiles through the kernel relation (no join chain),
 # and one Session runs two .rq queries with different RANGE windows
@@ -638,5 +721,5 @@ def test_two_rq_with_different_windows_in_one_session():
     for rows, chunk in zip(host_rows, chunks):
         out, _ = sess.queries["win_small"].process_chunk(chunk)
         want = oracle_chunk_result(q_small, rows, DW.kb_rows, DW, 24,
-                                   CFG.max_windows)
+                                   CFG.max_windows, step=8)
         assert engine_chunk_keys(out) == want

@@ -169,6 +169,33 @@ def test_registered_query_text_round_trips(sworld):
     assert parse_query(reg.text, sworld.vocab) == reg.query
 
 
+def test_window_geometry_reports_step_even_without_range_applied(sworld):
+    """A registration carrying ``STEP`` reports it in window_geometry even
+    when window_from_query=False leaves the config capacity in force —
+    the geometry is what the query *declared*, not only what was applied."""
+    reg = sworld.session(CFG).register(PQ.Q15_RQ)       # ... STEP 1]
+    assert reg.window_geometry == (CFG.window_capacity, 1)
+    # window_from_query=True applies both numbers from the clause
+    applied = sworld.session(
+        CFG.replace(window_from_query=True)).register(PQ.Q15_RQ)
+    assert applied.window_geometry == (1000, 1)
+    # a config-level step shows through for STEP-less query text
+    stepped = sworld.session(CFG.replace(window_step=32))
+    q = PQ.q15(sworld.vocab, sworld.tweets, sworld.kbd.schema)
+    assert stepped.register(q).window_geometry == (CFG.window_capacity, 32)
+
+
+def test_text_round_trips_step_without_effect(sworld):
+    """serialize_query(info=) keeps the STEP clause verbatim even when the
+    registration did not apply it (window_from_query=False)."""
+    from repro.core.sparql import parse_query_info
+    reg = sworld.session(CFG).register(PQ.Q15_RQ)
+    assert "[RANGE TRIPLES 1000 STEP 1]" in reg.text
+    q2, info2 = parse_query_info(reg.text, sworld.vocab)
+    assert q2 == reg.query
+    assert (info2.window_triples, info2.window_step) == (1000, 1)
+
+
 # --------------------------------------------------------------------------
 # deprecation shims
 # --------------------------------------------------------------------------

@@ -51,6 +51,67 @@ def test_time_windows_tumbling_and_sliding():
     assert list(counts) == [2, 2, 2]           # overlap duplicates rows
 
 
+def test_sliding_graph_straddling_slide_boundary_whole_in_every_window():
+    # cap 6 STEP 3: graphs of 2 pack one per slide (2+2 > 3), so graph 2
+    # lands in slide 1 and is shared by windows 0 and 1 — whole in both
+    stream = _mk_stream([2, 2, 2])
+    w = count_windows(stream, window_capacity=6, max_windows=4, step=3)
+    g = np.asarray(w.triples.graph)
+    v = np.asarray(w.triples.valid)
+    per_window = [int(((g[i] == 2) & v[i]).sum()) for i in range(4)]
+    # appears in >= 2 overlapping windows, and never partially
+    assert per_window.count(2) >= 2
+    assert all(c in (0, 2) for c in per_window)
+
+
+def test_sliding_oversized_graph_truncated_to_slide_capacity():
+    # a graph bigger than the slide (STEP) truncates to the slide capacity,
+    # and every window containing it sees exactly that truncated prefix
+    stream = _mk_stream([5, 2])
+    w = count_windows(stream, window_capacity=6, max_windows=3, step=3)
+    g = np.asarray(w.triples.graph)
+    v = np.asarray(w.triples.valid)
+    per_window = [int(((g[i] == 1) & v[i]).sum()) for i in range(3)]
+    assert all(c in (0, 3) for c in per_window) and 3 in per_window
+
+
+def test_sliding_empty_slides_invalidate_trailing_windows():
+    # one small graph: only windows overlapping its slide are valid; windows
+    # made purely of empty slides are invalid and carry zero rows
+    stream = _mk_stream([2])
+    w = count_windows(stream, window_capacity=6, max_windows=4, step=3)
+    counts = np.asarray(w.triples.valid).sum(axis=1)
+    assert list(counts) == [2, 0, 0, 0]
+    assert list(np.asarray(w.window_valid)) == [True, False, False, False]
+
+
+@pytest.mark.parametrize("sizes,cap", [([3, 2, 4], 5), ([2, 2, 2, 2], 3),
+                                       ([7], 4), ([1, 6, 2, 1], 6)])
+def test_step_equals_range_bit_exact_tumbling(sizes, cap):
+    # STEP == RANGE is the degenerate 1-slide-per-window geometry; it must
+    # reproduce the tumbling arrays bit for bit, not merely set-equal
+    stream = _mk_stream(sizes)
+    tumble = count_windows(stream, window_capacity=cap, max_windows=4)
+    slide = count_windows(stream, window_capacity=cap, max_windows=4, step=cap)
+    for ca, cb in zip(tumble.triples, slide.triples):
+        assert bool(np.all(np.asarray(ca) == np.asarray(cb)))
+    assert bool(np.all(np.asarray(tumble.window_valid)
+                       == np.asarray(slide.window_valid)))
+
+
+def test_time_windows_jaxpr_size_independent_of_max_windows():
+    # the batched gather rewrite traces one fixed program: growing
+    # max_windows only widens array shapes, it adds no equations
+    import jax
+
+    stream = _mk_stream([1, 1, 1, 1])
+    small = jax.make_jaxpr(
+        lambda s: time_windows(s, 100, 2, 1, 4, 2))(stream)
+    big = jax.make_jaxpr(
+        lambda s: time_windows(s, 100, 2, 1, 4, 16))(stream)
+    assert len(small.jaxpr.eqns) == len(big.jaxpr.eqns)
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     sizes=st.lists(st.integers(min_value=1, max_value=6), min_size=1, max_size=12),
