@@ -79,9 +79,19 @@ def _block(x):
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> Dict[str, float]:
-    """Median/min wall time of ``fn(*args)`` with compile excluded."""
-    for _ in range(warmup):
+    """Median/min wall time of ``fn(*args)`` with compile separated out.
+
+    The warmup calls are *timed* too: the first one is reported as
+    ``compile_s`` (trace + XLA compile + one execution — often orders of
+    magnitude above steady state), so every benchmark records how much
+    one-time cost the steady numbers exclude.
+    """
+    compile_s = 0.0
+    for i in range(warmup):
+        t0 = time.perf_counter()
         _block(fn(*args))
+        if i == 0:
+            compile_s = time.perf_counter() - t0
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -91,6 +101,7 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> Dict[str, f
         "median_s": float(np.median(times)),
         "min_s": float(np.min(times)),
         "mean_s": float(np.mean(times)),
+        "compile_s": float(compile_s),
         "iters": iters,
     }
 

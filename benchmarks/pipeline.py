@@ -47,8 +47,12 @@ ARTIST_CLASSES_RQ_PATH = os.path.join(
 
 
 def _throughput(run_pass, num_chunks: int, iters: int) -> dict:
-    """Median sustained chunks/sec of ``run_pass()`` (compile excluded)."""
+    """Median sustained chunks/sec of ``run_pass()``, with the first
+    (compile-inclusive) pass timed separately as ``compile_s`` so the
+    one-time cost the steady numbers exclude is still on record."""
+    t0 = time.perf_counter()
     jax.block_until_ready(run_pass())          # warmup / compile
+    compile_s = time.perf_counter() - t0
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -59,8 +63,51 @@ def _throughput(run_pass, num_chunks: int, iters: int) -> dict:
         "median_s": med,
         "min_s": float(np.min(times)),
         "chunks_per_s": num_chunks / med,
+        "compile_s": float(compile_s),
         "iters": iters,
     }
+
+
+def _stage_breakdown(world, base, q, chunks, query: str,
+                     passes: int = 2) -> dict:
+    """Per-stage trace of the same workload on *separate* traced sessions.
+
+    Tracing fences every stage boundary (``block_until_ready`` per span), so
+    the headline throughput sessions above stay unfenced and these sessions
+    exist only to answer *where* the time goes.  Two passes: the first is
+    compile-inclusive (reported per span as ``first_s``), the second feeds
+    the steady aggregates.
+    """
+    from repro.obs.report import bottleneck_stage, format_stage_table, to_json
+
+    breakdown = {}
+    for mode in ("monolithic", "single_program", "pipelined"):
+        reg = make_session(world, base.replace(mode=mode, trace=True)).register(q)
+        for _ in range(passes):
+            reg.run(chunks)
+        stats = reg.last_stats
+        prefix = "stage" if mode == "pipelined" else "chunk"
+        breakdown[mode] = {
+            "spans": stats["spans"],
+            "operators": stats["operators"],
+            "channels": stats["channels"],
+            "bottleneck_stage": bottleneck_stage(stats["spans"], prefix=prefix),
+        }
+        if mode == "pipelined":
+            print(format_stage_table(
+                stats["spans"],
+                title="%s pipelined per-stage latency (traced sessions)" % query))
+            print("[bench_pipeline] pipelined bottleneck stage: %s"
+                  % breakdown[mode]["bottleneck_stage"])
+        if mode == "pipelined":
+            # full trace artifact (spans + metrics + channels + explain)
+            trace_payload = to_json(stats, explain=reg.explain())
+            path = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_trace_%s.json" % query)
+            with open(path, "w") as f:
+                json.dump(trace_payload, f, indent=2)
+            print(f"[bench_pipeline] wrote {os.path.normpath(path)}")
+    return breakdown
 
 
 def run(iters: Optional[int] = None, smoke: bool = False,
@@ -177,6 +224,9 @@ def run(iters: Optional[int] = None, smoke: bool = False,
                        ["kb_method", "stream pass (median)", "chunks/s"],
                        rows))
 
+    # -- per-stage breakdown: where does each runtime spend its time? --------
+    stage_breakdown = _stage_breakdown(world, base, q, chunks, query)
+
     payload = {
         "what": "sustained chunks/sec over one stream pass, one Session per "
                 "ExecutionConfig mode: monolithic vs single-program DAG vs "
@@ -195,6 +245,13 @@ def run(iters: Optional[int] = None, smoke: bool = False,
                     "methods bit-identical and overflow-free",
             "bit_exact_across_methods": True,
             "results": kb_access,
+        },
+        "stage_breakdown": {
+            "what": "per-stage span aggregates from separate traced "
+                    "sessions (tracing fences each stage, so the headline "
+                    "throughput above stays unfenced); first_s is the "
+                    "compile-inclusive first pass, steady excludes it",
+            **stage_breakdown,
         },
     }
     name = ("BENCH_pipeline.json" if query == "cquery1"

@@ -30,10 +30,12 @@ from __future__ import annotations
 
 import functools
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.metrics import stat_max
 
 from .kb import KnowledgeBase, gather_matches, probe_range
 from .pattern import Bindings, CompiledPattern, SlotMode, compact_rows
@@ -200,10 +202,32 @@ def kb_join_scan(
     return Bindings(rows, valid, overflow | bind.overflow)
 
 
+def _probe_width_hw(bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern):
+    """Widest probe range (``hi - lo``) over valid binding rows — the number
+    ``k_max`` must dominate for the probe to be lossless.  Used by the fused
+    probe paths, which never materialize ``lo``/``hi`` outside the kernel;
+    only traced when metrics are enabled."""
+    from .kb import probe_view
+
+    ca = bind.capacity
+
+    def anchor_val(slot):
+        if slot.mode == SlotMode.CONST:
+            return jnp.full((ca,), jnp.uint32(slot.const))
+        return bind.cols[:, slot.var]
+
+    sorted_keys, _, anchor, _ = probe_view(kb, pat)
+    keys = composite_key(jnp.uint32(pat.p.const), anchor_val(anchor))
+    lo, hi = probe_range(sorted_keys, keys)
+    width = (hi - lo).astype(jnp.int32)
+    return jnp.max(jnp.where(bind.valid, width, 0))
+
+
 def kb_join_probe(
     bind: Bindings, kb: KnowledgeBase, pat: CompiledPattern, out_cap: int,
     k_max: int = 8, use_pallas: bool = False, fuse_compaction: bool = False,
     bm: Optional[int] = None, interpret: bool = True,
+    stats: Optional[Dict[str, Any]] = None,
 ) -> Bindings:
     """Join bindings against the KB via sorted-index probes.
 
@@ -220,6 +244,8 @@ def kb_join_probe(
     sources (``out_cap`` clipping and probe ranges wider than ``k_max``).
     """
     if use_pallas or fuse_compaction:
+        if stats is not None:
+            stat_max(stats, "hw_probe_k", _probe_width_hw(bind, kb, pat))
         from repro.kernels.hash_join import ops as hj_ops
         if use_pallas:
             return hj_ops.probe_compact(bind, kb, pat, out_cap, k_max,
@@ -240,6 +266,9 @@ def kb_join_probe(
     keys = composite_key(p_const, anchor_val(anchor))
 
     lo, hi = probe_range(sorted_keys, keys)
+    if stats is not None:
+        stat_max(stats, "hw_probe_k",
+                 jnp.max(jnp.where(bind.valid, (hi - lo).astype(jnp.int32), 0)))
     (ms, mp, mo), ok, overflow_rows = gather_matches(cols, lo, hi, k_max)
     kcols = {0: ms, 1: mp, 2: mo}
     m = ok & bind.valid[:, None]
@@ -265,6 +294,7 @@ def kb_join(
     method: str = "scan", k_max: int = 8, use_pallas: bool = False,
     fuse_compaction: bool = False, bm: Optional[int] = None,
     bn: Optional[int] = None, interpret: bool = True,
+    stats: Optional[Dict[str, Any]] = None,
 ) -> Bindings:
     """Dispatch one KB join to its access method.
 
@@ -282,7 +312,7 @@ def kb_join(
         return kb_join_probe(bind, kb, pat, out_cap, k_max,
                              use_pallas=use_pallas,
                              fuse_compaction=fuse_compaction, bm=bm,
-                             interpret=interpret)
+                             interpret=interpret, stats=stats)
     return kb_join_scan(bind, kb, pat, out_cap, use_pallas=use_pallas,
                         fuse_compaction=fuse_compaction, bm=bm, bn=bn,
                         interpret=interpret)

@@ -8,10 +8,12 @@ intra-operator parallel unit the runtime shards across the ``data`` mesh axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.metrics import reduce_stats, stat_add, stat_max
 
 from . import algebra
 from .kb import KnowledgeBase
@@ -117,6 +119,18 @@ class Plan:
 
 Env = Dict[str, jax.Array]
 
+# Optional per-step metrics dict (see repro.obs.metrics).  ``None`` — the
+# default everywhere — means "collect nothing": every instrumentation site
+# below is guarded by a *python-level* ``stats is not None`` branch, so the
+# stats-off traced program is byte-identical to the pre-observability one
+# (pinned by tests/test_obs.py).
+Stats = Optional[Dict[str, jax.Array]]
+
+
+def _occ(b: Bindings) -> jax.Array:
+    """Binding-table occupancy (valid rows) as an int32 scalar."""
+    return jnp.sum(b.valid.astype(jnp.int32))
+
 
 def plan_out_vars(plan: Plan) -> Tuple[int, ...]:
     """Columns the CONSTRUCT templates reference (the output signature)."""
@@ -127,10 +141,12 @@ def plan_out_vars(plan: Plan) -> Tuple[int, ...]:
 
 def _apply(
     step: Step, cur: Bindings, window: TripleBatch, kb: Optional[KnowledgeBase],
-    env: Env, plan: Plan,
+    env: Env, plan: Plan, stats: Stats = None,
 ) -> Bindings:
     if isinstance(step, ScanJoin):
         b = algebra.scan_pattern(window, step.pat, plan.num_vars, plan.scan_cap)
+        if stats is not None:
+            stat_max(stats, "hw_scan", _occ(b))
         return algebra.join(cur, b, step.shared, plan.bind_cap)
     if isinstance(step, KBJoin):
         assert kb is not None, "plan %s touches the KB but none attached" % plan.name
@@ -138,7 +154,7 @@ def _apply(
             cur, kb, step.pat, plan.bind_cap, method=step.method,
             k_max=step.k_max, use_pallas=step.use_pallas,
             fuse_compaction=step.fuse_compaction, bm=step.bm, bn=step.bn,
-            interpret=step.interpret,
+            interpret=step.interpret, stats=stats,
         )
     if isinstance(step, FilterNumStep):
         return algebra.filter_num(cur, step.var, step.op, step.value_id)
@@ -149,15 +165,15 @@ def _apply(
     if isinstance(step, OptionalSteps):
         sub = universe_bindings(plan.bind_cap, plan.num_vars)
         for s in step.sub:
-            sub = _apply(s, sub, window, kb, env, plan)
+            sub = _apply(s, sub, window, kb, env, plan, stats)
         return algebra.optional_join(cur, sub, step.shared, plan.bind_cap)
     if isinstance(step, UnionSteps):
         left = cur
         for s in step.left:
-            left = _apply(s, left, window, kb, env, plan)
+            left = _apply(s, left, window, kb, env, plan, stats)
         right = cur
         for s in step.right:
-            right = _apply(s, right, window, kb, env, plan)
+            right = _apply(s, right, window, kb, env, plan, stats)
         return algebra.union(left, right, plan.bind_cap)
     if isinstance(step, DistinctStep):
         return algebra.distinct(cur)
@@ -168,7 +184,7 @@ def _apply(
 
 def run_plan(
     plan: Plan, window: TripleBatch, kb: Optional[KnowledgeBase], env: Env,
-    graph_base: jax.Array | int = 0,
+    graph_base: jax.Array | int = 0, stats: Stats = None,
 ) -> Tuple[TripleBatch, Bindings, jax.Array]:
     """Execute ``plan`` on one window.
 
@@ -184,7 +200,9 @@ def run_plan(
     """
     cur = universe_bindings(plan.bind_cap, plan.num_vars)
     for step in plan.steps:
-        cur = _apply(step, cur, window, kb, env, plan)
+        cur = _apply(step, cur, window, kb, env, plan, stats)
+        if stats is not None:
+            stat_max(stats, "hw_bind", _occ(cur))
     out_vars = plan_out_vars(plan)
     emit = cur
     if out_vars:
@@ -197,29 +215,47 @@ def run_plan(
     ts = jnp.max(jnp.where(window.valid, window.ts, 0))
     out, c_ovf = algebra.construct(emit, plan.templates, ts, plan.out_cap,
                                    graph_base)
+    if stats is not None:
+        stat_max(stats, "hw_out", jnp.sum(out.valid.astype(jnp.int32)))
     return out, cur, cur.overflow | emit.overflow | c_ovf
 
 
 def run_plan_windows(
-    plan: Plan, windows: Windows, kb: Optional[KnowledgeBase], env: Env
-) -> Tuple[TripleBatch, jax.Array]:
+    plan: Plan, windows: Windows, kb: Optional[KnowledgeBase], env: Env,
+    with_stats: bool = False,
+):
     """vmap the plan over a window batch.
 
     Returns a ``[W, out_cap]``-leaf TripleBatch plus a ``[W]`` overflow flag
     (monitoring hook: a set flag means capacities clipped that window).
+    With ``with_stats`` a third element is returned: a flat dict of chunk
+    scalars (per-window gauges reduced per the hw_/n_ convention, see
+    repro.obs.metrics) — the stats-off call traces the exact same program
+    as before instrumentation.
     """
     w = windows.num_windows
 
     def one(window, wid, wvalid):
+        stats: Stats = {} if with_stats else None
         out, _, ovf = run_plan(
-            plan, window, kb, env, graph_base=wid.astype(jnp.uint32) * plan.bind_cap
+            plan, window, kb, env,
+            graph_base=wid.astype(jnp.uint32) * plan.bind_cap, stats=stats,
         )
         out = out._replace(valid=out.valid & wvalid)
+        if with_stats:
+            return out, ovf, stats
         return out, ovf
 
-    return jax.vmap(one, in_axes=(0, 0, 0))(
+    res = jax.vmap(one, in_axes=(0, 0, 0))(
         windows.triples, jnp.arange(w), windows.window_valid
     )
+    if not with_stats:
+        return res
+    out, ovf, per_window = res
+    stats = reduce_stats(per_window)
+    stat_add(stats, "n_windows",
+             jnp.sum(windows.window_valid.astype(jnp.int32)))
+    return out, ovf, stats
 
 
 # --------------------------------------------------------------------------
@@ -228,7 +264,7 @@ def run_plan_windows(
 
 def _apply_delta(
     step: Step, cur: Bindings, view: SlideView, kb: Optional[KnowledgeBase],
-    env: Env, plan: Plan, max_span: int,
+    env: Env, plan: Plan, max_span: int, stats: Stats = None,
 ) -> Bindings:
     """One plan step over span-tracked bindings (``num_vars + 2`` columns).
 
@@ -244,15 +280,20 @@ def _apply_delta(
             view.stream, step.pat, plan.num_vars, plan.scan_cap,
             view.slide_of_row,
         )
+        if stats is not None:
+            stat_max(stats, "hw_scan", _occ(b))
         joined = algebra.join(cur, b, step.shared, plan.bind_cap)
-        return algebra.delta_retract(joined, plan.num_vars, max_span)
+        retracted = algebra.delta_retract(joined, plan.num_vars, max_span)
+        if stats is not None:
+            stat_add(stats, "n_retract", _occ(joined) - _occ(retracted))
+        return retracted
     if isinstance(step, KBJoin):
         assert kb is not None, "plan %s touches the KB but none attached" % plan.name
         return algebra.kb_join(
             cur, kb, step.pat, plan.bind_cap, method=step.method,
             k_max=step.k_max, use_pallas=step.use_pallas,
             fuse_compaction=step.fuse_compaction, bm=step.bm, bn=step.bn,
-            interpret=step.interpret,
+            interpret=step.interpret, stats=stats,
         )
     if isinstance(step, FilterNumStep):
         return algebra.filter_num(cur, step.var, step.op, step.value_id)
@@ -263,10 +304,10 @@ def _apply_delta(
     if isinstance(step, UnionSteps):
         left = cur
         for s in step.left:
-            left = _apply_delta(s, left, view, kb, env, plan, max_span)
+            left = _apply_delta(s, left, view, kb, env, plan, max_span, stats)
         right = cur
         for s in step.right:
-            right = _apply_delta(s, right, view, kb, env, plan, max_span)
+            right = _apply_delta(s, right, view, kb, env, plan, max_span, stats)
         return algebra.union(left, right, plan.bind_cap)
     raise TypeError(
         "step %r is not delta-safe — plan_supports_delta should have routed "
@@ -276,8 +317,8 @@ def _apply_delta(
 
 def run_plan_slides(
     plan: Plan, view: SlideView, slides_per_window: int, max_windows: int,
-    kb: Optional[KnowledgeBase], env: Env,
-) -> Tuple[TripleBatch, jax.Array]:
+    kb: Optional[KnowledgeBase], env: Env, with_stats: bool = False,
+):
     """Incremental execution: one chunk-level pass, per-window selection.
 
     The join chain (the compute hotspot — every KBJoin is O(bind_cap x KB))
@@ -291,15 +332,20 @@ def run_plan_slides(
     per-window recompute — the invariant the differential harness pins.
 
     Returns a ``[W, out_cap]``-leaf TripleBatch plus a ``[W]`` overflow
-    flag.  Note the chunk-level pass shares one scan_cap/bind_cap across
+    flag (plus a chunk-scalar stats dict when ``with_stats`` — the delta
+    chain runs once per chunk, so its gauges are chunk-level already).
+    Note the chunk-level pass shares one scan_cap/bind_cap across
     the whole chunk where recompute gets them per window; overflow trips
     earlier here (size caps to the *sum* of window populations), which the
     flag reports exactly as usual.
     """
     r = slides_per_window
+    stats: Stats = {} if with_stats else None
     cur = algebra.delta_universe(plan.bind_cap, plan.num_vars)
     for step in plan.steps:
-        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1)
+        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1, stats)
+        if stats is not None:
+            stat_max(stats, "hw_bind", _occ(cur))
     out_vars = plan_out_vars(plan)
     assert out_vars, (
         "plan %s has no output variables — plan_supports_delta should have "
@@ -323,4 +369,11 @@ def run_plan_slides(
         out = out._replace(valid=out.valid & wvalid)
         return out, chunk_ovf | emit.overflow | c_ovf
 
-    return jax.vmap(one)(jnp.arange(max_windows), w_ts, w_valid)
+    res = jax.vmap(one)(jnp.arange(max_windows), w_ts, w_valid)
+    if not with_stats:
+        return res
+    out, ovf = res
+    stat_max(stats, "hw_out",
+             jnp.max(jnp.sum(out.valid.astype(jnp.int32), axis=-1)))
+    stat_add(stats, "n_windows", jnp.sum(w_valid.astype(jnp.int32)))
+    return out, ovf, stats

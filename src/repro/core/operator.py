@@ -58,28 +58,36 @@ class SCEPOperator:
         self.env = dict(env)
         self.config = config if config is not None else OperatorConfig()
         self._step = jax.jit(self._process_impl)
+        self._step_stats = None   # stats-collecting twin, built on first use
 
     # -- the jitted operator step -------------------------------------------
     def _process_impl(
         self, chunks: Tuple[TripleBatch, ...], kb: Optional[KnowledgeBase],
-        env: Dict[str, jax.Array],
-    ) -> Tuple[TripleBatch, jax.Array]:
+        env: Dict[str, jax.Array], with_stats: bool = False,
+    ):
+        # ``with_stats`` is python-static: False (the default everywhere)
+        # traces the exact pre-observability program; True additionally
+        # returns a flat dict of chunk-scalar engine metrics.
         cfg = self.config
         merged = merge_streams(chunks)                       # Aggregator: merge+order
         if cfg.incremental:
             view = count_slides(
                 merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
-            out_w, overflow = self._engine_slides(view, kb, env)
+            res = self._engine_slides(view, kb, env, with_stats)
         else:
             windows = count_windows(
                 merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
-            out_w, overflow = run_plan_windows(self.plan, windows, kb, env)  # engines
+            res = run_plan_windows(self.plan, windows, kb, env, with_stats)  # engines
+        if with_stats:
+            out_w, overflow, stats = res
+            return self._publish(out_w), overflow, stats
+        out_w, overflow = res
         return self._publish(out_w), overflow
 
     def process_windows(
         self, windows: Windows, kb: Optional[KnowledgeBase] = None,
-        env: Optional[Dict[str, jax.Array]] = None,
-    ) -> Tuple[TripleBatch, jax.Array]:
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
         """Window-aligned engine step: ``[W, C]`` in -> ``[W, out_cap]`` out.
 
         Used by the DAG runtime so downstream operators see upstream results
@@ -88,34 +96,34 @@ class SCEPOperator:
         """
         return run_plan_windows(
             self.plan, windows, kb if kb is not None else self.kb,
-            env if env is not None else self.env,
+            env if env is not None else self.env, with_stats,
         )
 
     def process_slides(
         self, view: SlideView, kb: Optional[KnowledgeBase] = None,
-        env: Optional[Dict[str, jax.Array]] = None,
-    ) -> Tuple[TripleBatch, jax.Array]:
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
         """Slide-aligned engine step for incremental mode: evaluates the
         chunk once with delta state when the plan is delta-safe, else
         materializes the overlapping windows and recomputes per window —
         either way the ``[W, out_cap]`` output is bit-identical."""
         return self._engine_slides(
             view, kb if kb is not None else self.kb,
-            env if env is not None else self.env,
+            env if env is not None else self.env, with_stats,
         )
 
     def _engine_slides(
         self, view: SlideView, kb: Optional[KnowledgeBase],
-        env: Dict[str, jax.Array],
-    ) -> Tuple[TripleBatch, jax.Array]:
+        env: Dict[str, jax.Array], with_stats: bool = False,
+    ):
         cfg = self.config
         _, r = window_slides(cfg.window_capacity, cfg.window_step)
         if plan_supports_delta(self.plan):
             return run_plan_slides(
-                self.plan, view, r, cfg.max_windows, kb, env)
+                self.plan, view, r, cfg.max_windows, kb, env, with_stats)
         windows = windows_from_slides(
             view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
-        return run_plan_windows(self.plan, windows, kb, env)
+        return run_plan_windows(self.plan, windows, kb, env, with_stats)
 
     def _publish(self, out_w: TripleBatch) -> TripleBatch:
         """Publisher: flatten [W, cap] window outputs into one ordered chunk."""
@@ -134,3 +142,13 @@ class SCEPOperator:
     def process(self, chunks: Sequence[TripleBatch]) -> Tuple[TripleBatch, jax.Array]:
         """Process one round of input chunks; returns (output chunk, overflow[W])."""
         return self._step(tuple(chunks), self.kb, self.env)
+
+    def process_stats(self, chunks: Sequence[TripleBatch]):
+        """``process`` with engine metrics: returns ``(output chunk,
+        overflow[W], stats)`` where ``stats`` is a flat dict of device
+        scalars (see repro.obs.metrics) — a separate jitted twin, so
+        ``process`` keeps its pre-observability compiled program."""
+        if self._step_stats is None:
+            self._step_stats = jax.jit(
+                functools.partial(self._process_impl, with_stats=True))
+        return self._step_stats(tuple(chunks), self.kb, self.env)

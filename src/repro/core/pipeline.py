@@ -44,6 +44,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import finalize_stats, merge_stats
+from repro.obs.trace import Tracer, span_or_null
+
 from . import channel
 from .channel import Channel
 from .kb import KnowledgeBase
@@ -99,6 +102,7 @@ class PipelinedRuntime:
         data_axis: str = "data",
         placement: Optional[Dict[str, Any]] = None,
         channel_capacity: int = 2,
+        tracer: Optional[Tracer] = None,
     ):
         _warn_legacy_constructor("PipelinedRuntime", "pipelined")
         if channel_capacity < 2:
@@ -179,11 +183,49 @@ class PipelinedRuntime:
         }
         self._last_overflow: Dict[str, jax.Array] = {}
 
+        # --- observability (off by default: the stats-collecting twins are
+        # only *built* — and therefore only compiled — when a metrics tracer
+        # is attached, so the plain steps keep their exact programs)
+        self.tracer = tracer
+        self._collect = bool(tracer is not None and tracer.config.metrics)
+        self._stats_acc: Dict[str, Dict[str, jax.Array]] = {
+            n: {} for n in self.operators
+        }
+        self._op_step_stats = self._sink_step_stats = None
+        if self._collect:
+            self._op_step_stats = {
+                name: jax.jit(
+                    functools.partial(self._op_impl, name, with_stats=True))
+                for name in self.upstream
+            }
+            self._sink_step_stats = jax.jit(
+                functools.partial(self._sink_impl, with_stats=True),
+                donate_argnums=(0, 1))
+        # host-side per-edge schedule counters (pushes/pops happen on the
+        # host driver, so these cost nothing on device)
+        self._edge_stats: Dict[str, Dict[str, int]] = {
+            e: {"pushes": 0, "pops": 0, "depth_hw": 0} for e in self._edges()
+        }
+
+    def _edges(self) -> List[str]:
+        return ["source->%s" % self.final] + [
+            "%s->%s" % (name, self.final) for name in self.upstream
+        ]
+
     # -- placement helpers ----------------------------------------------------
     def _on_device(self, tree, op_name: str):
         if self.placement is None:
             return tree
         return jax.device_put(tree, self.placement[op_name])
+
+    # -- host-side edge accounting (schedule facts, not device state) ----------
+    def _edge_pushed(self, edge: str) -> None:
+        e = self._edge_stats[edge]
+        e["pushes"] += 1
+        e["depth_hw"] = max(e["depth_hw"], e["pushes"] - e["pops"])
+
+    def _edge_popped(self, edge: str) -> None:
+        self._edge_stats[edge]["pops"] += 1
 
     # -- stage implementations (each traces into its own XLA program) ----------
     def _windows_impl(
@@ -205,19 +247,28 @@ class PipelinedRuntime:
 
     def _op_impl(
         self, name: str, win_or_view, kb: Optional[KnowledgeBase],
-        env: Dict[str, jax.Array],
-    ) -> Tuple[TripleBatch, jax.Array]:
+        env: Dict[str, jax.Array], with_stats: bool = False,
+    ):
         """Enrichment operator step: engine over this tick's windows (or
-        slide view, in incremental mode)."""
+        slide view, in incremental mode).  With ``with_stats`` (a separate
+        jitted twin) the publication is returned alongside a flat dict of
+        chunk-scalar engine metrics — the publication pushed onto the
+        channel is unchanged either way."""
         op = self.operators[name]
         if isinstance(win_or_view, SlideView):
-            return op.process_slides(win_or_view, kb, env)
-        return op.process_windows(win_or_view, kb, env)
+            res = op.process_slides(win_or_view, kb, env, with_stats)
+        else:
+            res = op.process_windows(win_or_view, kb, env, with_stats)
+        if with_stats:
+            out_w, ovf, stats = res
+            return (out_w, ovf), stats
+        return res
 
     def _sink_impl(
         self, win_ch: Channel, out_chs: Dict[str, Channel],
         kb: Optional[KnowledgeBase], env: Dict[str, jax.Array],
-    ) -> Tuple[Channel, Dict[str, Channel], TripleBatch, Dict[str, jax.Array]]:
+        with_stats: bool = False,
+    ):
         """Aggregation operator step: pop every inbound edge, join, publish."""
         win_ch, windows, has = channel.pop(win_ch)
         upstream_out: Dict[str, TripleBatch] = {}
@@ -228,10 +279,16 @@ class PipelinedRuntime:
             overflow[name] = ovf & h
         aug = augment_windows(self.dag, windows, upstream_out)
         final_op = self.operators[self.final]
-        out_w, ovf_f = final_op.process_windows(aug, kb, env)
+        res = final_op.process_windows(aug, kb, env, with_stats)
+        if with_stats:
+            out_w, ovf_f, stats = res
+        else:
+            out_w, ovf_f = res
         overflow[self.final] = ovf_f & has
         out = final_op._publish(out_w)
         out = out._replace(valid=out.valid & has)
+        if with_stats:
+            return win_ch, out_chs, out, overflow, stats
         return win_ch, out_chs, out, overflow
 
     # -- host-side async driver -------------------------------------------------
@@ -248,16 +305,28 @@ class PipelinedRuntime:
                 "channels full (%d chunks in flight); drain() first"
                 % self._in_flight
             )
-        windows, view = self._win_step(chunk)
+        tr = self.tracer
+        with span_or_null(tr, "stage:source") as sp:
+            windows, view = self._win_step(chunk)
+            sp.fence(windows)
         self._agg_win_ch = channel.push_jit(
             self._agg_win_ch, self._on_device(windows, self.final))
+        self._edge_pushed("source->%s" % self.final)
         for name in self.upstream:
             op = self.operators[name]
             payload = view if view is not None else windows
-            publication = self._op_step[name](
-                self._on_device(payload, name), op.kb, op.env)
+            with span_or_null(tr, "stage:%s" % name) as sp:
+                if self._collect:
+                    publication, stats = self._op_step_stats[name](
+                        self._on_device(payload, name), op.kb, op.env)
+                    merge_stats(self._stats_acc[name], stats)
+                else:
+                    publication = self._op_step[name](
+                        self._on_device(payload, name), op.kb, op.env)
+                sp.fence(publication)
             self._out_ch[name] = channel.push_jit(
                 self._out_ch[name], self._on_device(publication, self.final))
+            self._edge_pushed("%s->%s" % (name, self.final))
         self._in_flight += 1
 
     def drain(self) -> TripleBatch:
@@ -270,8 +339,18 @@ class PipelinedRuntime:
         if self._in_flight == 0:
             raise RuntimeError("nothing in flight; feed() first")
         final_op = self.operators[self.final]
-        self._agg_win_ch, self._out_ch, out, overflow = self._sink_step(
-            self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
+        with span_or_null(self.tracer, "stage:%s" % self.final) as sp:
+            if self._collect:
+                (self._agg_win_ch, self._out_ch, out, overflow,
+                 stats) = self._sink_step_stats(
+                    self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
+                merge_stats(self._stats_acc[self.final], stats)
+            else:
+                self._agg_win_ch, self._out_ch, out, overflow = self._sink_step(
+                    self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
+            sp.fence(out)
+        for edge in self._edges():
+            self._edge_popped(edge)
         for name, flags in overflow.items():
             self._overflow_acc[name] = (
                 self._overflow_acc[name] + jnp.sum(flags.astype(jnp.int32))
@@ -335,7 +414,13 @@ class PipelinedRuntime:
         return {n: int(v) for n, v in self._overflow_acc.items()}
 
     def channel_stats(self) -> Dict[str, Dict[str, int]]:
-        """Occupancy and dropped-push counters for every edge channel."""
+        """Occupancy, dropped pushes and schedule counters for every edge.
+
+        ``size``/``overflows`` come from device channel state; ``pushes``/
+        ``pops``/``depth_hw`` are host-side schedule facts (the depth
+        high-water says how much pipelining the driver actually achieved
+        against ``capacity``).
+        """
         stats: Dict[str, Dict[str, int]] = {}
 
         def one(edge: str, ch: Channel) -> None:
@@ -343,9 +428,15 @@ class PipelinedRuntime:
                 "capacity": ch.capacity,
                 "size": int(ch.size),
                 "overflows": int(ch.overflows),
+                **self._edge_stats[edge],
             }
 
         one("source->%s" % self.final, self._agg_win_ch)
         for name, ch in self._out_ch.items():
             one("%s->%s" % (name, self.final), ch)
         return stats
+
+    def op_metrics(self) -> Dict[str, Dict[str, int]]:
+        """Finalized per-operator engine metric counters (empty unless the
+        runtime was built with a metrics-collecting tracer)."""
+        return {n: finalize_stats(a) for n, a in self._stats_acc.items() if a}

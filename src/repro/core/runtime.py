@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -27,6 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.obs.metrics import finalize_stats, merge_stats
+from repro.obs.trace import Tracer, span_or_null
 
 from .engine import Plan, run_plan_windows
 from .kb import KnowledgeBase, collect_kb_stats, pad_to
@@ -210,6 +214,7 @@ class DSCEPRuntime:
         config: Optional[RuntimeConfig] = None,
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
+        tracer: Optional[Tracer] = None,
     ):
         _warn_legacy_constructor("DSCEPRuntime", "single_program")
         self.dag = dag
@@ -219,12 +224,24 @@ class DSCEPRuntime:
         self.vocab = vocab
         self.operators = build_operators(dag, kb, config)
         self._jit_chunk = jax.jit(self._dag_impl)
+        self.tracer = tracer
+        self._collect = bool(tracer is not None and tracer.config.metrics)
+        self._jit_chunk_stats = (
+            jax.jit(functools.partial(self._dag_impl, with_stats=True))
+            if self._collect else None)
+        # lifetime device-side accumulators (host syncs only in reports)
+        self._overflow_acc: Dict[str, jax.Array] = {
+            n: jnp.zeros((), jnp.int32) for n in self.operators
+        }
+        self._stats_acc: Dict[str, Dict[str, jax.Array]] = {
+            n: {} for n in self.operators
+        }
 
     # -- the single-program DAG step -----------------------------------------
     def _dag_impl(
         self, chunk: TripleBatch, kbs: Dict[str, Optional[KnowledgeBase]],
-        envs: Dict[str, Dict[str, jax.Array]],
-    ) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
+        envs: Dict[str, Dict[str, jax.Array]], with_stats: bool = False,
+    ):
         cfg = self.config
         merged = merge_streams([chunk])
         view = None
@@ -243,36 +260,59 @@ class DSCEPRuntime:
             windows = shard_windows(windows, self.mesh, self.data_axis)
 
         overflow: Dict[str, jax.Array] = {}
+        stats: Dict[str, Dict[str, jax.Array]] = {}
         final = self.dag.final
         upstream_out: Dict[str, TripleBatch] = {}
         for name in self.dag.subqueries:
             if name == final:
                 continue
             if view is not None:
-                out_w, ovf = self.operators[name].process_slides(
-                    view, kbs[name], envs[name]
+                res = self.operators[name].process_slides(
+                    view, kbs[name], envs[name], with_stats
                 )
             else:
-                out_w, ovf = self.operators[name].process_windows(
-                    windows, kbs[name], envs[name]
+                res = self.operators[name].process_windows(
+                    windows, kbs[name], envs[name], with_stats
                 )
+            if with_stats:
+                out_w, ovf, stats[name] = res
+            else:
+                out_w, ovf = res
             upstream_out[name] = out_w
             overflow[name] = ovf
 
         # window-aligned augmentation for the aggregation operator
         aug_windows = augment_windows(self.dag, windows, upstream_out)
-        out_w, ovf = self.operators[final].process_windows(
-            aug_windows, kbs[final], envs[final]
+        res = self.operators[final].process_windows(
+            aug_windows, kbs[final], envs[final], with_stats
         )
+        if with_stats:
+            out_w, ovf, stats[final] = res
+        else:
+            out_w, ovf = res
         overflow[final] = ovf
-        return self.operators[final]._publish(out_w), overflow
+        out = self.operators[final]._publish(out_w)
+        if with_stats:
+            return out, overflow, stats
+        return out, overflow
 
     # -- orchestration ---------------------------------------------------------
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
         """Push one stream chunk through the DAG; returns (final output, overflow)."""
         kbs = {n: op.kb for n, op in self.operators.items()}
         envs = {n: op.env for n, op in self.operators.items()}
-        return self._jit_chunk(chunk, kbs, envs)
+        with span_or_null(self.tracer, "chunk", mode="single_program") as sp:
+            if self._collect:
+                out, ovf, stats = self._jit_chunk_stats(chunk, kbs, envs)
+                for name, st in stats.items():
+                    merge_stats(self._stats_acc[name], st)
+            else:
+                out, ovf = self._jit_chunk(chunk, kbs, envs)
+            sp.fence(out)
+        for name, flags in ovf.items():
+            self._overflow_acc[name] = (
+                self._overflow_acc[name] + jnp.sum(flags.astype(jnp.int32)))
+        return out, ovf
 
     def process_stream(
         self, chunks: Sequence[TripleBatch]
@@ -297,6 +337,21 @@ class DSCEPRuntime:
                 acc[name] = acc[name] + jnp.sum(flags.astype(jnp.int32))
         return outs, {n: int(v) for n, v in acc.items()}
 
+    # -- observability surfaces (uniform across all three runtimes) ----------
+    def overflow_totals(self) -> Dict[str, int]:
+        """Lifetime overflowed-window counts per operator."""
+        return {n: int(v) for n, v in self._overflow_acc.items()}
+
+    def channel_stats(self) -> Dict[str, Dict[str, int]]:
+        """No inter-operator channels in the single-program mode — the DAG
+        edges are dataflow inside one XLA program."""
+        return {}
+
+    def op_metrics(self) -> Dict[str, Dict[str, int]]:
+        """Finalized per-operator engine metric counters (empty unless the
+        runtime was built with a metrics-collecting tracer)."""
+        return {n: finalize_stats(a) for n, a in self._stats_acc.items() if a}
+
 
 # --------------------------------------------------------------------------
 # monolithic reference runtime (paper's "one C-SPARQL query" baseline)
@@ -310,7 +365,8 @@ class MonolithicRuntime:
     "All results are the same" claim (tested in tests/test_equivalence.py).
     """
 
-    def __init__(self, q, kb: KnowledgeBase, config: Optional[RuntimeConfig] = None):
+    def __init__(self, q, kb: KnowledgeBase, config: Optional[RuntimeConfig] = None,
+                 tracer: Optional[Tracer] = None):
         _warn_legacy_constructor("MonolithicRuntime", "monolithic")
         config = config if config is not None else RuntimeConfig()
         join_bm, join_bn = config.join_block_shapes or (None, None)
@@ -339,9 +395,34 @@ class MonolithicRuntime:
                            window_step=config.window_step,
                            incremental=config.incremental),
         )
+        self.tracer = tracer
+        self._collect = bool(tracer is not None and tracer.config.metrics)
+        self._overflow_acc = jnp.zeros((), jnp.int32)
+        self._stats_acc: Dict[str, jax.Array] = {}
 
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, jax.Array]:
-        return self.operator.process([chunk])
+        op = self.operator
+        with span_or_null(self.tracer, "chunk", mode="monolithic") as sp:
+            if self._collect:
+                out, ovf, stats = op.process_stats([chunk])
+                merge_stats(self._stats_acc, stats)
+            else:
+                out, ovf = op.process([chunk])
+            sp.fence(out)
+        self._overflow_acc = self._overflow_acc + jnp.sum(ovf.astype(jnp.int32))
+        return out, ovf
+
+    # -- observability surfaces (uniform across all three runtimes) ----------
+    def overflow_totals(self) -> Dict[str, int]:
+        return {self.operator.name: int(self._overflow_acc)}
+
+    def channel_stats(self) -> Dict[str, Dict[str, int]]:
+        return {}
+
+    def op_metrics(self) -> Dict[str, Dict[str, int]]:
+        if not self._stats_acc:
+            return {}
+        return {self.operator.name: finalize_stats(self._stats_acc)}
 
 
 # --------------------------------------------------------------------------

@@ -32,10 +32,13 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.report import attach_saturation
+from repro.obs.trace import TraceConfig, Tracer, resolve_trace
+
 from . import query as Q
-from .kb import KnowledgeBase
+from .kb import KnowledgeBase, collect_kb_stats
 from .pipeline import PipelinedRuntime
-from .planner import OperatorDAG, decompose
+from .planner import OperatorDAG, decompose, explain_plan, plan_caps
 from .rdf import TripleBatch, Vocab
 from .runtime import (
     DSCEPRuntime, MonolithicRuntime, RuntimeConfig, _internal_construction,
@@ -96,8 +99,15 @@ class ExecutionConfig:
     # heterogeneous windows (``window_capacity`` stays the default for
     # queries without a RANGE clause)
     window_from_query: bool = False
+    # observability (repro.obs): None/False = off — the runtimes compile the
+    # exact pre-observability programs (pinned by tests/test_obs.py); True =
+    # default TraceConfig (host spans + device-side engine metrics); or an
+    # explicit repro.obs.TraceConfig.  Surfaced via RegisteredQuery.last_stats
+    # and RegisteredQuery.explain().
+    trace: Union[None, bool, TraceConfig] = None
 
     def __post_init__(self):
+        resolve_trace(self.trace)     # validates the field type eagerly
         if self.mode not in MODES:
             raise ValueError(
                 "unknown mode %r (expected one of %s)" % (self.mode, list(MODES)))
@@ -163,6 +173,8 @@ class RegisteredQuery:
         self.config = cfg
         self.mode = cfg.mode
         self.dag: Optional[OperatorDAG] = None
+        tcfg = resolve_trace(cfg.trace)
+        self.tracer: Optional[Tracer] = Tracer(tcfg) if tcfg else None
         self._runtime = self._build_runtime()
 
     @property
@@ -193,11 +205,13 @@ class RegisteredQuery:
                 "Session has no kb= attached" % self.query.name)
         with _internal_construction():
             if self.mode == "monolithic":
-                return MonolithicRuntime(self.query, kb, rcfg)
+                return MonolithicRuntime(self.query, kb, rcfg,
+                                         tracer=self.tracer)
             self.dag = decompose(self.query, vocab)
             if self.mode == "single_program":
                 return DSCEPRuntime(self.dag, kb, vocab, rcfg,
-                                    mesh=cfg.mesh, data_axis=cfg.data_axis)
+                                    mesh=cfg.mesh, data_axis=cfg.data_axis,
+                                    tracer=self.tracer)
             placement = cfg.placement
             if isinstance(placement, str):
                 from repro.launch.mesh import place_operators
@@ -206,7 +220,8 @@ class RegisteredQuery:
                     strategy=cfg.placement)
             return PipelinedRuntime(self.dag, kb, vocab, rcfg,
                                     placement=placement,
-                                    channel_capacity=cfg.channel_capacity)
+                                    channel_capacity=cfg.channel_capacity,
+                                    tracer=self.tracer)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -284,13 +299,72 @@ class RegisteredQuery:
                 rt.drain()
 
     def overflow_totals(self) -> Dict[str, int]:
-        """Lifetime per-operator overflow counts (pipelined mode only keeps
-        device-side accumulators; other modes report via :meth:`run`)."""
-        if self.mode == "pipelined":
-            return self._runtime.overflow_totals()
-        raise NotImplementedError(
-            "lifetime overflow accumulators exist only in pipelined mode; "
-            "use run()'s overflow return value")
+        """Lifetime per-operator overflow counts.  Uniform across all three
+        modes: every runtime keeps device-side accumulators and syncs only
+        when this is read."""
+        return self._runtime.overflow_totals()
+
+    def channel_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-edge channel statistics — populated in pipelined mode (the
+        only mode with materialized inter-operator channels), ``{}``
+        elsewhere, so callers never type-switch on the runtime."""
+        return self._runtime.channel_stats()
+
+    # -- observability --------------------------------------------------------
+    @property
+    def last_stats(self) -> Dict[str, Any]:
+        """The uniform observability surface, identical in shape across all
+        three modes::
+
+            {
+              "query": ..., "mode": ...,
+              "overflow_totals": {op: windows clipped, ...},
+              "channels": {edge: {...}, ...},      # {} outside pipelined
+              "operators": {op: {"counters": ..., "caps": ...,
+                                 "saturation": ...}, ...},
+              "spans": {path: {"count", "first_s", "steady": {...}}, ...},
+            }
+
+        ``operators`` and ``spans`` fill in only when the session ran with
+        ``ExecutionConfig(trace=...)`` enabled; the rest is always live.
+        """
+        ops: Dict[str, Any] = {}
+        for name, counters in self._runtime.op_metrics().items():
+            op = self.operators.get(name)
+            caps = plan_caps(op.plan) if op is not None else {}
+            ops[name] = attach_saturation(counters, caps)
+        return {
+            "query": self.query.name,
+            "mode": self.mode,
+            "overflow_totals": self._runtime.overflow_totals(),
+            "channels": self._runtime.channel_stats(),
+            "operators": ops,
+            "spans": self.tracer.stats() if self.tracer is not None else {},
+        }
+
+    def explain(self) -> Dict[str, Any]:
+        """The planner's decisions for this registration, per operator.
+
+        Recomputes KB statistics for each operator's attached slice (pure
+        host-side introspection over static data — never touches compiled
+        step functions) so the reported estimates are exactly the numbers
+        the ``kb_method="auto"`` cost model would compare.
+        """
+        win_cap, win_step = self.window_geometry
+        operators: Dict[str, Any] = {}
+        for name, op in self.operators.items():
+            stats = collect_kb_stats(op.kb) if op.kb is not None else None
+            entry = explain_plan(op.plan, stats, self.session.vocab)
+            entry["kb_rows"] = stats.total_rows if stats is not None else 0
+            operators[name] = entry
+        return {
+            "query": self.query.name,
+            "mode": self.mode,
+            "kb_method": self.config.kb_method,
+            "incremental": self.config.incremental,
+            "window": {"capacity": win_cap, "step": win_step},
+            "operators": operators,
+        }
 
     def _normalize_overflow(self, ovf) -> Dict[str, int]:
         if isinstance(ovf, dict):

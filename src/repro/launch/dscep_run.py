@@ -78,6 +78,15 @@ def main(argv=None):
     ap.add_argument("--placement", default="round_robin",
                     choices=["round_robin", "single"],
                     help="operator->device placement policy (pipelined only)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the planner EXPLAIN (join order, per-join "
+                         "access method and k_max, estimated fan-out from "
+                         "used-KB statistics) and exit without streaming")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable stage-level tracing + engine metrics; "
+                         "prints per-stage latency and per-operator counter "
+                         "tables after the stream (fences stage boundaries, "
+                         "so throughput numbers include sync overhead)")
     args = ap.parse_args(argv)
     if args.mode == "pipelined" and args.channel_capacity < 2:
         ap.error("--channel-capacity must be >= 2 (double buffering)")
@@ -99,6 +108,7 @@ def main(argv=None):
         interpret=not args.no_interpret,
         placement=args.placement, channel_capacity=args.channel_capacity,
         window_from_query=args.window_from_query,
+        trace=args.trace,
     )
     session = Session(cfg, vocab=vocab, kb=kbd.kb)
     if args.rq:
@@ -107,6 +117,11 @@ def main(argv=None):
     else:
         qname = args.query
         reg = session.register(QUERIES[qname])
+
+    if args.explain:
+        from repro.obs.report import format_explain
+        print(format_explain(reg.explain()))
+        return 0
 
     total_kb = int(np.asarray(kbd.kb.count()))
     win, step = reg.window_geometry
@@ -142,6 +157,7 @@ def main(argv=None):
         for edge, st in reg.runtime.channel_stats().items():
             print(f"    {edge:60s} size={st['size']} "
                   f"dropped={st['overflows']}")
+        _report_trace(reg, args)
         print(f"[dscep] done: {n_out} output triples, {t_total:.2f}s total")
         return n_out
 
@@ -158,9 +174,27 @@ def main(argv=None):
         ovf = sum(overflow.values())
         print(f"[dscep] chunk {i}: {len(res)} output triples "
               f"in {dt * 1e3:.1f} ms, {ovf} overflowed windows{tag}")
+    _report_trace(reg, args)
     print(f"[dscep] done: {n_out} output triples, "
           f"{t_total:.2f}s total")
     return n_out
+
+
+def _report_trace(reg, args):
+    """Print the stage-latency and engine-metric tables for a traced run."""
+    if not args.trace:
+        return
+    from repro.obs.report import (
+        bottleneck_stage, format_metrics_table, format_stage_table,
+    )
+    stats = reg.last_stats
+    if stats["spans"]:
+        print(format_stage_table(stats["spans"]))
+        prefix = "stage" if args.mode == "pipelined" else "chunk"
+        print("[dscep] bottleneck stage: "
+              f"{bottleneck_stage(stats['spans'], prefix=prefix)}")
+    if stats["operators"]:
+        print(format_metrics_table(stats["operators"]))
 
 
 if __name__ == "__main__":

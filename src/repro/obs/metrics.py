@@ -1,0 +1,119 @@
+"""Counters and gauges for quantities the engine computes and discards.
+
+The engine's fixed-capacity design means every step *already* knows the
+numbers an operator would want on a dashboard — how full the binding table
+got versus ``bind_cap``, how wide the widest probe range was versus the
+derived ``k_max``, how many rows an eager retraction killed — and then
+throws them away.  With ``TraceConfig.metrics`` on, the instrumented engine
+paths (``stats=`` in :mod:`repro.core.engine`) emit them as a flat
+``{key: int32 scalar}`` dict per step, and the runtimes fold those dicts
+into **device-resident accumulators** exactly like the existing overflow
+counters: per-chunk merging is a couple of fused scalar ops dispatched
+asynchronously, and the host syncs once when a report is built — enabling
+metrics adds no host round-trips to the steady path.
+
+Key convention (the merge rule is in the name, so accumulators need no
+schema):
+
+* ``hw_*`` — high-water gauges, merged with ``max`` (e.g. ``hw_bind``,
+  ``hw_scan``, ``hw_probe_k``);
+* ``n_*``  — monotone counters, merged with ``+`` (e.g. ``n_windows``,
+  ``n_retract``).
+
+The same convention reduces a vmapped per-window stats dict to chunk
+scalars (:func:`reduce_stats`) and merges chunk scalars into lifetime
+accumulators (:func:`merge_stats`).  :func:`saturation` relates the
+high-water marks to their configured capacities — the number that says
+"this stage is about to clip" before overflow ever fires.
+
+Like :mod:`repro.obs.trace`, this module imports nothing from
+:mod:`repro.core`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# metric catalog: key -> what the value measures (docs/observability.md
+# mirrors this table; report.py uses it for human-readable legends)
+CATALOG: Dict[str, str] = {
+    "hw_bind": "binding-table occupancy high-water (rows, vs bind_cap)",
+    "hw_scan": "pattern-scan result high-water (rows, vs scan_cap)",
+    "hw_out": "pre-publish constructed-output high-water (rows, vs out_cap)",
+    "hw_probe_k": "widest KB probe range encountered (rows, vs k_max)",
+    "n_windows": "windows finalized (valid windows published)",
+    "n_retract": "bindings eagerly retracted by the delta evaluator",
+}
+
+# the capacity each high-water gauge saturates against
+_SATURATES_AGAINST = {
+    "hw_bind": "bind_cap",
+    "hw_scan": "scan_cap",
+    "hw_out": "out_cap",
+    "hw_probe_k": "k_max",
+}
+
+
+def _is_high_water(key: str) -> bool:
+    return key.startswith("hw_")
+
+
+def stat_max(stats: Optional[Dict[str, Any]], key: str, value) -> None:
+    """Raise the high-water gauge ``key`` to at least ``value`` (no-op dict
+    absent — the engine's stats-off path passes ``None``)."""
+    if stats is None:
+        return
+    stats[key] = jnp.maximum(stats[key], value) if key in stats else value
+
+
+def stat_add(stats: Optional[Dict[str, Any]], key: str, value) -> None:
+    """Add ``value`` to the counter ``key``."""
+    if stats is None:
+        return
+    stats[key] = stats[key] + value if key in stats else value
+
+
+def reduce_stats(stats: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Collapse vmapped per-window stats ``[W]`` to chunk scalars (max for
+    ``hw_*``, sum for ``n_*``) — still on device."""
+    return {
+        k: (jnp.max(v) if _is_high_water(k) else jnp.sum(v))
+        for k, v in stats.items()
+    }
+
+
+def merge_stats(acc: Dict[str, jax.Array], stats: Mapping[str, Any]) -> None:
+    """Fold one chunk's stat scalars into a lifetime accumulator dict,
+    in place (device-side when values are device arrays)."""
+    for k, v in stats.items():
+        if k not in acc:
+            acc[k] = v
+        elif _is_high_water(k):
+            acc[k] = jnp.maximum(acc[k], v)
+        else:
+            acc[k] = acc[k] + v
+
+
+def finalize_stats(acc: Mapping[str, Any]) -> Dict[str, int]:
+    """Sync an accumulator dict to plain ints (the one host round-trip)."""
+    return {k: int(np.asarray(v)) for k, v in acc.items()}
+
+
+def saturation(counters: Mapping[str, int],
+               caps: Mapping[str, int]) -> Dict[str, float]:
+    """High-water marks as a fraction of their configured capacity.
+
+    ``caps`` maps capacity names (``bind_cap``, ``scan_cap``, ``out_cap``,
+    ``k_max``) to their values; gauges whose capacity is absent or zero are
+    skipped.  1.0 means the stage ran exactly full — the next row would
+    have tripped overflow.
+    """
+    out: Dict[str, float] = {}
+    for key, value in counters.items():
+        cap_name = _SATURATES_AGAINST.get(key)
+        if cap_name and caps.get(cap_name):
+            out[key] = float(value) / float(caps[cap_name])
+    return out
