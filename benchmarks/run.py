@@ -13,6 +13,10 @@ One benchmark per paper artifact (DESIGN.md §5):
              pipelined dataflow runtime; records to BENCH_pipeline.json
 * roofline — per-(arch x shape x mesh) roofline terms from the dry-run
              artifacts (run ``python -m repro.launch.dryrun`` first)
+* serve    — multi-query serving throughput: queries/sec at 16/64/256
+             registered queries, shared-plan dedup on vs off; records to
+             BENCH_serve.json (not in the default set — run explicitly
+             via ``--only serve``)
 
 ``--only step2,roofline`` selects a subset.
 """
@@ -58,6 +62,9 @@ def main(argv=None) -> int:
             elif name == "roofline":
                 from . import roofline
                 roofline.run()
+            elif name == "serve":
+                from . import serve
+                serve.run(iters=args.iters)
             else:
                 print(f"unknown benchmark {name!r}")
                 failures.append(name)

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import functools
 from functools import partial
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -325,7 +325,23 @@ def kb_join(
 _NUM_OPS = ("lt", "le", "gt", "ge", "eq", "ne")
 
 
-def _num_cmp(bind: Bindings, var: int, op: str, value_id: int):
+class BatchedConst(NamedTuple):
+    """A filter literal whose *value* may be a traced uint32 scalar while its
+    term-vs-numeric classification stays python-static.
+
+    The comparison semantics below branch on ``value_id < NUM_BASE`` at
+    trace time; cohort batching (repro.serve) vmaps one plan over a
+    per-query constant axis, so the value becomes a tracer.  The planner's
+    ``bind_plan_consts`` records the representative's static classification
+    here (it is part of the cohort shape key, so every member agrees), and
+    the traced ops stay identical to the unbatched plan's.
+    """
+
+    val: Any            # python int or traced uint32 scalar
+    is_term: bool       # static: term-equality vs numeric-comparison leaf
+
+
+def _num_cmp(bind: Bindings, var: int, op: str, value_id):
     """Shared comparison leaf: ``(true mask, error mask)``.
 
     Numeric right-hand sides (``value_id >= NUM_BASE``) compare fixed-point
@@ -336,9 +352,13 @@ def _num_cmp(bind: Bindings, var: int, op: str, value_id: int):
     this, so the comparison semantics live in exactly one place.
     """
     assert op in _NUM_OPS, op
+    if isinstance(value_id, BatchedConst):
+        value_id, is_term = value_id.val, value_id.is_term
+    else:
+        is_term = int(value_id) < int(NUM_BASE)
     v = bind.cols[:, var]
     t = jnp.uint32(value_id)
-    if int(value_id) < int(NUM_BASE):
+    if is_term:
         assert op in ("eq", "ne"), (
             "term comparisons support only eq/ne, got %r" % op)
         err = v == jnp.uint32(PAD_ID)

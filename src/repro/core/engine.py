@@ -182,6 +182,49 @@ def _apply(
     raise TypeError("unknown step %r" % (step,))
 
 
+# Public alias: the serving layer (repro.serve.engine) drives step
+# sequences directly — shared KB-join prefixes run once, per-query
+# suffixes fan out — and must trace the exact ops run_plan would.
+apply_step = _apply
+
+
+def run_steps(
+    plan: Plan, cur: Bindings, steps: Sequence[Step], window: TripleBatch,
+    kb: Optional[KnowledgeBase], env: Env, stats: Stats = None,
+) -> Bindings:
+    """Apply a step subsequence (same ops as the run_plan loop, including
+    the per-step hw_bind gauge so stats stay comparable across paths)."""
+    for step in steps:
+        cur = _apply(step, cur, window, kb, env, plan, stats)
+        if stats is not None:
+            stat_max(stats, "hw_bind", _occ(cur))
+    return cur
+
+
+def finalize_bindings(
+    plan: Plan, cur: Bindings, ts: jax.Array,
+    graph_base: jax.Array | int = 0, stats: Stats = None,
+) -> Tuple[TripleBatch, jax.Array]:
+    """The set-to-stream tail of :func:`run_plan`: project onto the
+    CONSTRUCT variables, dedup, canonically order, construct.  Returns
+    (output triples, overflow flag).  Split out so the serving layer's
+    shared-prefix programs finalize each member with exactly these ops."""
+    out_vars = plan_out_vars(plan)
+    emit = cur
+    if out_vars:
+        # significance by variable *name*: column numbering is plan-local
+        # (a decomposed aggregator numbers differently than the monolithic
+        # plan), names are shared
+        sig = tuple(sorted(out_vars, key=lambda c: plan.var_names[c]))
+        emit = algebra.canonical_order(
+            algebra.distinct(algebra.project(cur, out_vars)), sig)
+    out, c_ovf = algebra.construct(emit, plan.templates, ts, plan.out_cap,
+                                   graph_base)
+    if stats is not None:
+        stat_max(stats, "hw_out", jnp.sum(out.valid.astype(jnp.int32)))
+    return out, cur.overflow | emit.overflow | c_ovf
+
+
 def run_plan(
     plan: Plan, window: TripleBatch, kb: Optional[KnowledgeBase], env: Env,
     graph_base: jax.Array | int = 0, stats: Stats = None,
@@ -199,25 +242,10 @@ def run_plan(
     bit-identical for every query, not just the paper's.
     """
     cur = universe_bindings(plan.bind_cap, plan.num_vars)
-    for step in plan.steps:
-        cur = _apply(step, cur, window, kb, env, plan, stats)
-        if stats is not None:
-            stat_max(stats, "hw_bind", _occ(cur))
-    out_vars = plan_out_vars(plan)
-    emit = cur
-    if out_vars:
-        # significance by variable *name*: column numbering is plan-local
-        # (a decomposed aggregator numbers differently than the monolithic
-        # plan), names are shared
-        sig = tuple(sorted(out_vars, key=lambda c: plan.var_names[c]))
-        emit = algebra.canonical_order(
-            algebra.distinct(algebra.project(cur, out_vars)), sig)
+    cur = run_steps(plan, cur, plan.steps, window, kb, env, stats)
     ts = jnp.max(jnp.where(window.valid, window.ts, 0))
-    out, c_ovf = algebra.construct(emit, plan.templates, ts, plan.out_cap,
-                                   graph_base)
-    if stats is not None:
-        stat_max(stats, "hw_out", jnp.sum(out.valid.astype(jnp.int32)))
-    return out, cur, cur.overflow | emit.overflow | c_ovf
+    out, ovf = finalize_bindings(plan, cur, ts, graph_base, stats)
+    return out, cur, ovf
 
 
 def run_plan_windows(

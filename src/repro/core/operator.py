@@ -29,6 +29,23 @@ from .window import (
 )
 
 
+def publish_chunk(out_w: TripleBatch, out_stream_cap: int) -> TripleBatch:
+    """Publisher: flatten ``[W, cap]`` window outputs into one ordered chunk
+    (order-preserving compaction of valid triples to the front).  Module
+    level so the serving layer's batched steps publish with exactly the
+    ops :class:`SCEPOperator` uses — publication is part of the
+    bit-identity contract."""
+    from .pattern import compact_rows
+
+    flat = jax.tree.map(lambda col: col.reshape(-1), out_w)
+    rows = jnp.stack([flat.s, flat.p, flat.o, flat.ts, flat.graph], axis=1)
+    out, valid, _ = compact_rows(rows, flat.valid, out_stream_cap)
+    return TripleBatch(
+        s=out[:, 0], p=out[:, 1], o=out[:, 2], ts=out[:, 3], graph=out[:, 4],
+        valid=valid,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class OperatorConfig:
     """Frozen so a default instance can never become shared mutable state
@@ -127,16 +144,7 @@ class SCEPOperator:
 
     def _publish(self, out_w: TripleBatch) -> TripleBatch:
         """Publisher: flatten [W, cap] window outputs into one ordered chunk."""
-        flat = jax.tree.map(lambda col: col.reshape(-1), out_w)
-        # order-preserving compaction of valid triples to the front
-        from .pattern import compact_rows
-
-        rows = jnp.stack([flat.s, flat.p, flat.o, flat.ts, flat.graph], axis=1)
-        out, valid, _ = compact_rows(rows, flat.valid, self.config.out_stream_cap)
-        return TripleBatch(
-            s=out[:, 0], p=out[:, 1], o=out[:, 2], ts=out[:, 3], graph=out[:, 4],
-            valid=valid,
-        )
+        return publish_chunk(out_w, self.config.out_stream_cap)
 
     # -- public API -----------------------------------------------------------
     def process(self, chunks: Sequence[TripleBatch]) -> Tuple[TripleBatch, jax.Array]:

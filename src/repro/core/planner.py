@@ -32,7 +32,7 @@ from .engine import (
 )
 from .kb import KBStats, KnowledgeBase, host_rows, kb_from_triples, prune
 from .pattern import CompiledPattern, Slot, SlotMode
-from .rdf import CLOSURE_PRED_BASE, PRED_SPACE, Vocab
+from .rdf import CLOSURE_PRED_BASE, NUM_BASE, PRED_SPACE, Vocab
 from .reasoner import (
     adjacency_from_edges, build_class_index, descendants, subclass_edges,
 )
@@ -646,6 +646,202 @@ def compile_query(
 
 
 # --------------------------------------------------------------------------
+# plan sharing: fingerprints, const abstraction, shared prefixes
+# --------------------------------------------------------------------------
+#
+# The serving layer (repro.serve.engine) runs hundreds of compiled plans on
+# one stream and deduplicates shared work at three granularities:
+#
+# * identical plans   — ``plan_fingerprint`` (the plan minus its name):
+#   equal fingerprints on the same (KB, env) produce identical outputs, so
+#   the engine evaluates one representative and fans the result out;
+# * identical shapes  — ``plan_shape`` abstracts every constant (slot
+#   consts, filter literals, CONSTRUCT const ids, closure-set env keys)
+#   into positional markers: plans with equal shapes differ only in a
+#   ``uint32`` vector (``plan_consts``) and their env arrays, so a cohort
+#   of them executes as ONE program ``vmap``-ed over the const axis, with
+#   ``bind_plan_consts`` substituting the traced per-query constants back
+#   into the step dataclasses inside the trace;
+# * identical prefixes — ``shared_prefix_len`` finds the longest common
+#   leading step run of two plans, letting the serving engine evaluate a
+#   common KB-join prefix once and run only the differing suffixes per
+#   query.
+
+def plan_fingerprint(plan: Plan) -> Tuple:
+    """Everything semantically significant about a compiled plan except its
+    name.  Two plans with equal fingerprints, executed against the same KB
+    and env, publish bit-identical output streams — the dedup key of the
+    serving layer."""
+    return (plan.num_vars, plan.var_names, plan.steps, plan.templates,
+            plan.scan_cap, plan.bind_cap, plan.out_cap)
+
+
+def _map_plan_consts(plan: Plan, const_fn, set_fn) -> Plan:
+    """Rebuild ``plan`` with ``const_fn(value, ctx)`` applied to every
+    constant (``ctx`` is ``"slot"``, ``"filter"`` or ``"template"``) and
+    ``set_fn(name)`` to every :class:`FilterInStep` env key.  The one walk
+    order shared by shape/extract/bind, so they can never disagree."""
+
+    def map_slot(sl: Slot) -> Slot:
+        if sl.mode != SlotMode.CONST:
+            return sl
+        return Slot(SlotMode.CONST, const=const_fn(sl.const, "slot"), var=-1)
+
+    def map_pat(cp: CompiledPattern) -> CompiledPattern:
+        return CompiledPattern(map_slot(cp.s), map_slot(cp.p), map_slot(cp.o))
+
+    def map_expr(expr: Tuple) -> Tuple:
+        if expr[0] == "cmp":
+            _, var, op, value_id = expr
+            return ("cmp", var, op, const_fn(value_id, "filter"))
+        if expr[0] == "not":
+            return ("not", map_expr(expr[1]))
+        return (expr[0],) + tuple(map_expr(a) for a in expr[1:])
+
+    def map_step(step: Step) -> Step:
+        if isinstance(step, ScanJoin):
+            return ScanJoin(map_pat(step.pat), step.shared)
+        if isinstance(step, KBJoin):
+            return dataclasses.replace(step, pat=map_pat(step.pat))
+        if isinstance(step, FilterNumStep):
+            return FilterNumStep(step.var, step.op,
+                                 const_fn(step.value_id, "filter"))
+        if isinstance(step, FilterBoolStep):
+            return FilterBoolStep(map_expr(step.expr))
+        if isinstance(step, FilterInStep):
+            return FilterInStep(step.var, set_fn(step.set_name))
+        if isinstance(step, OptionalSteps):
+            return OptionalSteps(tuple(map_step(s) for s in step.sub),
+                                 step.shared)
+        if isinstance(step, UnionSteps):
+            return UnionSteps(tuple(map_step(s) for s in step.left),
+                              tuple(map_step(s) for s in step.right))
+        return step
+
+    def map_tpl(spec: Tuple) -> Tuple:
+        kind, val = spec
+        if kind == "const":
+            return ("const", const_fn(val, "template"))
+        return spec
+
+    return dataclasses.replace(
+        plan,
+        steps=tuple(map_step(s) for s in plan.steps),
+        templates=tuple(
+            tuple(map_tpl(spec) for spec in tpl) for tpl in plan.templates
+        ),
+    )
+
+
+def plan_shape(plan: Plan) -> Plan:
+    """The plan with every constant replaced by a positional marker and
+    every env key by a canonical ``__set%d`` name (the cohort-batching
+    grouping key — a hashable Plan, name cleared).  Filter-literal markers
+    additionally carry the term-vs-numeric classification, which selects
+    comparison *semantics* and so must stay static per cohort."""
+    counter = [0]
+    sets: Dict[str, str] = {}
+
+    def const_fn(value, ctx):
+        i = counter[0]
+        counter[0] += 1
+        if ctx == "filter":
+            return ("c%d" % i, bool(int(value) < int(NUM_BASE)))
+        return "c%d" % i
+
+    def set_fn(name):
+        if name not in sets:
+            sets[name] = "__set%d" % len(sets)
+        return sets[name]
+
+    return dataclasses.replace(
+        _map_plan_consts(plan, const_fn, set_fn), name="")
+
+
+def plan_consts(plan: Plan) -> np.ndarray:
+    """The plan's constants as a ``uint32`` vector, in ``plan_shape``'s walk
+    order — the only thing (besides env arrays) that distinguishes two
+    plans with equal shapes."""
+    vals: List[int] = []
+
+    def const_fn(value, ctx):
+        vals.append(int(value))
+        return value
+
+    _map_plan_consts(plan, const_fn, lambda n: n)
+    return np.asarray(vals, np.uint32)
+
+
+def plan_set_names(plan: Plan) -> Tuple[str, ...]:
+    """FilterInStep env keys in first-appearance walk order — the caller
+    stacks each query's env arrays under ``__set%d`` in this order."""
+    names: List[str] = []
+
+    def set_fn(name):
+        if name not in names:
+            names.append(name)
+        return name
+
+    _map_plan_consts(plan, lambda v, c: v, set_fn)
+    return tuple(names)
+
+
+def bind_plan_consts(plan: Plan, const_vec) -> Plan:
+    """Substitute ``const_vec[i]`` (possibly traced uint32 scalars) for the
+    plan's constants, renaming env keys canonically — the inside-the-trace
+    half of cohort batching: one representative plan, ``vmap``-ed over the
+    per-query const axis.  Filter literals keep their *static* term/numeric
+    classification from the representative (part of the cohort shape), so
+    the traced comparison ops are identical to the unbatched plan's."""
+    from .algebra import BatchedConst
+
+    counter = [0]
+    sets: Dict[str, str] = {}
+
+    def const_fn(value, ctx):
+        i = counter[0]
+        counter[0] += 1
+        traced = const_vec[i]
+        if ctx == "filter":
+            return BatchedConst(traced, bool(int(value) < int(NUM_BASE)))
+        return traced
+
+    def set_fn(name):
+        if name not in sets:
+            sets[name] = "__set%d" % len(sets)
+        return sets[name]
+
+    return _map_plan_consts(plan, const_fn, set_fn)
+
+
+def shared_prefix_len(a: Plan, b: Plan) -> int:
+    """Longest common leading step run of two plans.  Only meaningful for
+    sharing when the plans agree on ``num_vars`` and capacities (equal
+    prefixes then bind exactly the same columns — compilation is
+    deterministic), which the serving engine's grouping enforces."""
+    n = 0
+    for sa, sb in zip(a.steps, b.steps):
+        if sa != sb:
+            break
+        n += 1
+    return n
+
+
+def count_kb_joins(steps: Sequence[Step]) -> int:
+    """KB joins in a step sequence (the expensive work prefix sharing
+    amortizes — used to decide whether a shared prefix is material)."""
+    total = 0
+    for s in steps:
+        if isinstance(s, KBJoin):
+            total += 1
+        elif isinstance(s, OptionalSteps):
+            total += count_kb_joins(s.sub)
+        elif isinstance(s, UnionSteps):
+            total += count_kb_joins(s.left) + count_kb_joins(s.right)
+    return total
+
+
+# --------------------------------------------------------------------------
 # plan EXPLAIN — the cost model's decisions as a reportable artifact
 # --------------------------------------------------------------------------
 
@@ -803,16 +999,30 @@ def prepare_env(
     interpreter vs real-accelerator compilation (the config-plumbed knob).
     Both paths produce the identical sorted id set.
     """
-    import jax.numpy as jnp
-
     env: Dict[str, np.ndarray] = {}
     for item in q.where:
         if isinstance(item, Q.FilterSubclass):
-            edges = subclass_edges(kb, item.subclass_pred)
-            key = "closure:%d" % item.super_class
-            env[key] = jnp.asarray(_closure_set(
-                edges, item.super_class, use_pallas, interpret))
+            key, arr = closure_env_entry(
+                kb, item.subclass_pred, item.super_class, use_pallas,
+                interpret)
+            env[key] = arr
     return env
+
+
+def closure_env_entry(
+    kb: KnowledgeBase, subclass_pred: int, super_class: int,
+    use_pallas: bool = False, interpret: bool = True,
+):
+    """One :func:`prepare_env` entry: ``("closure:<super>", sorted id set)``.
+
+    Factored out so the serving layer can materialize each distinct
+    ``(subclass_pred, super_class)`` closure set ONCE and share the array
+    across every registered query that filters on it."""
+    import jax.numpy as jnp
+
+    edges = subclass_edges(kb, subclass_pred)
+    return "closure:%d" % super_class, jnp.asarray(
+        _closure_set(edges, super_class, use_pallas, interpret))
 
 
 def _closure_set(

@@ -393,13 +393,19 @@ class Session:
         self.queries: Dict[str, RegisteredQuery] = {}
 
     def register(self, query: Union[str, Q.Query],
-                 name: Optional[str] = None) -> RegisteredQuery:
+                 name: Optional[str] = None,
+                 replace: bool = False) -> RegisteredQuery:
         """Register a continuous query: C-SPARQL text or a Query AST.
 
         Text is parsed against the session vocab (``REGISTER QUERY <n> AS``
         names the query; ``name=`` is the fallback).  Returns the
         :class:`RegisteredQuery` handle whose ``run``/``stream`` drive the
         configured execution mode.
+
+        A duplicate query name raises ``ValueError`` showing both
+        serializations (registering twice under one name used to *silently
+        replace* the first runtime, orphaning its handle mid-stream);
+        ``replace=True`` is the explicit escape hatch.
         """
         info: Optional[ParseInfo] = None
         if isinstance(query, str):
@@ -408,9 +414,33 @@ class Session:
             raise TypeError(
                 "register() takes C-SPARQL text or a repro.core.query.Query, "
                 "got %r" % type(query).__name__)
+        existing = self.queries.get(query.name)
+        if existing is not None and not replace:
+            # checked before building the RegisteredQuery — runtime
+            # construction compiles plans, too expensive to throw away
+            prefixes = dict(info.prefixes) if info else None
+            raise ValueError(
+                "query %r is already registered.\n"
+                "existing:\n%s\nnew:\n%s\n"
+                "Pass replace=True to substitute the new registration."
+                % (query.name, existing.text,
+                   serialize_query(query, self.vocab, prefixes, info=info)))
         reg = RegisteredQuery(self, query, info)
         self.queries[query.name] = reg
         return reg
+
+    def unregister(self, name: str) -> None:
+        """Drop a registered query (its handle stays usable but unmanaged)."""
+        del self.queries[name]
+
+    def serve(self, **opts):
+        """A multi-query :class:`~repro.serve.engine.ServeEngine` over this
+        session — register hundreds of queries and process shared chunks
+        with plan-dedup, shared KB-join prefixes and vmap cohort batching
+        (outputs bit-identical to per-query single sessions)."""
+        from repro.serve.engine import ServeEngine
+
+        return ServeEngine(self, **opts)
 
     def register_file(self, path: str,
                       name: Optional[str] = None) -> RegisteredQuery:

@@ -87,6 +87,15 @@ def main(argv=None):
                          "prints per-stage latency and per-operator counter "
                          "tables after the stream (fences stage boundaries, "
                          "so throughput numbers include sync overhead)")
+    ap.add_argument("--serve", type=int, default=0, metavar="N",
+                    help="multi-query serving mode: register N standing "
+                         "queries (paper-query duplicates + filter/class "
+                         "variants) with a ServeEngine and stream every "
+                         "chunk through all of them, reporting queries/sec "
+                         "and the dedup/batching schedule")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="serving mode: disable shared-plan dedup and "
+                         "prefix sharing (the control arm)")
     args = ap.parse_args(argv)
     if args.mode == "pipelined" and args.channel_capacity < 2:
         ap.error("--channel-capacity must be >= 2 (double buffering)")
@@ -111,6 +120,8 @@ def main(argv=None):
         trace=args.trace,
     )
     session = Session(cfg, vocab=vocab, kb=kbd.kb)
+    if args.serve:
+        return _run_serve(session, chunks, args)
     if args.rq:
         reg = session.register_file(args.rq)
         qname = reg.query.name
@@ -177,6 +188,94 @@ def main(argv=None):
     _report_trace(reg, args)
     print(f"[dscep] done: {n_out} output triples, "
           f"{t_total:.2f}s total")
+    return n_out
+
+
+_SERVE_BASE = """\
+REGISTER QUERY %(name)s AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX rdf: <http://www.w3.org/1999/02/22-rdf-syntax-ns#>
+PREFIX rdfs: <http://www.w3.org/2000/01/rdf-schema#>
+PREFIX dbo: <http://dbpedia.org/ontology/>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT { ?tweet out:entityCode ?cc . }
+FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]
+FROM <kb>
+WHERE {
+  ?tweet schema:mentions ?ent .
+  GRAPH <kb> {
+    ?ent rdf:type/rdfs:subClassOf* dbo:%(cls)s .
+    ?ent dbo:birthPlace/dbo:country/dbo:countryCode ?cc .
+  }
+}
+"""
+
+_SERVE_FILT = """\
+REGISTER QUERY %(name)s AS
+PREFIX schema: <urn:dscep:schema>
+PREFIX out: <urn:dscep:out>
+CONSTRUCT { ?tweet out:hot ?ent . }
+FROM STREAM <stream> [RANGE TRIPLES 1000 STEP 1]
+WHERE {
+  ?tweet schema:mentions ?ent .
+  ?tweet schema:likes ?l .
+  FILTER(?l >= %(thresh)s)
+}
+"""
+
+
+def serve_population(n: int):
+    """``n`` standing-query texts exercising all three sharing tiers:
+    exact duplicates (plan dedup), class variants (shared KB-join prefix)
+    and filter-threshold variants (vmap cohort)."""
+    texts = []
+    classes = ("MusicalArtist", "TelevisionShow")
+    for i in range(n):
+        kind = i % 3
+        if kind == 0:       # duplicates of one base query -> dedup
+            texts.append(_SERVE_BASE % {"name": "dup%d" % i,
+                                        "cls": "MusicalArtist"})
+        elif kind == 1:     # alternating classes -> shared KB-join prefix
+            texts.append(_SERVE_BASE % {"name": "cls%d" % i,
+                                        "cls": classes[(i // 3) % 2]})
+        else:               # distinct thresholds -> vmap cohort
+            texts.append(_SERVE_FILT % {"name": "thr%d" % i,
+                                        "thresh": "%.1f" % (1.0 + (i // 3))})
+    return texts
+
+
+def _run_serve(session, chunks, args):
+    eng = session.serve(dedup=not args.no_dedup)
+    texts = serve_population(args.serve)
+    t0 = time.perf_counter()
+    for t in texts:
+        eng.register(t)
+    t_reg = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    outs, overflow = eng.run(chunks)
+    t_run = time.perf_counter() - t0
+    st = eng.last_stats
+    n_out = sum(
+        len(to_host_rows(o)) for per_q in outs.values() for o in per_q)
+    qps = len(texts) * len(chunks) / t_run
+    clipped = sum(overflow.values())
+    print(f"[serve] {len(texts)} standing queries x {len(chunks)} chunks "
+          f"(dedup={'off' if args.no_dedup else 'on'}): "
+          f"registered in {t_reg:.2f}s, streamed in {t_run:.2f}s "
+          f"= {qps:.1f} query-evals/s (includes compile)")
+    print(f"[serve] schedule: {st['distinct_plans']} distinct plans for "
+          f"{st['queries']} queries, shared_plan_hits={st['shared_plan_hits']}, "
+          f"shared_prefix_hits={st['shared_prefix_hits']}, "
+          f"cohort batch sizes={st['batch_sizes']}, "
+          f"singleton operators={st['singletons']}")
+    for pg in st["prefix_groups"]:
+        print(f"    prefix group ({len(pg['queries'])} plans): "
+              f"{pg['prefix_len']} shared steps "
+              f"({pg['kb_joins_shared']} KB joins) -> "
+              f"{', '.join(pg['queries'][:4])}"
+              + ("..." if len(pg["queries"]) > 4 else ""))
+    print(f"[serve] done: {n_out} output triples, "
+          f"{clipped} overflowed windows")
     return n_out
 
 

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.models import lm
-from repro.serve.batcher import ContinuousBatcher, Request
+from repro.serve.lm import ContinuousBatcher, Request
 
 
 def make_slot_fns(cfg, max_len: int):

@@ -85,6 +85,15 @@ def reduce_stats(stats: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:
     }
 
 
+def split_stats(stats: Mapping[str, jax.Array], index: int) -> Dict[str, jax.Array]:
+    """Select one lane of a ``[Q]``-leading-axis stats dict.
+
+    The serving layer's cohort step vmaps one plan over a per-query axis,
+    so every chunk scalar comes back as a ``[Q]`` vector; this slices out
+    query ``index``'s lane for per-query attribution (still on device)."""
+    return {k: v[index] for k, v in stats.items()}
+
+
 def merge_stats(acc: Dict[str, jax.Array], stats: Mapping[str, Any]) -> None:
     """Fold one chunk's stat scalars into a lifetime accumulator dict,
     in place (device-side when values are device arrays)."""

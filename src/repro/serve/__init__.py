@@ -1,1 +1,2 @@
-from . import batcher, engine  # noqa: F401
+"""Serving stack: multi-query SCEP serving (engine/batcher) + LM lanes (lm)."""
+from . import batcher, engine, lm  # noqa: F401

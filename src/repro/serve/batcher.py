@@ -1,63 +1,79 @@
-"""Continuous batcher: slot-based request scheduling for the serving engine.
+"""Admission front-end for the multi-query serving engine.
 
-The TPU engine wants fixed shapes; requests arrive ragged.  The batcher owns
-``num_slots`` decode lanes: arriving requests claim free slots (prefill),
-finished sequences release them, and every engine call decodes all active
-slots in one fixed-shape step — continuous batching à la vLLM/Orca, reduced
-to its SPMD-friendly core.  This is the Aggregator of the LM-serving SCEP
-operator (DESIGN.md §3): window = one decode step across active slots.
+The serving engine wants a bounded standing-query population and steady
+chunk feed; tenants arrive ragged.  :class:`QueryAdmission` owns
+``num_slots`` query slots — the standing-query analogue of the LM decode
+lanes in :class:`repro.serve.lm.ContinuousBatcher`, whose slot lifecycle
+(claim-on-free, retire-on-done, fixed-shape engine tick) it repurposes:
+
+* **query slots** — ``submit`` enqueues a registration request; ``admit``
+  moves queued requests into free slots by registering them with the
+  :class:`~repro.serve.engine.ServeEngine`; ``retire`` unregisters and
+  frees the slot.  A full admission queue rejects (backpressure, counted).
+* **per-tenant chunk queues** — ``offer_chunk`` appends to the tenant's
+  bounded queue and returns ``False`` (plus a rejection counter) when the
+  queue is full, so producers see backpressure instead of unbounded memory.
+* **round-robin ticks** — each ``tick`` drains one chunk from the next
+  non-empty tenant queue through ``engine.process_chunk``, so no tenant can
+  starve the others however fast it produces.
+
+Everything here is host-side bookkeeping; the device work happens inside
+the engine's deduplicated/batched step functions.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # [T] int32
-    max_new: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class QueryRequest:
+    """A standing-query admission request (text or AST, per tenant)."""
+
+    query: Any                     # C-SPARQL text or repro.core.query.Query
+    tenant: str = "default"
+    name: Optional[str] = None     # fallback name for text without REGISTER
 
 
 @dataclasses.dataclass
-class SlotState:
-    request: Optional[Request] = None
-    pos: int = 0                  # next absolute position
+class QuerySlot:
+    request: Optional[QueryRequest] = None
+    name: Optional[str] = None     # registered query name while occupied
 
 
-class ContinuousBatcher:
-    """Host-side slot manager around jitted (prefill_one, decode_all) fns.
+class QueryAdmission:
+    """Slot-based admission + per-tenant chunk queues over a ServeEngine."""
 
-    For simplicity each slot has its own cache pytree entry along dim0 of the
-    batched cache; prefill writes one slot (masked), decode advances all.
-    """
-
-    def __init__(
-        self,
-        num_slots: int,
-        prefill_fn: Callable,        # (params, tokens[1,T], caches, slot) -> (logits, caches)
-        decode_fn: Callable,         # (params, tokens[S,1], caches, pos[S]) -> (logits, caches)
-        eos_id: int = -1,
-    ):
+    def __init__(self, engine, num_slots: int = 64,
+                 queue_cap: int = 256, chunk_queue_cap: int = 8):
+        self.engine = engine
         self.num_slots = num_slots
-        self.slots = [SlotState() for _ in range(num_slots)]
-        self.queue: Deque[Request] = deque()
-        self.prefill_fn = prefill_fn
-        self.decode_fn = decode_fn
-        self.eos_id = eos_id
-        self.completed: List[Request] = []
+        self.slots = [QuerySlot() for _ in range(num_slots)]
+        self.queue: Deque[QueryRequest] = deque()
+        self.queue_cap = queue_cap
+        self.chunk_queue_cap = chunk_queue_cap
+        self.chunk_queues: Dict[str, Deque] = {}
+        self._rr: List[str] = []          # round-robin tenant order
+        self._rr_next = 0
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "admitted": 0, "retired": 0,
+            "rejected_queries": 0, "chunks_offered": 0,
+            "chunks_rejected": 0, "chunks_processed": 0, "ticks": 0,
+        }
 
-    # -- request lifecycle -----------------------------------------------------
-    def submit(self, req: Request):
+    # -- query lifecycle -----------------------------------------------------
+    def submit(self, req: QueryRequest, admit: bool = True) -> bool:
+        """Queue a standing-query registration; ``False`` = queue full."""
+        self.counters["submitted"] += 1
+        if len(self.queue) >= self.queue_cap:
+            self.counters["rejected_queries"] += 1
+            return False
         self.queue.append(req)
+        if admit:
+            self.admit()
+        return True
 
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
@@ -65,52 +81,104 @@ class ContinuousBatcher:
                 return i
         return None
 
-    def _admit(self, params, caches):
+    def admit(self) -> List[str]:
+        """Register queued requests into free slots; returns new names."""
+        admitted: List[str] = []
         while self.queue:
             slot = self._free_slot()
             if slot is None:
-                return caches
+                break
             req = self.queue.popleft()
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, caches = self.prefill_fn(params, tokens, caches, slot)
-            tok = int(jnp.argmax(logits[0]))
-            req.generated.append(tok)
-            self.slots[slot] = SlotState(req, pos=len(req.prompt) + 1)
-        return caches
+            unit = self.engine.register(req.query, name=req.name)
+            self.slots[slot] = QuerySlot(req, name=unit.name)
+            self.counters["admitted"] += 1
+            admitted.append(unit.name)
+        return admitted
 
-    def active(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s.request is not None]
+    def retire(self, name: str) -> None:
+        """Unregister a standing query and free its slot."""
+        for i, s in enumerate(self.slots):
+            if s.name == name:
+                self.engine.unregister(name)
+                self.slots[i] = QuerySlot()
+                self.counters["retired"] += 1
+                self.admit()               # backfill from the queue
+                return
+        raise KeyError("no admitted query named %r" % name)
 
-    # -- one engine tick ---------------------------------------------------------
-    def step(self, params, caches):
-        caches = self._admit(params, caches)
-        act = self.active()
-        if not act:
-            return caches, False
-        tokens = np.zeros((self.num_slots, 1), np.int32)
-        pos = np.zeros((self.num_slots,), np.int32)
-        for i in act:
-            s = self.slots[i]
-            tokens[i, 0] = s.request.generated[-1]
-            pos[i] = s.pos
-        logits, caches = self.decode_fn(
-            params, jnp.asarray(tokens), caches, jnp.asarray(pos)
+    def active(self) -> List[str]:
+        return [s.name for s in self.slots if s.name is not None]
+
+    # -- chunk feed ------------------------------------------------------------
+    def offer_chunk(self, chunk, tenant: str = "default") -> bool:
+        """Bounded per-tenant enqueue; ``False`` = backpressure (counted)."""
+        self.counters["chunks_offered"] += 1
+        q = self.chunk_queues.get(tenant)
+        if q is None:
+            q = self.chunk_queues[tenant] = deque()
+            self._rr.append(tenant)
+        if len(q) >= self.chunk_queue_cap:
+            self.counters["chunks_rejected"] += 1
+            return False
+        q.append(chunk)
+        return True
+
+    def pending_chunks(self) -> int:
+        return sum(len(q) for q in self.chunk_queues.values())
+
+    def tick(self) -> Optional[Tuple[str, Dict[str, Any]]]:
+        """One engine tick: pop one chunk from the next non-empty tenant
+        queue (round-robin) and push it through every admitted query.
+        Returns ``(tenant, outputs)`` or ``None`` when all queues are empty.
+        """
+        self.counters["ticks"] += 1
+        for _ in range(len(self._rr)):
+            tenant = self._rr[self._rr_next % len(self._rr)]
+            self._rr_next += 1
+            q = self.chunk_queues[tenant]
+            if q:
+                chunk = q.popleft()
+                outs = self.engine.process_chunk(chunk)
+                self.counters["chunks_processed"] += 1
+                return tenant, outs
+        return None
+
+    def drain(self) -> List[Tuple[str, Dict[str, Any]]]:
+        """Tick until every tenant queue is empty."""
+        outs: List[Tuple[str, Dict[str, Any]]] = []
+        while self.pending_chunks():
+            res = self.tick()
+            if res is not None:
+                outs.append(res)
+        return outs
+
+    # -- observability ---------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {
+            **self.counters,
+            "slots": self.num_slots,
+            "occupied_slots": len(self.active()),
+            "queued_queries": len(self.queue),
+            "chunk_queue_depths": {
+                t: len(q) for t, q in self.chunk_queues.items()
+            },
+        }
+
+
+# --------------------------------------------------------------------------
+# deprecation shims — the LM batcher moved to repro.serve.lm
+# --------------------------------------------------------------------------
+
+_LM_NAMES = ("ContinuousBatcher", "Request", "SlotState")
+
+
+def __getattr__(name: str):
+    if name in _LM_NAMES:
+        warnings.warn(
+            "repro.serve.batcher.%s moved to repro.serve.lm (this module is "
+            "now the SCEP query-admission layer)" % name,
+            DeprecationWarning, stacklevel=2,
         )
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in act:
-            s = self.slots[i]
-            tok = int(nxt[i])
-            s.request.generated.append(tok)
-            s.pos += 1
-            if tok == self.eos_id or len(s.request.generated) >= s.request.max_new:
-                s.request.done = True
-                self.completed.append(s.request)
-                self.slots[i] = SlotState()
-        return caches, True
-
-    def run_until_drained(self, params, caches, max_ticks: int = 10_000):
-        ticks = 0
-        while (self.queue or self.active()) and ticks < max_ticks:
-            caches, _ = self.step(params, caches)
-            ticks += 1
-        return caches, ticks
+        from . import lm
+        return getattr(lm, name)
+    raise AttributeError("module %r has no attribute %r" % (__name__, name))

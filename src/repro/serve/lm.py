@@ -1,0 +1,198 @@
+"""LM serving scaffolding: prefill/decode steps + continuous batcher.
+
+This module is the language-model half of the serving stack — re-homed from
+``serve/batcher.py`` / ``serve/engine.py`` when those modules became the
+SCEP query-serving subsystem (:class:`repro.serve.engine.ServeEngine` and
+:class:`repro.serve.batcher.QueryAdmission`).  The slot-lifecycle pattern
+pioneered here (fixed lanes, admit-on-free, retire-on-done) is what the
+query admission layer repurposes for standing queries.
+
+``serve_prefill`` consumes the whole prompt (filling KV / SSM caches);
+``serve_step`` emits one token per sequence per call.  Both are pure
+functions of (params, caches) so they jit/pjit and dry-run-lower cleanly.
+``ContinuousBatcher`` owns ``num_slots`` decode lanes: arriving requests
+claim free slots (prefill), finished sequences release them, and every
+engine call decodes all active slots in one fixed-shape step — continuous
+batching à la vLLM/Orca, reduced to its SPMD-friendly core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+# --------------------------------------------------------------------------
+# prefill / decode step functions
+# --------------------------------------------------------------------------
+
+def make_serve_fns(cfg: ModelConfig, max_len: int, impl: str = "xla"):
+    """Returns (prefill, step):
+
+    prefill(params, batch, caches) -> (logits_last, caches)
+    step(params, tokens, caches, pos) -> (logits, caches)
+    """
+
+    def prefill(params, batch: Dict, caches):
+        # fori cache carry: in-place per-period updates keep decode temps at
+        # ~1x cache instead of scan's ~3x (EXPERIMENTS.md §Perf cell 3)
+        logits, caches = lm.decode_step(
+            params, cfg, batch, caches, jnp.zeros((), jnp.int32), impl,
+            loop="fori",
+        )
+        return logits[:, -1], caches
+
+    def step(params, batch: Dict, caches, pos):
+        logits, caches = lm.decode_step(params, cfg, batch, caches, pos, impl,
+                                        loop="fori")
+        return logits[:, -1], caches
+
+    return prefill, step
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0):
+    if temperature == 0.0:
+        return greedy_token(logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params, cfg: ModelConfig, prompt: jax.Array, max_new: int,
+    max_len: Optional[int] = None, temperature: float = 0.0,
+    key: Optional[jax.Array] = None, impl: str = "xla",
+) -> jax.Array:
+    """Simple batched generation (greedy by default) — example/test surface."""
+    b, t = prompt.shape[:2]
+    max_len = max_len or (t + max_new)
+    caches = lm.init_cache(cfg, b, max_len)
+    prefill, step = make_serve_fns(cfg, max_len, impl)
+    logits, caches = prefill(params, {"tokens": prompt}, caches)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    tok = sample_token(logits, key, temperature)
+    toks.append(tok)
+    pos = jnp.asarray(t, jnp.int32)
+    for i in range(max_new - 1):
+        if cfg.num_codebooks:
+            batch = {"tokens": tok[:, None, :]}     # [B, 1, K]
+        else:
+            batch = {"tokens": tok[:, None]}        # [B, 1]
+        logits, caches = step(params, batch, caches, pos)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, sub, temperature)
+        toks.append(tok)
+        pos = pos + 1
+    return jnp.stack(toks, axis=1)
+
+
+# --------------------------------------------------------------------------
+# continuous batcher (slot lanes over jitted prefill/decode)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [T] int32
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Optional[Request] = None
+    pos: int = 0                  # next absolute position
+
+
+class ContinuousBatcher:
+    """Host-side slot manager around jitted (prefill_one, decode_all) fns.
+
+    For simplicity each slot has its own cache pytree entry along dim0 of the
+    batched cache; prefill writes one slot (masked), decode advances all.
+    """
+
+    def __init__(
+        self,
+        num_slots: int,
+        prefill_fn: Callable,        # (params, tokens[1,T], caches, slot) -> (logits, caches)
+        decode_fn: Callable,         # (params, tokens[S,1], caches, pos[S]) -> (logits, caches)
+        eos_id: int = -1,
+    ):
+        self.num_slots = num_slots
+        self.slots = [SlotState() for _ in range(num_slots)]
+        self.queue: Deque[Request] = deque()
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.eos_id = eos_id
+        self.completed: List[Request] = []
+
+    # -- request lifecycle -----------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s.request is None:
+                return i
+        return None
+
+    def _admit(self, params, caches):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return caches
+            req = self.queue.popleft()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, caches = self.prefill_fn(params, tokens, caches, slot)
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            self.slots[slot] = SlotState(req, pos=len(req.prompt) + 1)
+        return caches
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    # -- one engine tick ---------------------------------------------------------
+    def step(self, params, caches):
+        caches = self._admit(params, caches)
+        act = self.active()
+        if not act:
+            return caches, False
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        pos = np.zeros((self.num_slots,), np.int32)
+        for i in act:
+            s = self.slots[i]
+            tokens[i, 0] = s.request.generated[-1]
+            pos[i] = s.pos
+        logits, caches = self.decode_fn(
+            params, jnp.asarray(tokens), caches, jnp.asarray(pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in act:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.request.generated.append(tok)
+            s.pos += 1
+            if tok == self.eos_id or len(s.request.generated) >= s.request.max_new:
+                s.request.done = True
+                self.completed.append(s.request)
+                self.slots[i] = SlotState()
+        return caches, True
+
+    def run_until_drained(self, params, caches, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or self.active()) and ticks < max_ticks:
+            caches, _ = self.step(params, caches)
+            ticks += 1
+        return caches, ticks

@@ -646,6 +646,48 @@ def test_incremental_bit_identical_to_recompute_across_modes(q, seed, geom):
 
 
 # --------------------------------------------------------------------------
+# multi-query serving: one ServeEngine == N independent sessions, bit-exact
+# --------------------------------------------------------------------------
+
+@settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
+          derandomize=True)
+@given(qs=st.lists(exec_queries(), min_size=2, max_size=3),
+       seed=st.integers(0, 2**16), dedup=st.booleans())
+def test_serving_engine_matches_independent_sessions(qs, seed, dedup):
+    """The serving layer's acceptance property: N generated queries hosted
+    in ONE ServeEngine (shared-plan dedup on and off) publish the exact
+    bytes — and report the exact overflow counts — of N single-query
+    Sessions run independently.  Duplicate draws are kept on purpose: they
+    exercise the fingerprint-dedup fan-out path."""
+    import dataclasses as _dc
+
+    qs = [_dc.replace(q, name="dq%d" % i) for i, q in enumerate(qs)]
+    _, chunks = _chunks_for(seed)
+    cfg = CFG.replace(mode="monolithic")
+    try:
+        ref, ref_ovf = {}, {}
+        for q in qs:
+            sess = Session(cfg, vocab=DW.vocab, kb=DW.kb)
+            ref[q.name], ovf = sess.register(q).run(chunks)
+            ref_ovf[q.name] = ovf[q.name]
+        eng = Session(cfg, vocab=DW.vocab, kb=DW.kb).serve(dedup=dedup)
+        for q in qs:
+            eng.register(q)
+        outs, ovfs = eng.run(chunks)
+        assert set(outs) == set(ref)
+        for name in ref:
+            for i, (a, b) in enumerate(zip(outs[name], ref[name])):
+                for col, ca, cb in zip(a._fields, a, b):
+                    assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                        dedup, name, i, col)
+            assert ovfs[name] == ref_ovf[name], (name, ovfs, ref_ovf)
+    except AssertionError:
+        _dump_failure("serving", "seed=%d dedup=%r\nqueries=%r"
+                      % (seed, dedup, qs))
+        raise
+
+
+# --------------------------------------------------------------------------
 # acceptance: closure compiles through the kernel relation (no join chain),
 # and one Session runs two .rq queries with different RANGE windows
 # --------------------------------------------------------------------------

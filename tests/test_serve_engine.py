@@ -1,0 +1,308 @@
+"""Multi-query serving layer tests: ServeEngine + QueryAdmission.
+
+The acceptance bar of the serving subsystem: a population of standing
+queries (exact duplicates, class variants sharing a KB-join prefix,
+filter-threshold variants) served by ONE engine must publish streams
+**bit-identical** to each query running in its own single-query Session —
+with shared-plan dedup on and off — while ``last_stats`` proves the
+sharing actually happened (plan groups, prefix groups, vmap cohorts).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.rdf import Vocab
+from repro.core.session import ExecutionConfig, Session
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+from repro.launch.dscep_run import serve_population
+from repro.serve.batcher import QueryAdmission, QueryRequest
+from repro.serve.engine import ServeEngine
+
+CFG = ExecutionConfig(mode="monolithic", window_capacity=96, max_windows=4,
+                      bind_cap=1024, scan_cap=128, out_cap=1024,
+                      out_stream_cap=2048, intermediate_cap=512)
+
+
+class ServeWorld:
+    def __init__(self, num_tweets=36, seed=0):
+        self.vocab = Vocab()
+        self.kbd = generate_kb(
+            self.vocab,
+            KBConfig(num_artists=24, num_shows=12, filler_triples=80,
+                     seed=seed),
+        )
+        self.tweets = TweetSchema.create(self.vocab)
+        pool = np.concatenate([self.kbd.artist_ids, self.kbd.show_ids])
+        rows = generate_tweets(
+            self.vocab, self.tweets, pool,
+            TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                              mentions_max=3, seed=seed),
+        )
+        self.chunks = list(stream_chunks(rows, 96))
+        # the benchmark population: dup* (plan dedup) / cls* (shared
+        # KB-join prefix) / thr* (vmap cohort of filter constants)
+        self.texts = serve_population(9)
+
+    def session(self, cfg=CFG):
+        return Session(cfg, vocab=self.vocab, kb=self.kbd.kb)
+
+
+@pytest.fixture(scope="module")
+def world():
+    w = ServeWorld()
+    assert len(w.chunks) >= 3
+    return w
+
+
+@pytest.fixture(scope="module")
+def reference(world):
+    """Every population query in its own single-query Session."""
+    outs, ovf = {}, {}
+    for t in world.texts:
+        reg = world.session().register(t)
+        outs[reg.query.name], o = reg.run(world.chunks)
+        ovf[reg.query.name] = o[reg.query.name]
+    return outs, ovf
+
+
+def assert_bit_identical(outs_a, outs_b, tag=""):
+    assert len(outs_a) == len(outs_b), tag
+    for i, (a, b) in enumerate(zip(outs_a, outs_b)):
+        for col, ca, cb in zip(a._fields, a, b):
+            assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                f"{tag} chunk {i} column {col} diverges")
+
+
+# --------------------------------------------------------------------------
+# bit-identity vs independent sessions, dedup on AND off
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dedup", [True, False])
+def test_serving_bit_identical_to_independent_sessions(world, reference,
+                                                       dedup):
+    ref_outs, ref_ovf = reference
+    eng = world.session().serve(dedup=dedup)
+    for t in world.texts:
+        eng.register(t)
+    outs, ovf = eng.run(world.chunks)
+    assert set(outs) == set(ref_outs)
+    for name in ref_outs:
+        assert_bit_identical(outs[name], ref_outs[name],
+                             f"dedup={dedup} {name}")
+        assert ovf[name] == ref_ovf[name], (name, ovf[name], ref_ovf[name])
+
+
+def test_process_chunk_matches_run(world):
+    eng = world.session().serve()
+    for t in world.texts:
+        eng.register(t)
+    ref, _ = eng.run(world.chunks)
+    eng2 = world.session().serve()
+    for t in world.texts:
+        eng2.register(t)
+    for i, chunk in enumerate(world.chunks):
+        outs = eng2.process_chunk(chunk)
+        for name, o in outs.items():
+            assert_bit_identical([o], [ref[name][i]], f"{name} chunk {i}")
+
+
+# --------------------------------------------------------------------------
+# the schedule actually shares
+# --------------------------------------------------------------------------
+
+def test_last_stats_reports_sharing(world):
+    eng = world.session().serve()
+    for t in world.texts:
+        eng.register(t)
+    eng.run(world.chunks)
+    st = eng.last_stats
+    assert st["queries"] == len(world.texts)
+    # the three dup* registrations collapse into one group
+    assert st["distinct_plans"] < st["queries"]
+    assert st["shared_plan_hits"] > 0
+    # cls* variants share their KB-join prefix
+    assert st["prefix_groups"], st
+    for pg in st["prefix_groups"]:
+        assert pg["prefix_len"] >= 1
+        assert pg["kb_joins_shared"] >= 1
+        assert len(pg["queries"]) >= 2
+    assert st["shared_prefix_hits"] > 0
+    # thr* variants vmap-batch into one cohort
+    assert st["batch_sizes"] and max(st["batch_sizes"]) >= 2
+    assert set(st["overflow_totals"]) == set(eng.units)
+    assert st["chunks"] == len(world.chunks)
+
+
+def test_dedup_off_keeps_cohorts_but_no_groups(world):
+    eng = world.session().serve(dedup=False)
+    for t in world.texts:
+        eng.register(t)
+    st = eng.last_stats
+    assert st["distinct_plans"] == len(world.texts)
+    assert not st["prefix_groups"]
+    assert st["batch_sizes"] and max(st["batch_sizes"]) >= 2
+
+
+def test_batch_off_reduces_to_operators(world):
+    eng = world.session().serve(dedup=False, batch=False)
+    for t in world.texts:
+        eng.register(t)
+    st = eng.last_stats
+    assert not st["batch_sizes"] and not st["prefix_groups"]
+    assert st["singletons"] == len(world.texts)
+
+
+def test_trace_metrics_populate_per_query_operator_stats(world):
+    eng = world.session(CFG.replace(trace=True)).serve()
+    for t in world.texts[:4]:
+        eng.register(t)
+    eng.process_chunk(world.chunks[0])
+    st = eng.last_stats
+    assert st["operators"], "trace=True must collect per-query metrics"
+    for name, rep in st["operators"].items():
+        assert name in eng.units
+        assert "n_windows" in rep["counters"]
+        assert rep["counters"]["n_windows"] > 0
+    # trace off: no per-query metrics collected
+    eng2 = world.session().serve()
+    eng2.register(world.texts[0])
+    eng2.process_chunk(world.chunks[0])
+    assert not eng2.last_stats["operators"]
+
+
+# --------------------------------------------------------------------------
+# registration surface
+# --------------------------------------------------------------------------
+
+def test_duplicate_name_raises_with_both_texts_and_replace_works(world):
+    eng = world.session().serve()
+    eng.register(world.texts[0])
+    name = next(iter(eng.units))
+    with pytest.raises(ValueError, match="already registered") as ei:
+        eng.register(world.texts[0])
+    msg = str(ei.value)
+    assert "existing:" in msg and "new:" in msg and "replace=True" in msg
+    unit = eng.register(world.texts[0], replace=True)
+    assert unit.name == name and eng.units[name] is unit
+
+
+def test_unregister_drops_query_and_stats(world):
+    eng = world.session().serve()
+    for t in world.texts[:3]:
+        eng.register(t)
+    eng.process_chunk(world.chunks[0])
+    victim = next(iter(eng.units))
+    eng.unregister(victim)
+    assert victim not in eng.units
+    assert victim not in eng.overflow_totals()
+    outs = eng.process_chunk(world.chunks[1])
+    assert victim not in outs
+    with pytest.raises(KeyError):
+        eng.unregister(victim)
+
+
+def test_session_serve_factory(world):
+    eng = world.session().serve(dedup=False)
+    assert isinstance(eng, ServeEngine) and eng.dedup is False
+
+
+# --------------------------------------------------------------------------
+# admission front-end
+# --------------------------------------------------------------------------
+
+def test_admission_slots_queue_and_backpressure(world):
+    eng = world.session().serve()
+    adm = eng.admission(num_slots=2, queue_cap=2)
+    reqs = [QueryRequest(t) for t in world.texts[:5]]
+    assert adm.submit(reqs[0]) and adm.submit(reqs[1])
+    assert len(adm.active()) == 2                 # slots full
+    assert adm.submit(reqs[2]) and adm.submit(reqs[3])
+    assert len(adm.queue) == 2                    # queued, no free slot
+    assert not adm.submit(reqs[4])                # queue full -> rejected
+    assert adm.counters["rejected_queries"] == 1
+    first = adm.active()[0]
+    adm.retire(first)                             # frees slot, backfills
+    assert first not in adm.active() and len(adm.active()) == 2
+    assert adm.counters["retired"] == 1
+    with pytest.raises(KeyError):
+        adm.retire("nope")
+    st = adm.stats()
+    assert st["occupied_slots"] == 2 and st["slots"] == 2
+    assert eng.last_stats["admission"]["admitted"] == adm.counters["admitted"]
+
+
+def test_admission_chunk_queues_round_robin_and_drain(world, reference):
+    ref_outs, _ = reference
+    eng = world.session().serve()
+    adm = eng.admission(num_slots=4, chunk_queue_cap=2)
+    for t in world.texts[:3]:
+        adm.submit(QueryRequest(t))
+    assert adm.offer_chunk(world.chunks[0], tenant="a")
+    assert adm.offer_chunk(world.chunks[1], tenant="a")
+    assert not adm.offer_chunk(world.chunks[2], tenant="a")   # bounded
+    assert adm.counters["chunks_rejected"] == 1
+    assert adm.offer_chunk(world.chunks[2], tenant="b")
+    # round-robin: a, then b, then a again
+    tenants = []
+    results = []
+    while adm.pending_chunks():
+        tenant, outs = adm.tick()
+        tenants.append(tenant)
+        results.append(outs)
+    assert tenants == ["a", "b", "a"]
+    assert adm.tick() is None
+    # served outputs are the single-session bytes for those chunks
+    for outs, chunk_idx in zip(results, (0, 2, 1)):
+        for name, o in outs.items():
+            assert_bit_identical([o], [ref_outs[name][chunk_idx]],
+                                 f"admission {name} chunk {chunk_idx}")
+    assert adm.counters["chunks_processed"] == 3
+
+
+def test_admission_drain_empties_all_tenants(world):
+    eng = world.session().serve()
+    adm = eng.admission(num_slots=2)
+    adm.submit(QueryRequest(world.texts[0]))
+    adm.offer_chunk(world.chunks[0], tenant="x")
+    adm.offer_chunk(world.chunks[1], tenant="y")
+    outs = adm.drain()
+    assert len(outs) == 2 and adm.pending_chunks() == 0
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: the LM scaffolding moved to repro.serve.lm
+# --------------------------------------------------------------------------
+
+def test_lm_shims_warn_and_resolve():
+    import repro.serve.batcher as batcher_mod
+    import repro.serve.engine as engine_mod
+    from repro.serve import lm
+
+    for mod, names in ((batcher_mod, ("ContinuousBatcher", "Request",
+                                      "SlotState")),
+                       (engine_mod, ("make_serve_fns", "greedy_token",
+                                     "sample_token", "generate"))):
+        for n in names:
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                obj = getattr(mod, n)
+            assert obj is getattr(lm, n)
+            assert any(issubclass(x.category, DeprecationWarning)
+                       and "repro.serve.lm" in str(x.message) for x in w), n
+    with pytest.raises(AttributeError):
+        engine_mod.not_a_thing
+
+
+def test_direct_lm_import_does_not_warn():
+    import importlib
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        import repro.serve.lm as lm
+        importlib.reload(lm)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)], (
+        [str(x.message) for x in w])

@@ -157,6 +157,27 @@ def test_interpret_knob_reaches_compiled_plan_steps(sworld):
         assert all(s.use_pallas for s in steps)
 
 
+def test_register_duplicate_name_raises_with_both_texts(sworld):
+    """Registering a second query under an existing name is almost always a
+    caller bug (silently dropping a standing query); the error carries both
+    serializations so the collision is diagnosable, and ``replace=True``
+    opts into substitution."""
+    sess = sworld.session(CFG)
+    first = sess.register(PQ.CQUERY1_RQ)
+    with pytest.raises(ValueError, match="already registered") as ei:
+        sess.register(PQ.CQUERY1_RQ)
+    msg = str(ei.value)
+    assert "existing:" in msg and "new:" in msg
+    assert msg.count(first.text.strip().splitlines()[0]) >= 1
+    assert "replace=True" in msg
+    assert sess.queries["cquery1"] is first      # registration untouched
+    second = sess.register(PQ.CQUERY1_RQ, replace=True)
+    assert sess.queries["cquery1"] is second and second is not first
+    outs_a, _ = first.run(sworld.chunks[:1])
+    outs_b, _ = second.run(sworld.chunks[:1])
+    assert_bit_identical(outs_a, outs_b, "replace")
+
+
 def test_kb_required_for_kb_touching_query(sworld):
     sess = Session(CFG, vocab=sworld.vocab, kb=None)
     with pytest.raises(ValueError, match="no kb= attached"):
