@@ -8,12 +8,15 @@ over the same multi-chunk stream, all driven through one ``Session`` API:
 * ``single_program`` — the whole DAG fused into one XLA program, chunks
   pushed synchronously one at a time;
 * ``pipelined`` — per-operator jitted steps over bounded device channels,
-  software-pipelined schedule with 2 chunks in flight, sink-only blocking.
+  software-pipelined schedule with up to ``channel_capacity`` chunks in
+  flight, sink-only blocking.
 
 Asserts (a) zero overflowed windows in every mode — capacity overruns would
 silently clip results, so the satellite observability hook is exercised here
-— and (b) the pipelined final stream is **bit-identical** to the
-single-program runtime per chunk.
+— (b) the pipelined final stream is **bit-identical** to the single-program
+runtime per chunk, and (c) the pipelined schedule actually overlapped:
+``depth_hw >= 2`` chunks in flight and (given >= 2 devices) the round_robin
+placement spread operators over >= 2 distinct devices.
 
     PYTHONPATH=src python -m benchmarks.pipeline            # full shapes
     PYTHONPATH=src python -m benchmarks.pipeline --smoke    # CI tiny shapes
@@ -26,6 +29,13 @@ import os
 import time
 from typing import Optional
 
+# Force a multi-device CPU backend BEFORE jax initializes: round_robin
+# placement can only spread enrichment operators across devices when the
+# host platform exposes more than one.  Honors a caller-provided flag.
+from repro.launch.mesh import ensure_host_devices
+
+ensure_host_devices(4)
+
 import jax
 import numpy as np
 
@@ -34,7 +44,7 @@ from repro.core.session import ExecutionConfig
 
 from .common import build_world, format_table, make_session
 
-CHANNEL_CAPACITY = 2
+CHANNEL_CAPACITY = 4
 
 # second workload: the expanded frontend surface — SELECT projection, a
 # variable-length closure path (compiled through the fused closure kernel
@@ -122,7 +132,9 @@ def run(iters: Optional[int] = None, smoke: bool = False,
                                kb_method=kb_method,
                                channel_capacity=CHANNEL_CAPACITY)
     else:
-        world = build_world(num_tweets=256, num_artists=64, num_shows=32,
+        # >= 8 chunks: the pipelined runtime needs a stream long enough to
+        # amortize ramp-up/drain before its steady-state overlap shows
+        world = build_world(num_tweets=1280, num_artists=64, num_shows=32,
                             filler=2000, chunk_capacity=1024)
         base = ExecutionConfig(window_capacity=256, max_windows=4,
                                bind_cap=2048, scan_cap=512, out_cap=2048,
@@ -136,8 +148,12 @@ def run(iters: Optional[int] = None, smoke: bool = False,
         with open(ARTIST_CLASSES_RQ_PATH) as f:
             q = parse_query(f.read(), world.vocab)
     chunks = world.chunks
+    assert smoke or len(chunks) >= 8, (
+        "non-smoke stream too short to pipeline: %d chunks" % len(chunks))
+    num_devices = len(jax.devices())
     print(f"[bench_pipeline] {query}, {len(chunks)} chunks, "
-          f"smoke={smoke}, iters={iters}, kb_method={kb_method}")
+          f"smoke={smoke}, iters={iters}, kb_method={kb_method}, "
+          f"devices={num_devices}")
 
     # one Session per execution mode — the unified API this benchmark compares
     mono = make_session(world, base.replace(mode="monolithic")).register(q)
@@ -168,6 +184,20 @@ def run(iters: Optional[int] = None, smoke: bool = False,
     assert not dropped, "channel drops under the deterministic schedule: %s" % dropped
     print("[bench_pipeline] all three modes bit-exact over "
           f"{len(chunks)} chunks, zero overflow in all modes")
+
+    # -- schedule tripwires: the pipeline must actually pipeline -------------
+    depth_hw = piped.runtime.depth_hw
+    assert depth_hw >= 2, (
+        "pipelined schedule never overlapped (depth_hw=%d) — the benchmark "
+        "would be timing a serial execution under a pipelined label"
+        % depth_hw)
+    placement = {name: str(dev)
+                 for name, dev in (piped.runtime.placement or {}).items()}
+    if num_devices >= 2:
+        assert len(set(placement.values())) >= 2, (
+            "round_robin placement collapsed onto one device with %d "
+            "available: %s" % (num_devices, placement))
+    print(f"[bench_pipeline] depth_hw={depth_hw}, placement={placement}")
 
     # -- throughput ----------------------------------------------------------
     def mono_pass():
@@ -230,11 +260,16 @@ def run(iters: Optional[int] = None, smoke: bool = False,
     payload = {
         "what": "sustained chunks/sec over one stream pass, one Session per "
                 "ExecutionConfig mode: monolithic vs single-program DAG vs "
-                "pipelined dataflow (2 chunks in flight, sink-only blocking)",
+                "pipelined dataflow (up to channel_capacity chunks in "
+                "flight, sink-only blocking)",
         "query": query,
         "kb_method": kb_method,
         "num_chunks": len(chunks),
         "channel_capacity": CHANNEL_CAPACITY,
+        "num_devices": num_devices,
+        "placement": placement,
+        "depth_hw": depth_hw,
+        "split_sink": piped.runtime._split is not None,
         "smoke": smoke,
         "bit_exact_vs_single_program": True,
         "overflowed_windows": 0,

@@ -76,14 +76,21 @@ def make_channel(payload_example: Any, capacity: int) -> Channel:
 
 
 def push(ch: Channel, payload: Any) -> Channel:
-    """Enqueue ``payload``; a full channel drops it and counts the overflow."""
+    """Enqueue ``payload``; a full channel drops it and counts the overflow.
+
+    The slot write is under ``lax.cond``: a push into a full channel — every
+    backpressure event on the hot inter-operator path — must not pay the
+    [capacity, ...]-sized scatter for a payload it is about to drop.  The
+    drop-new semantics are unchanged (pinned by tests/test_channel.py).
+    """
     cap = ch.capacity
     full = ch.size >= cap
     tail = jax.lax.rem(ch.head + ch.size, jnp.int32(cap))
-    slots = jax.tree.map(
-        lambda buf, x: buf.at[tail].set(jnp.where(full, buf[tail], x)),
-        ch.slots, payload,
-    )
+
+    def write(slots):
+        return jax.tree.map(lambda buf, x: buf.at[tail].set(x), slots, payload)
+
+    slots = jax.lax.cond(full, lambda slots: slots, write, ch.slots)
     return Channel(
         slots=slots,
         head=ch.head,

@@ -17,7 +17,7 @@ from repro.obs.metrics import reduce_stats, stat_add, stat_max
 
 from . import algebra
 from .kb import KnowledgeBase
-from .pattern import Bindings, CompiledPattern, universe_bindings
+from .pattern import Bindings, CompiledPattern, compact_rows, universe_bindings
 from .rdf import TripleBatch
 from .window import SlideView, Windows
 
@@ -90,9 +90,30 @@ class ProjectStep:
     keep: Tuple[int, ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class BindingJoin:
+    """Join a pre-joined upstream binding *table* into the state.
+
+    The split aggregation sink (planner.split_agg_plan) replaces the
+    binding-graph decode scans — one ScanJoin per published variable, each
+    over the full augmented window — with a single natural join against the
+    upstream operator's already-projected table of result rows.  ``cols[j]``
+    is the sink-plan column the table's j-th column binds; ``shared`` are
+    the columns joined on (recomputed by the rewriter from the actual
+    bound-before set, like any ScanJoin).  ``replace=True`` marks the plan's
+    very first step, where ``universe ⋈ T == T`` and the outer product is
+    skipped entirely.
+    """
+
+    source: str
+    cols: Tuple[int, ...]
+    shared: Tuple[int, ...]
+    replace: bool = False
+
+
 Step = Union[
     ScanJoin, KBJoin, FilterNumStep, FilterBoolStep, FilterInStep,
-    OptionalSteps, UnionSteps, DistinctStep, ProjectStep,
+    OptionalSteps, UnionSteps, DistinctStep, ProjectStep, BindingJoin,
 ]
 
 
@@ -126,6 +147,12 @@ Env = Dict[str, jax.Array]
 # (pinned by tests/test_obs.py).
 Stats = Optional[Dict[str, jax.Array]]
 
+# Upstream binding tables for the split aggregation sink: operator name ->
+# ``(cols, valid)`` where ``cols`` is ``[rows, k]`` uint32 (one column per
+# published variable; the delta variant appends the two span columns) and
+# ``valid`` is ``[rows]`` bool.  Only BindingJoin steps consume these.
+Tables = Optional[Dict[str, Tuple[jax.Array, jax.Array]]]
+
 
 def _occ(b: Bindings) -> jax.Array:
     """Binding-table occupancy (valid rows) as an int32 scalar."""
@@ -139,10 +166,43 @@ def plan_out_vars(plan: Plan) -> Tuple[int, ...]:
     }))
 
 
+def _binding_table(
+    step: BindingJoin, tables: Tables, width: int, num_span: int = 0,
+) -> Bindings:
+    """Scatter an upstream table into a ``width``-column Bindings relation.
+
+    ``num_span`` > 0 (the delta path) additionally maps the table's trailing
+    span columns onto the state's span columns at ``width - num_span``.
+    """
+    assert tables is not None and step.source in tables, (
+        "BindingJoin on %r but no table supplied — split-sink runners must "
+        "pass the upstream tables" % step.source)
+    tcols, tvalid = tables[step.source]
+    k = len(step.cols)
+    out = jnp.zeros((tcols.shape[0], width), jnp.uint32)
+    for j, c in enumerate(step.cols):
+        out = out.at[:, c].set(tcols[:, j])
+    for j in range(num_span):
+        out = out.at[:, width - num_span + j].set(tcols[:, k + j])
+    # upstream clipping is reported as that operator's own overflow flag
+    return Bindings(out, tvalid, jnp.zeros((), bool))
+
+
 def _apply(
     step: Step, cur: Bindings, window: TripleBatch, kb: Optional[KnowledgeBase],
-    env: Env, plan: Plan, stats: Stats = None,
+    env: Env, plan: Plan, stats: Stats = None, tables: Tables = None,
 ) -> Bindings:
+    if isinstance(step, BindingJoin):
+        b = _binding_table(step, tables, plan.num_vars)
+        if stats is not None:
+            stat_max(stats, "hw_scan", _occ(b))
+        if step.replace:
+            # first step: universe ⋈ T is T itself (shared is empty, the
+            # max-merge with all-PAD is the identity) — clip to bind_cap
+            # without the [1, rows] outer product
+            rows, valid, ovf = compact_rows(b.cols, b.valid, plan.bind_cap)
+            return Bindings(rows, valid, ovf | cur.overflow)
+        return algebra.join(cur, b, step.shared, plan.bind_cap)
     if isinstance(step, ScanJoin):
         b = algebra.scan_pattern(window, step.pat, plan.num_vars, plan.scan_cap)
         if stats is not None:
@@ -165,15 +225,15 @@ def _apply(
     if isinstance(step, OptionalSteps):
         sub = universe_bindings(plan.bind_cap, plan.num_vars)
         for s in step.sub:
-            sub = _apply(s, sub, window, kb, env, plan, stats)
+            sub = _apply(s, sub, window, kb, env, plan, stats, tables)
         return algebra.optional_join(cur, sub, step.shared, plan.bind_cap)
     if isinstance(step, UnionSteps):
         left = cur
         for s in step.left:
-            left = _apply(s, left, window, kb, env, plan, stats)
+            left = _apply(s, left, window, kb, env, plan, stats, tables)
         right = cur
         for s in step.right:
-            right = _apply(s, right, window, kb, env, plan, stats)
+            right = _apply(s, right, window, kb, env, plan, stats, tables)
         return algebra.union(left, right, plan.bind_cap)
     if isinstance(step, DistinctStep):
         return algebra.distinct(cur)
@@ -191,11 +251,12 @@ apply_step = _apply
 def run_steps(
     plan: Plan, cur: Bindings, steps: Sequence[Step], window: TripleBatch,
     kb: Optional[KnowledgeBase], env: Env, stats: Stats = None,
+    tables: Tables = None,
 ) -> Bindings:
     """Apply a step subsequence (same ops as the run_plan loop, including
     the per-step hw_bind gauge so stats stay comparable across paths)."""
     for step in steps:
-        cur = _apply(step, cur, window, kb, env, plan, stats)
+        cur = _apply(step, cur, window, kb, env, plan, stats, tables)
         if stats is not None:
             stat_max(stats, "hw_bind", _occ(cur))
     return cur
@@ -293,6 +354,7 @@ def run_plan_windows(
 def _apply_delta(
     step: Step, cur: Bindings, view: SlideView, kb: Optional[KnowledgeBase],
     env: Env, plan: Plan, max_span: int, stats: Stats = None,
+    tables: Tables = None,
 ) -> Bindings:
     """One plan step over span-tracked bindings (``num_vars + 2`` columns).
 
@@ -302,7 +364,25 @@ def _apply_delta(
     eager retract after every stream join drops rows whose span can no
     longer fit inside any window.  KB joins and filters never look at the
     extra columns — they treat binding columns opaquely.
+
+    BindingJoin is monotone too: an upstream table row carries the span of
+    its contributing slides, the max-merge unions spans across the join, and
+    a combined derivation fits a window iff every constituent span does —
+    which is exactly the interval test ``delta_window_mask`` applies.
     """
+    if isinstance(step, BindingJoin):
+        b = _binding_table(step, tables, plan.num_vars + 2, num_span=2)
+        if stats is not None:
+            stat_max(stats, "hw_scan", _occ(b))
+        if step.replace:
+            rows, valid, ovf = compact_rows(b.cols, b.valid, plan.bind_cap)
+            joined = Bindings(rows, valid, ovf | cur.overflow)
+        else:
+            joined = algebra.join(cur, b, step.shared, plan.bind_cap)
+        retracted = algebra.delta_retract(joined, plan.num_vars, max_span)
+        if stats is not None:
+            stat_add(stats, "n_retract", _occ(joined) - _occ(retracted))
+        return retracted
     if isinstance(step, ScanJoin):
         b = algebra.scan_pattern_delta(
             view.stream, step.pat, plan.num_vars, plan.scan_cap,
@@ -332,10 +412,12 @@ def _apply_delta(
     if isinstance(step, UnionSteps):
         left = cur
         for s in step.left:
-            left = _apply_delta(s, left, view, kb, env, plan, max_span, stats)
+            left = _apply_delta(s, left, view, kb, env, plan, max_span,
+                                stats, tables)
         right = cur
         for s in step.right:
-            right = _apply_delta(s, right, view, kb, env, plan, max_span, stats)
+            right = _apply_delta(s, right, view, kb, env, plan, max_span,
+                                 stats, tables)
         return algebra.union(left, right, plan.bind_cap)
     raise TypeError(
         "step %r is not delta-safe — plan_supports_delta should have routed "
@@ -346,6 +428,7 @@ def _apply_delta(
 def run_plan_slides(
     plan: Plan, view: SlideView, slides_per_window: int, max_windows: int,
     kb: Optional[KnowledgeBase], env: Env, with_stats: bool = False,
+    tables: Tables = None,
 ):
     """Incremental execution: one chunk-level pass, per-window selection.
 
@@ -371,7 +454,8 @@ def run_plan_slides(
     stats: Stats = {} if with_stats else None
     cur = algebra.delta_universe(plan.bind_cap, plan.num_vars)
     for step in plan.steps:
-        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1, stats)
+        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1, stats,
+                           tables)
         if stats is not None:
             stat_max(stats, "hw_bind", _occ(cur))
     out_vars = plan_out_vars(plan)
@@ -405,3 +489,172 @@ def run_plan_slides(
              jnp.max(jnp.sum(out.valid.astype(jnp.int32), axis=-1)))
     stat_add(stats, "n_windows", jnp.sum(w_valid.astype(jnp.int32)))
     return out, ovf, stats
+
+
+# --------------------------------------------------------------------------
+# split aggregation sink: upstream table producers + sink runners
+# --------------------------------------------------------------------------
+#
+# The binding-graph protocol (planner.decompose) ships upstream results as
+# RDF triples — one graph event per result row — and the aggregation sink
+# *re-parses* them: one decode ScanJoin per published variable over the
+# augmented window, then the natural joins that stitch the row back
+# together.  That re-parse dominated the sink stage (BENCH_pipeline
+# stage_breakdown).  The split sink skips the round-trip entirely: each
+# upstream publishes its final binding TABLE (already joined, projected,
+# deduplicated and canonically ordered), and the rewritten sink plan
+# (planner.split_agg_plan) joins those tables directly via BindingJoin.
+# Output bits are unchanged: the published stream is a function of the
+# binding *set* (finalize_bindings dedups and canonically orders), and the
+# table rows are exactly the rows the decode scans would have reconstructed.
+
+def _clip_table(
+    emit: Bindings, pub_cols: Tuple[int, ...], rows_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Gather ``pub_cols`` from the leading ``rows_cap`` rows of ``emit``.
+
+    ``emit`` must keep its valid rows as a prefix (distinct/canonical_order
+    guarantee that), so the prefix clip drops exactly the rows the
+    triple-publication path would have clipped at ``out_cap``.  Returns
+    ``(cols [rows_cap, k], valid [rows_cap], clipped [])``.
+    """
+    take = min(rows_cap, emit.capacity)
+    cols = jnp.stack([emit.cols[:take, c] for c in pub_cols], axis=1)
+    valid = emit.valid[:take]
+    clipped = (jnp.any(emit.valid[take:]) if take < emit.capacity
+               else jnp.zeros((), bool))
+    if take < rows_cap:
+        pad = rows_cap - take
+        cols = jnp.concatenate(
+            [cols, jnp.zeros((pad, len(pub_cols)), jnp.uint32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    return cols, valid, clipped
+
+
+def run_plan_window_tables(
+    plan: Plan, windows: Windows, pub_cols: Tuple[int, ...], rows_cap: int,
+    kb: Optional[KnowledgeBase], env: Env, with_stats: bool = False,
+):
+    """Upstream table producer, per-window: the operator's full step chain,
+    then project → distinct → canonical_order (the exact emit relation the
+    triple publication constructs from), clipped to ``rows_cap`` rows.
+
+    Returns ``((cols [W, rows_cap, k], valid [W, rows_cap]), ovf [W])``
+    (+ a chunk-scalar stats dict when ``with_stats``).
+    """
+    out_vars = plan_out_vars(plan)
+    sig = tuple(sorted(out_vars, key=lambda c: plan.var_names[c]))
+
+    def one(window, wvalid):
+        stats: Stats = {} if with_stats else None
+        cur = universe_bindings(plan.bind_cap, plan.num_vars)
+        cur = run_steps(plan, cur, plan.steps, window, kb, env, stats)
+        emit = algebra.canonical_order(
+            algebra.distinct(algebra.project(cur, out_vars)), sig)
+        cols, valid, clipped = _clip_table(emit, pub_cols, rows_cap)
+        valid = valid & wvalid
+        ovf = cur.overflow | emit.overflow | clipped
+        if with_stats:
+            stat_max(stats, "hw_out", jnp.sum(valid.astype(jnp.int32)))
+            return (cols, valid), ovf, stats
+        return (cols, valid), ovf
+
+    res = jax.vmap(one)(windows.triples, windows.window_valid)
+    if not with_stats:
+        return res
+    table, ovf, per_window = res
+    stats = reduce_stats(per_window)
+    stat_add(stats, "n_windows",
+             jnp.sum(windows.window_valid.astype(jnp.int32)))
+    return table, ovf, stats
+
+
+def run_plan_slide_tables(
+    plan: Plan, view: SlideView, pub_cols: Tuple[int, ...], rows_cap: int,
+    slides_per_window: int, kb: Optional[KnowledgeBase], env: Env,
+    with_stats: bool = False,
+):
+    """Upstream table producer, incremental: one chunk-level delta pass,
+    emitting the span-tagged table (variable columns + the two span
+    columns).  The sink's per-window interval test selects each window's
+    rows, so the table is produced once per chunk, not once per window.
+
+    Returns ``((cols [rows_cap, k+2], valid [rows_cap]), ovf [])``.
+    """
+    r = slides_per_window
+    stats: Stats = {} if with_stats else None
+    cur = algebra.delta_universe(plan.bind_cap, plan.num_vars)
+    for step in plan.steps:
+        cur = _apply_delta(step, cur, view, kb, env, plan, r - 1, stats)
+        if stats is not None:
+            stat_max(stats, "hw_bind", _occ(cur))
+    nv = plan.num_vars
+    out_vars = plan_out_vars(plan)
+    # dedup over (variables, span): rows equal in both are interchangeable
+    # for every window's interval test, so multiplicity can be dropped here
+    emit = algebra.distinct(
+        algebra.project(cur, tuple(out_vars) + (nv, nv + 1)))
+    cols, valid, clipped = _clip_table(
+        emit, tuple(pub_cols) + (nv, nv + 1), rows_cap)
+    ovf = cur.overflow | emit.overflow | clipped
+    if with_stats:
+        stat_max(stats, "hw_out", jnp.sum(valid.astype(jnp.int32)))
+        return (cols, valid), ovf, stats
+    return (cols, valid), ovf
+
+
+def run_sink_windows(
+    plan: Plan, windows: Windows,
+    tables: Dict[str, Tuple[jax.Array, jax.Array]],
+    kb: Optional[KnowledgeBase], env: Env, with_stats: bool = False,
+):
+    """Split-sink twin of :func:`run_plan_windows`: vmaps the rewritten sink
+    plan over the RAW windows with the per-window upstream tables as extra
+    batched operands.  ``tables[name]`` leaves are ``[W, rows, k]`` /
+    ``[W, rows]``.  The finalize tail (and therefore the published bits)
+    is identical to the unsplit path — upstream publication triples carry
+    their window's max timestamp, so the raw-window ts equals the augmented
+    one.
+    """
+    w = windows.num_windows
+    names = tuple(tables)
+
+    def one(window, wid, wvalid, table_vals):
+        stats: Stats = {} if with_stats else None
+        tdict = dict(zip(names, table_vals))
+        cur = universe_bindings(plan.bind_cap, plan.num_vars)
+        cur = run_steps(plan, cur, plan.steps, window, kb, env, stats, tdict)
+        ts = jnp.max(jnp.where(window.valid, window.ts, 0))
+        out, ovf = finalize_bindings(
+            plan, cur, ts, wid.astype(jnp.uint32) * plan.bind_cap, stats)
+        out = out._replace(valid=out.valid & wvalid)
+        if with_stats:
+            return out, ovf, stats
+        return out, ovf
+
+    res = jax.vmap(one)(
+        windows.triples, jnp.arange(w), windows.window_valid,
+        tuple(tables[n] for n in names),
+    )
+    if not with_stats:
+        return res
+    out, ovf, per_window = res
+    stats = reduce_stats(per_window)
+    stat_add(stats, "n_windows",
+             jnp.sum(windows.window_valid.astype(jnp.int32)))
+    return out, ovf, stats
+
+
+def run_sink_slides(
+    plan: Plan, view: SlideView,
+    tables: Dict[str, Tuple[jax.Array, jax.Array]],
+    slides_per_window: int, max_windows: int,
+    kb: Optional[KnowledgeBase], env: Env, with_stats: bool = False,
+):
+    """Split-sink twin of :func:`run_plan_slides`: the rewritten sink plan's
+    delta pass over the merged chunk, joining chunk-level span-tagged
+    upstream tables, then the standard per-window interval-select +
+    finalize.  Shares :func:`run_plan_slides` outright so the set-to-stream
+    tail can never diverge from the recompute path."""
+    return run_plan_slides(plan, view, slides_per_window, max_windows,
+                           kb, env, with_stats, tables=tables)

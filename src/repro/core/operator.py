@@ -18,7 +18,10 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .engine import Plan, run_plan_slides, run_plan_windows
+from .engine import (
+    Plan, run_plan_slide_tables, run_plan_slides, run_plan_window_tables,
+    run_plan_windows, run_sink_slides, run_sink_windows,
+)
 from .kb import KnowledgeBase, pad_to
 from .planner import plan_supports_delta
 from .rdf import TripleBatch
@@ -141,6 +144,62 @@ class SCEPOperator:
         windows = windows_from_slides(
             view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
         return run_plan_windows(self.plan, windows, kb, env, with_stats)
+
+    # -- split-sink surfaces (see engine's split-sink section) ----------------
+    def process_window_tables(
+        self, windows: Windows, pub_cols: Tuple[int, ...], rows_cap: int,
+        kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
+        """Table-producing twin of :meth:`process_windows`: the operator's
+        final binding table per window instead of its triple publication —
+        what the split aggregation sink joins directly."""
+        return run_plan_window_tables(
+            self.plan, windows, pub_cols, rows_cap,
+            kb if kb is not None else self.kb,
+            env if env is not None else self.env, with_stats,
+        )
+
+    def process_slide_tables(
+        self, view: SlideView, pub_cols: Tuple[int, ...], rows_cap: int,
+        kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
+        """Incremental table producer: one chunk-level span-tagged table
+        (requires a delta-safe plan — the split-sink builder gates on it)."""
+        cfg = self.config
+        _, r = window_slides(cfg.window_capacity, cfg.window_step)
+        return run_plan_slide_tables(
+            self.plan, view, pub_cols, rows_cap, r,
+            kb if kb is not None else self.kb,
+            env if env is not None else self.env, with_stats,
+        )
+
+    def process_sink_windows(
+        self, windows: Windows, tables, kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
+        """Split-sink step over RAW windows + per-window upstream tables
+        (``self.plan`` must be the rewritten plan with BindingJoin steps)."""
+        return run_sink_windows(
+            self.plan, windows, tables,
+            kb if kb is not None else self.kb,
+            env if env is not None else self.env, with_stats,
+        )
+
+    def process_sink_slides(
+        self, view: SlideView, tables, kb: Optional[KnowledgeBase] = None,
+        env: Optional[Dict[str, jax.Array]] = None, with_stats: bool = False,
+    ):
+        """Split-sink step on the delta path: the sink's own chain runs once
+        per chunk over span-tagged upstream tables, finalizing per window."""
+        cfg = self.config
+        _, r = window_slides(cfg.window_capacity, cfg.window_step)
+        return run_sink_slides(
+            self.plan, view, tables, r, cfg.max_windows,
+            kb if kb is not None else self.kb,
+            env if env is not None else self.env, with_stats,
+        )
 
     def _publish(self, out_w: TripleBatch) -> TripleBatch:
         """Publisher: flatten [W, cap] window outputs into one ordered chunk."""

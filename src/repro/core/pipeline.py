@@ -28,8 +28,8 @@ Structure:
   is the transport (a no-op on one device, a D2D copy across devices);
 * the host driver runs a **software-pipelined schedule**: it feeds chunk
   *t+1* into the producer stages before draining chunk *t* from the sink,
-  keeping ``depth`` chunks in flight (double-buffered by default).  All
-  dispatch is async; only the sink output is ever blocked on.
+  keeping ``depth`` chunks in flight (up to the channel capacity, default
+  4).  All dispatch is async; only the sink output is ever blocked on.
 
 Results are bit-identical to :class:`DSCEPRuntime` and
 :class:`MonolithicRuntime` (tests/test_pipeline_runtime.py): the stages run
@@ -39,7 +39,8 @@ boundaries instead of fused into one program.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +55,7 @@ from .planner import OperatorDAG
 from .rdf import TripleBatch, Vocab, empty_triples
 from .runtime import (
     RuntimeConfig, _warn_legacy_constructor, augment_windows, build_operators,
+    prepare_split_sink,
 )
 from .stream import merge_streams
 from .window import (
@@ -89,7 +91,14 @@ class PipelinedRuntime:
       :func:`repro.launch.mesh.place_operators`); ``None`` leaves every stage
       on the default device (still pipelined, transport becomes a no-op);
     * ``channel_capacity`` — slots per edge channel (≥ 2 for the
-      double-buffered schedule; capacity bounds the chunks in flight).
+      double-buffered schedule; capacity bounds the chunks in flight —
+      default 4, deep enough to hide a slow stage behind three fast ones).
+
+    The driver decouples ``feed()`` from execution with dispatch queues:
+    chunks land in a host-side source queue and a per-operator dispatch
+    queue, and ``_pump()`` advances every stage whose outbound edge has
+    room.  ``feed()`` therefore never raises on a full pipeline — excess
+    chunks wait in the source queue until ``drain()`` frees a slot.
     """
 
     def __init__(
@@ -101,7 +110,7 @@ class PipelinedRuntime:
         mesh=None,
         data_axis: str = "data",
         placement: Optional[Dict[str, Any]] = None,
-        channel_capacity: int = 2,
+        channel_capacity: int = 4,
         tracer: Optional[Tracer] = None,
     ):
         _warn_legacy_constructor("PipelinedRuntime", "pipelined")
@@ -145,6 +154,14 @@ class PipelinedRuntime:
                     op.kb = jax.device_put(op.kb, dev)
                 op.env = jax.device_put(op.env, dev)
 
+        # --- split aggregation sink: upstream stages publish binding
+        # *tables*, the sink joins them directly (None -> augmented path).
+        # Swap the sink operator's plan so EXPLAIN/last_stats report the
+        # plan that actually runs.
+        self._split = prepare_split_sink(dag, self.operators, cfg, mesh)
+        if self._split is not None:
+            self.operators[self.final].plan = self._split.plan
+
         # --- per-edge channels (allocated on the consumer's device).  Only
         # the aggregator's inbound edges buffer across ticks; upstream
         # operators consume windows the tick they are produced, so they get
@@ -155,15 +172,37 @@ class PipelinedRuntime:
             cfg.window_capacity, cfg.window_step)
         win_example = _zeros_windows(
             cfg.max_windows, slide_cap * slides_per_win)
+        if self._split is not None and self._split.delta:
+            # the sink consumes the chunk-level SlideView, whose stream leaf
+            # is sized by the *chunk* — unknown until the first feed, so the
+            # window channel is allocated lazily (see _ensure_win_channel)
+            self._agg_win_ch: Optional[Channel] = None
+            self._win_sig = None
+        else:
+            self._agg_win_ch = self._on_device(
+                channel.make_channel(win_example, channel_capacity),
+                self.final)
         up_out_cap = min(cfg.intermediate_cap, cfg.out_cap)
-        pub_example = _zeros_publication(cfg.max_windows, up_out_cap)
-        self._agg_win_ch: Channel = self._on_device(
-            channel.make_channel(win_example, channel_capacity), self.final)
-        self._out_ch: Dict[str, Channel] = {
-            name: self._on_device(
-                channel.make_channel(pub_example, channel_capacity), self.final)
-            for name in self.upstream
-        }
+        self._out_ch: Dict[str, Channel] = {}
+        for name in self.upstream:
+            if self._split is not None:
+                spec = self._split.pub[name]
+                k = len(spec.cols)
+                if self._split.delta:
+                    table = (jnp.zeros((spec.slide_rows_cap, k + 2),
+                                       jnp.uint32),
+                             jnp.zeros((spec.slide_rows_cap,), bool))
+                else:
+                    table = (jnp.zeros((cfg.max_windows, spec.rows_cap, k),
+                                       jnp.uint32),
+                             jnp.zeros((cfg.max_windows, spec.rows_cap),
+                                       bool))
+                pub_example = (table, jnp.zeros((cfg.max_windows,), bool))
+            else:
+                pub_example = _zeros_publication(cfg.max_windows, up_out_cap)
+            self._out_ch[name] = self._on_device(
+                channel.make_channel(pub_example, channel_capacity),
+                self.final)
 
         # --- one jitted step per operator (channel state donated where a
         # step owns channels; windows are shared across consumers and are
@@ -175,6 +214,17 @@ class PipelinedRuntime:
         }
         self._sink_step = jax.jit(self._sink_impl, donate_argnums=(0, 1))
         self._in_flight = 0
+        # high-water mark of chunks simultaneously in flight — the achieved
+        # pipeline depth (benchmarks/CI assert >= 2, i.e. actual overlap)
+        self.depth_hw = 0
+        # dispatch queues: feed() only enqueues; _pump() advances any stage
+        # whose outbound edge has room.  _src_q holds raw chunks not yet
+        # windowed; _disp_q[name] holds windowed payloads operator `name`
+        # has not yet executed (decouples upstream execution from feed()).
+        self._src_q: Deque[TripleBatch] = deque()
+        self._disp_q: Dict[str, Deque[Any]] = {
+            name: deque() for name in self.upstream
+        }
         # device-side running counters of clipped windows per operator —
         # O(1) state however long the stream runs, and no host sync on the
         # drain path (the driver reads them only at stream boundaries)
@@ -228,22 +278,24 @@ class PipelinedRuntime:
         self._edge_stats[edge]["pops"] += 1
 
     # -- stage implementations (each traces into its own XLA program) ----------
-    def _windows_impl(
-        self, chunk: TripleBatch
-    ) -> Tuple[Windows, Optional[SlideView]]:
+    def _windows_impl(self, chunk: TripleBatch):
         """Source stage: the shared Aggregator front-end (merge + window).
 
-        Also returns the slide view in incremental mode — upstream operator
-        steps delta-evaluate over it while the materialized windows feed the
-        aggregator's window channel unchanged.
+        Returns ``(sink payload, operator payload)``: the materialized
+        windows feed the aggregator's window channel while upstream steps
+        consume either the windows or — in incremental mode — the slide
+        view.  With a delta split sink, *both* sides consume the view and
+        the windows are never materialized at all.
         """
         cfg = self.config
         merged = merge_streams([chunk])
         view = count_slides(
             merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        if self._split is not None and self._split.delta:
+            return view, view
         windows = windows_from_slides(
             view, cfg.window_capacity, cfg.max_windows, cfg.window_step)
-        return windows, (view if cfg.incremental else None)
+        return windows, (view if cfg.incremental else windows)
 
     def _op_impl(
         self, name: str, win_or_view, kb: Optional[KnowledgeBase],
@@ -255,6 +307,25 @@ class PipelinedRuntime:
         chunk-scalar engine metrics — the publication pushed onto the
         channel is unchanged either way."""
         op = self.operators[name]
+        if self._split is not None:
+            spec = self._split.pub[name]
+            if self._split.delta:
+                res = op.process_slide_tables(
+                    win_or_view, spec.cols, spec.slide_rows_cap, kb, env,
+                    with_stats)
+            else:
+                res = op.process_window_tables(
+                    win_or_view, spec.cols, spec.rows_cap, kb, env,
+                    with_stats)
+            if with_stats:
+                table, ovf, stats = res
+            else:
+                table, ovf = res
+            if ovf.ndim == 0:     # delta tables are chunk-level
+                ovf = jnp.broadcast_to(ovf, (self.config.max_windows,))
+            if with_stats:
+                return (table, ovf), stats
+            return table, ovf
         if isinstance(win_or_view, SlideView):
             res = op.process_slides(win_or_view, kb, env, with_stats)
         else:
@@ -270,16 +341,29 @@ class PipelinedRuntime:
         with_stats: bool = False,
     ):
         """Aggregation operator step: pop every inbound edge, join, publish."""
-        win_ch, windows, has = channel.pop(win_ch)
-        upstream_out: Dict[str, TripleBatch] = {}
-        overflow: Dict[str, jax.Array] = {}
-        for name in self.upstream:
-            out_chs[name], (tb, ovf), h = channel.pop(out_chs[name])
-            upstream_out[name] = tb
-            overflow[name] = ovf & h
-        aug = augment_windows(self.dag, windows, upstream_out)
+        win_ch, sink_payload, has = channel.pop(win_ch)
         final_op = self.operators[self.final]
-        res = final_op.process_windows(aug, kb, env, with_stats)
+        overflow: Dict[str, jax.Array] = {}
+        if self._split is not None:
+            tables: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+            for name in self.upstream:
+                out_chs[name], (table, ovf), h = channel.pop(out_chs[name])
+                tables[name] = table
+                overflow[name] = ovf & h
+            if self._split.delta:
+                res = final_op.process_sink_slides(
+                    sink_payload, tables, kb, env, with_stats)
+            else:
+                res = final_op.process_sink_windows(
+                    sink_payload, tables, kb, env, with_stats)
+        else:
+            upstream_out: Dict[str, TripleBatch] = {}
+            for name in self.upstream:
+                out_chs[name], (tb, ovf), h = channel.pop(out_chs[name])
+                upstream_out[name] = tb
+                overflow[name] = ovf & h
+            aug = augment_windows(self.dag, sink_payload, upstream_out)
+            res = final_op.process_windows(aug, kb, env, with_stats)
         if with_stats:
             out_w, ovf_f, stats = res
         else:
@@ -292,42 +376,80 @@ class PipelinedRuntime:
         return win_ch, out_chs, out, overflow
 
     # -- host-side async driver -------------------------------------------------
-    def feed(self, chunk: TripleBatch) -> None:
-        """Dispatch the producer stages for one chunk (asynchronously).
+    def _edge_room(self, edge: str) -> bool:
+        e = self._edge_stats[edge]
+        return e["pushes"] - e["pops"] < self.channel_capacity
 
-        Windows are built once, queued on the aggregator's window edge, and
-        transported (``device_put``) to each upstream operator, which runs
-        its engine step and publishes onto its aggregator edge.  Nothing
-        here blocks.
-        """
-        if self._in_flight >= self.channel_capacity:
+    def _ensure_win_channel(self, payload) -> None:
+        """Lazily allocate the sink's window channel from the first payload
+        (split-delta mode ships the SlideView, whose stream leaf is sized by
+        the chunk — unknown at construction time)."""
+        sig = tuple((leaf.shape, leaf.dtype) for leaf in jax.tree.leaves(payload))
+        if self._agg_win_ch is None:
+            example = jax.tree.map(jnp.zeros_like, payload)
+            self._agg_win_ch = self._on_device(
+                channel.make_channel(example, self.channel_capacity),
+                self.final)
+            self._win_sig = sig
+        elif getattr(self, "_win_sig", sig) != sig:
             raise RuntimeError(
-                "channels full (%d chunks in flight); drain() first"
-                % self._in_flight
-            )
+                "split-delta pipelining requires uniform chunk shapes: the "
+                "window channel was sized for a different chunk capacity")
+
+    def _pump(self) -> None:
+        """Advance every stage whose outbound edge has room.
+
+        The schedule's one rule: a stage runs iff it has queued work AND a
+        free slot to publish into.  With equal edge capacities the operator
+        dispatch queues always empty within the same pump that windows their
+        chunk; they exist so ``feed()`` never blocks on (or raises for) a
+        full pipeline, and so per-edge capacities can diverge later without
+        touching the driver.
+        """
         tr = self.tracer
-        with span_or_null(tr, "stage:source") as sp:
-            windows, view = self._win_step(chunk)
-            sp.fence(windows)
-        self._agg_win_ch = channel.push_jit(
-            self._agg_win_ch, self._on_device(windows, self.final))
-        self._edge_pushed("source->%s" % self.final)
+        src_edge = "source->%s" % self.final
+        while self._src_q and self._edge_room(src_edge):
+            chunk = self._src_q.popleft()
+            with span_or_null(tr, "stage:source") as sp:
+                sink_payload, op_payload = self._win_step(chunk)
+                sp.fence(sink_payload)
+            self._ensure_win_channel(sink_payload)
+            self._agg_win_ch = channel.push_jit(
+                self._agg_win_ch, self._on_device(sink_payload, self.final))
+            self._edge_pushed(src_edge)
+            for name in self.upstream:
+                self._disp_q[name].append(op_payload)
+            self._in_flight += 1
+            self.depth_hw = max(self.depth_hw, self._in_flight)
         for name in self.upstream:
+            edge = "%s->%s" % (name, self.final)
+            q = self._disp_q[name]
             op = self.operators[name]
-            payload = view if view is not None else windows
-            with span_or_null(tr, "stage:%s" % name) as sp:
-                if self._collect:
-                    publication, stats = self._op_step_stats[name](
-                        self._on_device(payload, name), op.kb, op.env)
-                    merge_stats(self._stats_acc[name], stats)
-                else:
-                    publication = self._op_step[name](
-                        self._on_device(payload, name), op.kb, op.env)
-                sp.fence(publication)
-            self._out_ch[name] = channel.push_jit(
-                self._out_ch[name], self._on_device(publication, self.final))
-            self._edge_pushed("%s->%s" % (name, self.final))
-        self._in_flight += 1
+            while q and self._edge_room(edge):
+                payload = q.popleft()
+                with span_or_null(tr, "stage:%s" % name) as sp:
+                    if self._collect:
+                        publication, stats = self._op_step_stats[name](
+                            self._on_device(payload, name), op.kb, op.env)
+                        merge_stats(self._stats_acc[name], stats)
+                    else:
+                        publication = self._op_step[name](
+                            self._on_device(payload, name), op.kb, op.env)
+                    sp.fence(publication)
+                self._out_ch[name] = channel.push_jit(
+                    self._out_ch[name],
+                    self._on_device(publication, self.final))
+                self._edge_pushed(edge)
+
+    def feed(self, chunk: TripleBatch) -> None:
+        """Accept one chunk and dispatch every stage with room (async).
+
+        Never raises on a full pipeline: chunks beyond the channel capacity
+        wait in the host-side source queue and are windowed/dispatched as
+        ``drain()`` frees slots.  Nothing here blocks on device values.
+        """
+        self._src_q.append(chunk)
+        self._pump()
 
     def drain(self) -> TripleBatch:
         """Dispatch the sink stage for the oldest in-flight chunk.
@@ -336,8 +458,14 @@ class PipelinedRuntime:
         when the host needs the values).  Per-operator overflow flags are
         accumulated device-side; read them with :meth:`overflow_totals`.
         """
+        self._pump()
         if self._in_flight == 0:
             raise RuntimeError("nothing in flight; feed() first")
+        # equal edge capacities guarantee the operator stages kept pace with
+        # the source stage — the sink never pops an unmatched window
+        assert all(not q for q in self._disp_q.values()), (
+            "operator dispatch queues lag the window edge; per-edge "
+            "capacities require a schedule-aware sink")
         final_op = self.operators[self.final]
         with span_or_null(self.tracer, "stage:%s" % self.final) as sp:
             if self._collect:
@@ -357,16 +485,17 @@ class PipelinedRuntime:
             )
         self._last_overflow = overflow
         self._in_flight -= 1
+        self._pump()          # the pop freed a slot on every edge
         return out
 
     def _require_idle(self, what: str) -> None:
         # the whole-stream entry points own the schedule end to end; chunks
         # left in flight by manual feed() calls would surface as *this*
         # call's outputs/overflow and break the per-call contract
-        if self._in_flight:
+        if self._in_flight or self._src_q:
             raise RuntimeError(
                 "%s with %d chunk(s) already in flight — drain() them first"
-                % (what, self._in_flight)
+                % (what, self._in_flight + len(self._src_q))
             )
 
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
@@ -384,22 +513,25 @@ class PipelinedRuntime:
         ``depth`` chunks (default: the channel capacity, ≥ 2) are kept in
         flight: the sink consumes chunk *t* only after chunk *t+1*'s producer
         stages have been dispatched.  Only the last output is blocked on —
-        every intermediate hand-off stays on device.
+        every intermediate hand-off stays on device.  A ``depth`` beyond the
+        channel capacity is allowed: the excess waits in the host-side
+        source queue (accepted, not yet windowed), so in-flight device state
+        never exceeds the channels.
         Returns ``(outputs, overflow)`` like ``DSCEPRuntime.process_stream``:
         the overflow counts cover exactly the chunks of *this* call.
         """
         depth = self.channel_capacity if depth is None else depth
-        if not 1 <= depth <= self.channel_capacity:
-            raise ValueError("depth must be in [1, %d], got %d"
-                             % (self.channel_capacity, depth))
+        if depth < 1:
+            raise ValueError("depth must be >= 1, got %d" % depth)
         self._require_idle("process_stream")
+        target = min(depth, self.channel_capacity)
         before = dict(self._overflow_acc)    # device scalars, no sync
         outs: List[TripleBatch] = []
         for c in chunks:
-            if self._in_flight >= depth:
+            if self._in_flight >= target:
                 outs.append(self.drain())
             self.feed(c)
-        while self._in_flight:
+        while self._in_flight or self._src_q:
             outs.append(self.drain())
         if outs:
             jax.block_until_ready(outs[-1])  # sink-only synchronization
@@ -423,11 +555,14 @@ class PipelinedRuntime:
         """
         stats: Dict[str, Dict[str, int]] = {}
 
-        def one(edge: str, ch: Channel) -> None:
+        def one(edge: str, ch: Optional[Channel]) -> None:
             stats[edge] = {
-                "capacity": ch.capacity,
-                "size": int(ch.size),
-                "overflows": int(ch.overflows),
+                # a lazily-sized window channel reports its configured
+                # capacity before the first feed allocates it
+                "capacity": ch.capacity if ch is not None
+                else self.channel_capacity,
+                "size": int(ch.size) if ch is not None else 0,
+                "overflows": int(ch.overflows) if ch is not None else 0,
                 **self._edge_stats[edge],
             }
 

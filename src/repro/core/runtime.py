@@ -37,11 +37,13 @@ from .kb import KnowledgeBase, collect_kb_stats, pad_to
 from .operator import OperatorConfig, SCEPOperator
 from .planner import (
     OperatorDAG, SubQuery, augment_kb_with_closures, compile_query,
-    prepare_env, prune_kb_for,
+    plan_supports_delta, prepare_env, prune_kb_for, split_agg_plan,
 )
 from .rdf import TripleBatch, Vocab, empty_triples
 from .stream import merge_streams
-from .window import Windows, count_slides, count_windows, windows_from_slides
+from .window import (
+    Windows, count_slides, count_windows, window_slides, windows_from_slides,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +176,75 @@ def build_operators(
     return operators
 
 
+# --------------------------------------------------------------------------
+# split aggregation sink (see planner.split_agg_plan / engine's sink runners)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PubSpec:
+    """How one upstream operator publishes its binding table to the sink."""
+
+    vars: Tuple[str, ...]       # published variable names, table column order
+    cols: Tuple[int, ...]       # upstream-plan columns, same order
+    rows_cap: int               # windows-mode table rows (out_cap / templates)
+    slide_rows_cap: int         # delta-mode table rows (the chain's bind_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSink:
+    """A successfully split aggregation sink: the rewritten plan plus the
+    per-upstream table publication specs.  ``delta=True`` routes the sink
+    through the span-tagged slide path (one sink-chain pass per chunk)."""
+
+    plan: Plan
+    pub: Dict[str, PubSpec]
+    delta: bool
+
+
+def prepare_split_sink(
+    dag: OperatorDAG, operators: Dict[str, SCEPOperator],
+    config: RuntimeConfig, mesh: Optional[Mesh] = None,
+) -> Optional[SplitSink]:
+    """Try to split the aggregation sink for this DAG.
+
+    Returns ``None`` — the caller keeps the augmented-window path — when the
+    plan rewrite is outside the equivalent fragment
+    (:func:`~repro.core.planner.split_agg_plan`), when a sharding mesh is
+    attached (tables are not window-sharded), or when incremental mode is
+    requested but any plan in the DAG cannot run the delta path (mixing
+    per-window tables with a delta sink would need a third table format).
+
+    ``rows_cap`` mirrors the triple path's clipping exactly: an upstream
+    publishes ``templates-per-row * rows`` triples into ``out_cap``, so the
+    decode path ever sees at most ``out_cap // templates`` complete rows —
+    partial clipped rows decode to nothing.  The delta table instead carries
+    the whole chunk-level chain state, which ``bind_cap`` already bounds.
+    """
+    if mesh is not None:
+        return None
+    res = split_agg_plan(operators[dag.final].plan, dag)
+    if res is None:
+        return None
+    plan, pub_vars = res
+    delta = False
+    if config.incremental:
+        if not all(plan_supports_delta(operators[u].plan) for u in pub_vars):
+            return None
+        if not plan_supports_delta(plan):
+            return None
+        delta = True
+    pub = {
+        u: PubSpec(
+            vars=names,
+            cols=tuple(operators[u].plan.var_col(v) for v in names),
+            rows_cap=max(1, operators[u].plan.out_cap // max(1, len(names))),
+            slide_rows_cap=operators[u].plan.bind_cap,
+        )
+        for u, names in pub_vars.items()
+    }
+    return SplitSink(plan=plan, pub=pub, delta=delta)
+
+
 def augment_windows(
     dag: OperatorDAG, windows: Windows, upstream_out: Dict[str, TripleBatch]
 ) -> Windows:
@@ -223,6 +294,14 @@ class DSCEPRuntime:
         self.data_axis = data_axis
         self.vocab = vocab
         self.operators = build_operators(dag, kb, config)
+        # split aggregation sink: upstream operators ship binding tables,
+        # the sink joins them directly (None -> augmented-window path).
+        # The sink operator's plan is swapped for the rewritten one so
+        # every introspection surface (EXPLAIN, plan_caps, last_stats)
+        # reports the plan that actually runs.
+        self._split = prepare_split_sink(dag, self.operators, config, mesh)
+        if self._split is not None:
+            self.operators[dag.final].plan = self._split.plan
         self._jit_chunk = jax.jit(self._dag_impl)
         self.tracer = tracer
         self._collect = bool(tracer is not None and tracer.config.metrics)
@@ -244,6 +323,8 @@ class DSCEPRuntime:
     ):
         cfg = self.config
         merged = merge_streams([chunk])
+        if self._split is not None:
+            return self._dag_impl_split(merged, kbs, envs, with_stats)
         view = None
         if cfg.incremental and self.mesh is None:
             # delta evaluation needs the slide view; the materialized
@@ -291,6 +372,61 @@ class DSCEPRuntime:
         else:
             out_w, ovf = res
         overflow[final] = ovf
+        out = self.operators[final]._publish(out_w)
+        if with_stats:
+            return out, overflow, stats
+        return out, overflow
+
+    def _dag_impl_split(
+        self, merged: TripleBatch, kbs, envs, with_stats: bool = False,
+    ):
+        """The split-sink DAG step: upstream operators produce binding
+        *tables* (windowed or span-tagged), the sink joins them via its
+        rewritten BindingJoin plan over the raw windows — no augmented
+        window, no binding-graph decode scans."""
+        cfg = self.config
+        split = self._split
+        final = self.dag.final
+        overflow: Dict[str, jax.Array] = {}
+        stats: Dict[str, Dict[str, jax.Array]] = {}
+        tables: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+        if split.delta:
+            view = count_slides(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        else:
+            windows = count_windows(
+                merged, cfg.window_capacity, cfg.max_windows, cfg.window_step)
+        for name in self.dag.subqueries:
+            if name == final:
+                continue
+            spec = split.pub[name]
+            if split.delta:
+                res = self.operators[name].process_slide_tables(
+                    view, spec.cols, spec.slide_rows_cap,
+                    kbs[name], envs[name], with_stats)
+            else:
+                res = self.operators[name].process_window_tables(
+                    windows, spec.cols, spec.rows_cap,
+                    kbs[name], envs[name], with_stats)
+            if with_stats:
+                tables[name], ovf, stats[name] = res
+            else:
+                tables[name], ovf = res
+            # delta tables are chunk-level: broadcast the scalar flag to the
+            # per-window convention every overflow consumer expects
+            overflow[name] = (jnp.broadcast_to(ovf, (cfg.max_windows,))
+                              if ovf.ndim == 0 else ovf)
+        if split.delta:
+            res = self.operators[final].process_sink_slides(
+                view, tables, kbs[final], envs[final], with_stats)
+        else:
+            res = self.operators[final].process_sink_windows(
+                windows, tables, kbs[final], envs[final], with_stats)
+        if with_stats:
+            out_w, ovf_f, stats[final] = res
+        else:
+            out_w, ovf_f = res
+        overflow[final] = ovf_f
         out = self.operators[final]._publish(out_w)
         if with_stats:
             return out, overflow, stats

@@ -92,7 +92,7 @@ class ExecutionConfig:
     mesh: Optional[Any] = None         # SPMD window sharding (single_program)
     data_axis: str = "data"
     placement: Union[str, Dict[str, Any], None] = "round_robin"  # pipelined
-    channel_capacity: int = 2          # chunks in flight (pipelined)
+    channel_capacity: int = 4          # chunks in flight (pipelined)
     # per-query window geometry: when True, a registered query's
     # ``[RANGE TRIPLES n STEP m]`` clause overrides ``window_capacity`` for
     # that RegisteredQuery only, so one Session hosts queries with
@@ -292,10 +292,10 @@ class RegisteredQuery:
                 if rt._in_flight >= depth:
                     yield rt.drain()
                 rt.feed(c)
-            while rt._in_flight:
+            while rt._in_flight or rt._src_q:
                 yield rt.drain()
         finally:
-            while rt._in_flight:      # generator closed mid-stream
+            while rt._in_flight or rt._src_q:   # generator closed mid-stream
                 rt.drain()
 
     def overflow_totals(self) -> Dict[str, int]:

@@ -12,9 +12,29 @@ Mesh shapes (TPU v5e, 256 chips/pod):
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 from repro.compat import make_mesh
+
+
+def ensure_host_devices(n: int = 4) -> None:
+    """Make the CPU backend expose ``n`` devices via
+    ``--xla_force_host_platform_device_count``.
+
+    Must run before the jax backend initializes (importing jax is fine —
+    XLA_FLAGS is read at first backend use).  A caller-provided count in
+    ``XLA_FLAGS`` always wins; if the backend is already up with fewer
+    devices the flag is left alone so jax never sees a mid-process change.
+    Benchmarks and CI call this so ``place_operators`` round_robin has
+    real devices to spread enrichment operators over.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=%d" % n
+        ).strip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

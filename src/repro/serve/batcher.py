@@ -60,7 +60,8 @@ class QueryAdmission:
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "retired": 0,
             "rejected_queries": 0, "chunks_offered": 0,
-            "chunks_rejected": 0, "chunks_processed": 0, "ticks": 0,
+            "chunks_rejected": 0, "chunks_processed": 0,
+            "chunks_dropped": 0, "ticks": 0,
         }
 
     # -- query lifecycle -----------------------------------------------------
@@ -95,16 +96,55 @@ class QueryAdmission:
             admitted.append(unit.name)
         return admitted
 
-    def retire(self, name: str) -> None:
-        """Unregister a standing query and free its slot."""
+    def retire(self, name: str, drain: bool = True) -> None:
+        """Unregister a standing query and free its slot.
+
+        When this was the tenant's **last** admitted query (and the tenant
+        has nothing waiting in the admission queue), the tenant's chunk
+        queue and round-robin membership are torn down with it: with
+        ``drain=True`` (default) its queued chunks are processed through the
+        engine *before* unregistering — the retiring query still sees its
+        tenant's final chunks — with ``drain=False`` they are discarded and
+        counted as ``chunks_dropped``.  The round-robin cursor is
+        re-anchored around the removal so the rotation resumes at the same
+        neighbour — leaving the cursor untouched would skip or double-serve
+        a tenant, and leaving retired tenants in the rotation forever would
+        burn a tick slot on every revolution.
+        """
         for i, s in enumerate(self.slots):
             if s.name == name:
+                tenant = s.request.tenant if s.request else None
+                last = tenant is not None and not (
+                    any(o.request is not None and o.request.tenant == tenant
+                        for j, o in enumerate(self.slots) if j != i)
+                    or any(r.tenant == tenant for r in self.queue))
+                if last:
+                    self._teardown_tenant(tenant, drain)
                 self.engine.unregister(name)
                 self.slots[i] = QuerySlot()
                 self.counters["retired"] += 1
                 self.admit()               # backfill from the queue
                 return
         raise KeyError("no admitted query named %r" % name)
+
+    def _teardown_tenant(self, tenant: str, drain: bool) -> None:
+        q = self.chunk_queues.pop(tenant, None)
+        if q:
+            if drain:
+                while q:
+                    self.engine.process_chunk(q.popleft())
+                    self.counters["chunks_processed"] += 1
+            else:
+                self.counters["chunks_dropped"] += len(q)
+                q.clear()
+        if tenant in self._rr:
+            idx = self._rr.index(tenant)
+            pos = self._rr_next % len(self._rr)
+            self._rr.remove(tenant)
+            if not self._rr:
+                self._rr_next = 0
+            else:
+                self._rr_next = (pos - 1 if idx < pos else pos) % len(self._rr)
 
     def active(self) -> List[str]:
         return [s.name for s in self.slots if s.name is not None]

@@ -73,6 +73,36 @@ def test_fifo_through_ring_wraparound():
     assert int(ch.overflows) == 0
 
 
+def test_wraparound_at_capacity_four_with_interleaved_overflow():
+    """Deeper ring (the runtime default): fill to 4, overflow-drop a 5th,
+    partially drain, refill across the wrap point, and drain again — FIFO
+    order and the drop-new policy must hold through every phase.  Also pins
+    the guarded-scatter push: a push into a full ring must leave all four
+    stored payloads bit-intact (no slot may be clobbered before the full
+    check)."""
+    ch = channel.make_channel(_payload(0.0), capacity=4)
+    for i in (1, 2, 3, 4):
+        ch = channel.push_jit(ch, _payload(float(i)))
+    assert int(ch.size) == 4
+    ch = channel.push_jit(ch, _payload(99.0))      # full: dropped, counted
+    assert int(ch.size) == 4 and int(ch.overflows) == 1
+    seen = []
+    for _ in range(2):                             # head advances to slot 2
+        ch, got, ok = channel.pop_jit(ch)
+        assert bool(ok)
+        seen.append(int(got["n"]))
+    for i in (5, 6):                               # tail wraps to slots 0, 1
+        ch = channel.push_jit(ch, _payload(float(i)))
+    assert int(ch.size) == 4
+    ch = channel.push_jit(ch, _payload(98.0))      # full again post-wrap
+    assert int(ch.overflows) == 2
+    while int(ch.size):
+        ch, got, ok = channel.pop_jit(ch)
+        assert bool(ok)
+        seen.append(int(got["n"]))
+    assert seen == [1, 2, 3, 4, 5, 6], "dropped payloads leaked in or FIFO broke"
+
+
 def test_push_pop_compose_inside_one_jit_program():
     """An operator step embeds pop+compute+push in one donated program."""
 

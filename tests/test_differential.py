@@ -532,19 +532,31 @@ def test_engine_matches_python_oracle(q, seed):
 @settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
           derandomize=True)
 @given(q=exec_queries(), seed=st.integers(0, 2**16),
-       method=st.sampled_from(("scan", "auto")))
-def test_modes_bit_identical_on_generated_queries(q, seed, method):
+       method=st.sampled_from(("scan", "auto")),
+       depth=st.sampled_from((1, 3, 6)))
+def test_modes_bit_identical_on_generated_queries(q, seed, method, depth):
     """Cross-mode bit-identity, under both the scan baseline and the
     cost-based access planner (kb_method="auto" profiles each mode's own
     used-KB slices, so monolithic and decomposed plans may pick different
-    per-join methods/orders — the published streams must not care)."""
+    per-join methods/orders — the published streams must not care).
+
+    The pipelined runtime is additionally driven at a sampled schedule
+    depth: 1 (serial), 3 (in-flight overlap) and 6 (beyond the channel
+    capacity, so chunks wait in the host-side source queue) — the schedule
+    is an execution detail the published bytes must not depend on."""
     _, chunks = _chunks_for(seed)
     try:
         outs, ovfs = {}, {}
         for mode in MODES:
             sess = Session(CFG.replace(mode=mode, kb_method=method),
                            vocab=DW.vocab, kb=DW.kb)
-            outs[mode], ovfs[mode] = sess.register(q).run(chunks)
+            reg = sess.register(q)
+            if mode == "pipelined":
+                outs[mode], ovf = reg.runtime.process_stream(chunks,
+                                                             depth=depth)
+                ovfs[mode] = dict(ovf)
+            else:
+                outs[mode], ovfs[mode] = reg.run(chunks)
         for mode in MODES:
             assert not any(ovfs[mode].values()), (mode, ovfs[mode])
         for mode in MODES[1:]:
@@ -554,8 +566,8 @@ def test_modes_bit_identical_on_generated_queries(q, seed, method):
                         mode, i, col)
         assert ovfs["single_program"] == ovfs["pipelined"]
     except AssertionError:
-        _dump_failure("cross_mode", "seed=%d method=%s\nquery=%r"
-                      % (seed, method, q))
+        _dump_failure("cross_mode", "seed=%d method=%s depth=%d\nquery=%r"
+                      % (seed, method, depth, q))
         raise
 
 
@@ -643,6 +655,75 @@ def test_incremental_bit_identical_to_recompute_across_modes(q, seed, geom):
         _dump_failure("incremental",
                       "seed=%d geom=%r\nquery=%r" % (seed, geom, q))
         raise
+
+
+# --------------------------------------------------------------------------
+# multi-device dataflow: XLA_FLAGS must be set before the backend comes up,
+# so the forced-device-count configuration runs in a fresh subprocess
+# --------------------------------------------------------------------------
+
+_MULTI_DEVICE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+assert len(jax.devices()) == 4, jax.devices()
+import numpy as np
+from repro.core import paper_queries as PQ
+from repro.core.rdf import Vocab
+from repro.core.session import ExecutionConfig, Session
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks)
+
+vocab = Vocab()
+kbd = generate_kb(vocab, KBConfig(num_artists=12, num_shows=6,
+                                  filler_triples=40, seed=0))
+tweets = TweetSchema.create(vocab)
+pool = np.concatenate([kbd.artist_ids, kbd.show_ids])
+rows = generate_tweets(vocab, tweets, pool,
+                       TweetStreamConfig(num_tweets=24, mentions_min=2,
+                                         mentions_max=3, seed=0))
+chunks = list(stream_chunks(rows, 64))
+assert len(chunks) >= 2
+cfg = ExecutionConfig(window_capacity=64, max_windows=4, bind_cap=512,
+                      scan_cap=128, out_cap=512, intermediate_cap=256)
+q = PQ.q15(vocab, tweets, kbd.schema)
+single = Session(cfg.replace(mode="single_program"),
+                 vocab=vocab, kb=kbd.kb).register(q)
+piped = Session(cfg.replace(mode="pipelined"),
+                vocab=vocab, kb=kbd.kb).register(q)
+spread = {str(d) for d in piped.runtime.placement.values()}
+assert len(spread) >= 2, piped.runtime.placement
+outs_s, ovf_s = single.run(chunks)
+outs_p, ovf_p = piped.run(chunks)
+assert ovf_p == ovf_s, (ovf_p, ovf_s)
+for a, b in zip(outs_s, outs_p):
+    for ca, cb in zip(a, b):
+        assert bool((np.asarray(ca) == np.asarray(cb)).all())
+assert piped.runtime.depth_hw >= 2, piped.runtime.depth_hw
+print("MULTI_DEVICE_OK devices=%d spread=%d depth_hw=%d"
+      % (len(jax.devices()), len(spread), piped.runtime.depth_hw))
+"""
+
+
+def test_pipelined_bit_identical_across_forced_host_devices():
+    """Cross-device transport differential: with the CPU backend forced to
+    expose 4 devices, round_robin placement spreads the operators (channel
+    pushes become D2D copies) and the pipelined stream must still match the
+    single-program bytes exactly."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    res = subprocess.run(
+        [sys.executable, "-c", _MULTI_DEVICE_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "MULTI_DEVICE_OK" in res.stdout, res.stdout
 
 
 # --------------------------------------------------------------------------

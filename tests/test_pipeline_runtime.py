@@ -139,22 +139,28 @@ def test_channels_drained_and_lossless_after_stream(pworld):
         assert st["overflows"] == 0, edge
 
 
-def test_driver_misuse_raises(pworld):
+def test_driver_misuse_raises_and_feed_queues_past_capacity(pworld):
     _, _, reg_p = runtimes(pworld, "q16")
     piped = reg_p.runtime
+    cap = piped.channel_capacity
     with pytest.raises(RuntimeError):
         piped.drain()
     try:
-        piped.feed(pworld.chunks[0])
-        piped.feed(pworld.chunks[1])
-        with pytest.raises(RuntimeError):
-            piped.feed(pworld.chunks[2])       # channels full at capacity 2
+        # feed never raises on a full pipeline: chunks beyond the channel
+        # capacity wait in the host-side source queue instead
+        for _ in range(cap + 2):
+            piped.feed(pworld.chunks[0])
+        assert piped._in_flight == cap
+        assert len(piped._src_q) == 2
         with pytest.raises(RuntimeError):
             piped.process_stream(pworld.chunks)   # in-flight would leak in
         with pytest.raises(RuntimeError):
-            piped.process_chunk(pworld.chunks[2])
+            piped.process_chunk(pworld.chunks[1])
+        piped.drain()
+        # draining freed a slot; the queue backfills it in the same call
+        assert piped._in_flight == cap and len(piped._src_q) == 1
     finally:
-        while piped._in_flight:       # never leave the cached runtime dirty
+        while piped._in_flight or piped._src_q:   # never leave it dirty
             piped.drain()
 
 

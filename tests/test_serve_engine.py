@@ -273,6 +273,46 @@ def test_admission_drain_empties_all_tenants(world):
     assert len(outs) == 2 and adm.pending_chunks() == 0
 
 
+def test_retire_tears_down_tenant_and_keeps_round_robin_fair(world):
+    """Regression: retiring a tenant's last query used to leave its chunk
+    queue and round-robin membership behind forever (a burned tick slot per
+    revolution), and removing it without re-anchoring the cursor would skip
+    or double-serve a neighbouring tenant."""
+    eng = world.session().serve()
+    adm = eng.admission(num_slots=8, chunk_queue_cap=4)
+    names = {}
+    for tenant, text in zip(("a", "b", "c"), world.texts[:3]):
+        adm.submit(QueryRequest(text, tenant=tenant))
+        names[tenant] = adm.active()[-1]
+    adm.submit(QueryRequest(world.texts[3], tenant="c"))
+    second_c = adm.active()[-1]
+    for t in ("a", "b", "c"):
+        adm.offer_chunk(world.chunks[0], tenant=t)
+        adm.offer_chunk(world.chunks[1], tenant=t)
+    # advance the rotation so the cursor sits just past tenant a
+    tenant, _ = adm.tick()
+    assert tenant == "a"
+    # retire a's only query while a chunk is still queued: drop policy
+    adm.retire(names["a"], drain=False)
+    assert adm.counters["chunks_dropped"] == 1
+    assert "a" not in adm.chunk_queues and "a" not in adm._rr
+    # the rotation resumes at a's neighbour and alternates fairly
+    served = [adm.tick()[0] for _ in range(4)]
+    assert served == ["b", "c", "b", "c"]
+    assert adm.tick() is None
+    # retiring one of two queries of a live tenant keeps its queue
+    adm.offer_chunk(world.chunks[0], tenant="c")
+    adm.retire(second_c)
+    assert "c" in adm.chunk_queues and "c" in adm._rr
+    assert adm.pending_chunks() == 1
+    # drain policy: the retiring query still sees its tenant's last chunks
+    processed = adm.counters["chunks_processed"]
+    adm.retire(names["c"], drain=True)
+    assert adm.counters["chunks_processed"] == processed + 1
+    assert "c" not in adm.chunk_queues and adm._rr == ["b"]
+    assert adm.pending_chunks() == 0
+
+
 # --------------------------------------------------------------------------
 # deprecation shims: the LM scaffolding moved to repro.serve.lm
 # --------------------------------------------------------------------------
