@@ -120,6 +120,121 @@ def _stage_breakdown(world, base, q, chunks, query: str,
     return breakdown
 
 
+def _recovery_overhead(world, base, q, chunks, outs_single, iters,
+                       plain_median_s: float) -> dict:
+    """Cost of resilience: checkpoint-cadence overhead + time-to-recover.
+
+    Sweeps ``RecoveryConfig.checkpoint_every`` over {0, 2, 8} on the same
+    pipelined workload (0 = resilient bookkeeping but no mid-stream
+    snapshots) and reports each cadence's throughput against the plain
+    (recovery=None) pipelined baseline measured above.  Then injects one
+    ``crash_stage`` on a mid-stream chunk and reports time-to-recover as
+    the median faulted-pass minus median clean-pass wall time on the same
+    warmed runtime — both steady-state, so the difference isolates
+    checkpoint restore + replay.  Every pass is gated bit-exact against
+    the single-program stream.
+    """
+    from repro.core.faults import FaultEvent, FaultInjector, FaultPlan
+    from repro.core.recovery import RecoveryConfig
+
+    def check(outs):
+        assert len(outs) == len(outs_single)
+        for i, (a, b) in enumerate(zip(outs_single, outs)):
+            for col_a, col_b in zip(a, b):
+                assert bool(np.all(np.asarray(col_a) == np.asarray(col_b))), (
+                    "resilient chunk %d diverges from single-program" % i)
+
+    cadence = {}
+    for every in (0, 2, 8):
+        reg = make_session(world, base.replace(
+            mode="pipelined",
+            recovery=RecoveryConfig(checkpoint_every=every))).register(q)
+        outs, _ = reg.run(chunks)          # compile pass + correctness gate
+        check(outs)
+        ck_before = reg.last_stats["recovery"]["checkpoints"]
+        r = _throughput(lambda s=reg: s.run(chunks)[0], len(chunks), iters)
+        rec = reg.last_stats["recovery"]
+        cadence[str(every)] = {
+            **r,
+            "overhead_vs_plain_pipelined":
+                r["median_s"] / plain_median_s - 1.0,
+            "checkpoints_per_pass":
+                (rec["checkpoints"] - ck_before) / (iters + 1),
+            "checkpoint_bytes": rec["checkpoint_bytes"],
+        }
+    rows = [
+        [every, f"{r['median_s'] * 1e3:.1f} ms",
+         f"{r['overhead_vs_plain_pipelined'] * 100:+.1f}%",
+         f"{r['checkpoints_per_pass']:.1f}",
+         f"{r['checkpoint_bytes'] / 1024:.0f} KiB"]
+        for every, r in cadence.items()
+    ]
+    print(format_table(
+        "resilient pipelined: checkpoint cadence overhead",
+        ["checkpoint_every", "stream pass (median)", "vs plain piped",
+         "ckpts/pass", "ckpt size"], rows))
+
+    # -- time-to-recover from one injected mid-stream crash ------------------
+    crash_chunk = max(1, len(chunks) // 2)
+    plan = FaultPlan((FaultEvent("crash_stage", "source", crash_chunk),))
+    reg = make_session(world, base.replace(
+        mode="pipelined", faults=plan,
+        recovery=RecoveryConfig(checkpoint_every=2))).register(q)
+    check(reg.run(chunks)[0])              # compile pass (the crash fires here)
+    n = max(2, iters)
+    clean, faulted = [], []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(reg.run(chunks)[0])
+        clean.append(time.perf_counter() - t0)
+    restarts_before = reg.last_stats["recovery"]["restarts"]
+    for _ in range(n):
+        # each scheduled fault fires at most once per injector, so re-arm
+        # the schedule each pass — rebased onto this pass's seq window,
+        # because events key on the lifetime chunk seq, which keeps rising
+        # across passes on the warmed runtime
+        rebased = FaultPlan((FaultEvent(
+            "crash_stage", "source",
+            reg.runtime._next_seq + crash_chunk),))
+        reg.runtime._injector = FaultInjector(rebased)
+        t0 = time.perf_counter()
+        outs = reg.run(chunks)[0]
+        jax.block_until_ready(outs)
+        faulted.append(time.perf_counter() - t0)
+        check(outs)
+    rec = reg.last_stats["recovery"]
+    restarts = rec["restarts"] - restarts_before
+    assert restarts == n, (
+        "expected one restart per faulted pass, got %d over %d passes"
+        % (restarts, n))
+    crash = {
+        "crash_chunk": crash_chunk,
+        "checkpoint_every": 2,
+        "clean_pass_median_s": float(np.median(clean)),
+        "faulted_pass_median_s": float(np.median(faulted)),
+        "time_to_recover_s":
+            float(np.median(faulted) - np.median(clean)),
+        "restarts_per_faulted_pass": restarts / n,
+        "replayed_total": rec["replayed"],
+        "bit_exact_after_recovery": True,
+    }
+    print("[bench_pipeline] crash on chunk %d: clean pass %.1f ms, "
+          "faulted pass %.1f ms, time-to-recover %.1f ms"
+          % (crash_chunk, crash["clean_pass_median_s"] * 1e3,
+             crash["faulted_pass_median_s"] * 1e3,
+             crash["time_to_recover_s"] * 1e3))
+    return {
+        "what": "resilience cost on the same pipelined workload: throughput "
+                "per checkpoint cadence (0 = no mid-stream snapshots) vs "
+                "the plain recovery=None baseline, plus time-to-recover "
+                "from one injected mid-stream crash_stage (steady-state "
+                "faulted-pass minus clean-pass median); every pass gated "
+                "bit-exact against the single-program stream",
+        "checkpoint_cadence": cadence,
+        "crash_recovery": crash,
+    }
+
+
 def run(iters: Optional[int] = None, smoke: bool = False,
         query: str = "cquery1", kb_method: str = "auto"):
     if iters is None:
@@ -254,6 +369,11 @@ def run(iters: Optional[int] = None, smoke: bool = False,
                        ["kb_method", "stream pass (median)", "chunks/s"],
                        rows))
 
+    # -- resilience cost: checkpoint cadence + time-to-recover ---------------
+    recovery_overhead = _recovery_overhead(
+        world, base, q, chunks, outs_single, iters,
+        plain_median_s=results["pipelined"]["median_s"])
+
     # -- per-stage breakdown: where does each runtime spend its time? --------
     stage_breakdown = _stage_breakdown(world, base, q, chunks, query)
 
@@ -281,6 +401,7 @@ def run(iters: Optional[int] = None, smoke: bool = False,
             "bit_exact_across_methods": True,
             "results": kb_access,
         },
+        "recovery_overhead": recovery_overhead,
         "stage_breakdown": {
             "what": "per-stage span aggregates from separate traced "
                     "sessions (tracing fences each stage, so the headline "

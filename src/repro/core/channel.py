@@ -125,6 +125,23 @@ def occupancy(ch: Channel) -> jax.Array:
     return ch.size
 
 
+def snapshot(ch: Channel) -> Channel:
+    """Deep host copy of a channel's ring state (checkpoint ingredient).
+
+    Channel buffers are *donated* to every push/pop step — holding a device
+    reference across a step reads deleted buffers, so a checkpoint must
+    materialize the ring on host.  ``device_get`` blocks until in-flight
+    writes land, making the copy a consistent cut."""
+    return jax.device_get(ch)
+
+
+def restore(snap: Channel, device=None) -> Channel:
+    """Re-materialize a :func:`snapshot` on device (the consumer's device
+    under placement, mirroring :func:`make_channel` allocation)."""
+    return jax.device_put(snap, device) if device is not None \
+        else jax.device_put(snap)
+
+
 # jitted conveniences with in-place (donated) channel state — an operator
 # step embeds push/pop in its own program instead, but tests and host-side
 # drivers use these directly.

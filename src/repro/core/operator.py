@@ -205,6 +205,20 @@ class SCEPOperator:
         """Publisher: flatten [W, cap] window outputs into one ordered chunk."""
         return publish_chunk(out_w, self.config.out_stream_cap)
 
+    # -- checkpoint surface (repro.core.recovery) ------------------------------
+    def state(self) -> Dict[str, jax.Array]:
+        """Host snapshot of the operator's device-resident state — the env
+        tables its steps read (published bindings, delta carry).  Blocks
+        until pending computation on them completes, so a checkpoint is
+        always a consistent cut."""
+        return jax.device_get(self.env)
+
+    def restore_state(self, snap: Dict[str, jax.Array], device=None) -> None:
+        """Re-materialize a :meth:`state` snapshot (optionally committed to
+        the operator's placed device, matching construction)."""
+        self.env = (jax.device_put(snap, device) if device is not None
+                    else jax.device_put(snap))
+
     # -- public API -----------------------------------------------------------
     def process(self, chunks: Sequence[TripleBatch]) -> Tuple[TripleBatch, jax.Array]:
         """Process one round of input chunks; returns (output chunk, overflow[W])."""

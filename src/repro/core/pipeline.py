@@ -39,8 +39,9 @@ boundaries instead of fused into one program.
 from __future__ import annotations
 
 import functools
+import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,9 +51,16 @@ from repro.obs.trace import Tracer, span_or_null
 
 from . import channel
 from .channel import Channel
+from .faults import FaultInjector, FaultPlan, InjectedCrash, corrupt_batch, validate_chunk
 from .kb import KnowledgeBase
 from .planner import OperatorDAG
 from .rdf import TripleBatch, Vocab, empty_triples
+from .recovery import (
+    ChannelDesyncError, Checkpoint, ChunkRejectedError, PipelineStalledError,
+    RecoveryConfig, RecoveryExhaustedError, StageTimeoutError,
+    copy_edge_stats, empty_recovery_stats, restore_tree, snapshot_stats_acc,
+    snapshot_tree, tree_bytes, wait_until_ready,
+)
 from .runtime import (
     RuntimeConfig, _warn_legacy_constructor, augment_windows, build_operators,
     prepare_split_sink,
@@ -112,6 +120,8 @@ class PipelinedRuntime:
         placement: Optional[Dict[str, Any]] = None,
         channel_capacity: int = 4,
         tracer: Optional[Tracer] = None,
+        faults: Optional[FaultPlan] = None,
+        recovery: Optional[RecoveryConfig] = None,
     ):
         _warn_legacy_constructor("PipelinedRuntime", "pipelined")
         if channel_capacity < 2:
@@ -178,12 +188,18 @@ class PipelinedRuntime:
             # window channel is allocated lazily (see _ensure_win_channel)
             self._agg_win_ch: Optional[Channel] = None
             self._win_sig = None
+            self._win_example = None
         else:
+            self._win_sig = None
+            self._win_example = win_example
             self._agg_win_ch = self._on_device(
                 channel.make_channel(win_example, channel_capacity),
                 self.final)
         up_out_cap = min(cfg.intermediate_cap, cfg.out_cap)
         self._out_ch: Dict[str, Channel] = {}
+        # per-edge payload examples are retained so a degraded rebuild can
+        # re-allocate fresh empty channels with identical shapes
+        self._pub_examples: Dict[str, Any] = {}
         for name in self.upstream:
             if self._split is not None:
                 spec = self._split.pub[name]
@@ -200,6 +216,7 @@ class PipelinedRuntime:
                 pub_example = (table, jnp.zeros((cfg.max_windows,), bool))
             else:
                 pub_example = _zeros_publication(cfg.max_windows, up_out_cap)
+            self._pub_examples[name] = pub_example
             self._out_ch[name] = self._on_device(
                 channel.make_channel(pub_example, channel_capacity),
                 self.final)
@@ -255,6 +272,38 @@ class PipelinedRuntime:
         # host driver, so these cost nothing on device)
         self._edge_stats: Dict[str, Dict[str, int]] = {
             e: {"pushes": 0, "pops": 0, "depth_hw": 0} for e in self._edges()
+        }
+
+        # --- fault tolerance (repro.core.faults / repro.core.recovery).
+        # Everything below is host-side bookkeeping: the jitted stage steps
+        # above are built identically whether or not faults/recovery are
+        # enabled (zero-overhead pin in tests/test_faults.py).
+        self._injector = FaultInjector(faults) if faults is not None else None
+        if recovery is None and faults is not None:
+            recovery = RecoveryConfig()      # chaos implies the default ladder
+        self._rcfg = recovery
+        self._resilient = recovery is not None
+        # lifetime chunk sequence numbers: assigned at feed(), monotonically
+        # increasing, never reused — the dedup key for replayed outputs
+        self._next_seq = 0
+        self._emitted_hw = -1                # highest seq whose output left drain()
+        self._inflight_seqs: List[int] = []  # seqs windowed into channels, FIFO
+        # bounded replay buffer: pristine fed chunks past the last
+        # checkpoint's emitted watermark (pruned at every checkpoint)
+        self._retained: Dict[int, TripleBatch] = {}
+        self._degraded: Set[int] = set()     # seqs past max_restarts
+        self._degraded_out: Dict[int, Tuple[TripleBatch, Dict[str, jax.Array]]] = {}
+        self._fail_counts: Dict[int, int] = {}
+        self._ckpt: Optional[Checkpoint] = None
+        self._fallback_step = None           # channel-free per-chunk program
+        # global restart budget: injected events fire once each, so any
+        # recovery loop terminates well inside this bound — exceeding it
+        # means a persistent non-chunk-attributable fault
+        self._restart_budget = 64 + 4 * (len(faults.events) if faults else 0)
+        self._rec: Dict[str, int] = {
+            "retries": 0, "restarts": 0, "replayed": 0, "deduped": 0,
+            "checkpoints": 0, "checkpoint_bytes": 0, "rejected": 0,
+            "corrupt_recovered": 0,
         }
 
     def _edges(self) -> List[str]:
@@ -391,10 +440,81 @@ class PipelinedRuntime:
                 channel.make_channel(example, self.channel_capacity),
                 self.final)
             self._win_sig = sig
-        elif getattr(self, "_win_sig", sig) != sig:
+        elif self._win_sig is not None and self._win_sig != sig:
             raise RuntimeError(
                 "split-delta pipelining requires uniform chunk shapes: the "
                 "window channel was sized for a different chunk capacity")
+
+    # -- fault-tolerant dispatch wrappers ------------------------------------
+    def _run_stage(self, stage: str, seq: int, thunk, retryable: bool = True):
+        """Dispatch one stage step through the fault ladder.
+
+        Without recovery enabled this is a plain ``thunk()`` — zero
+        overhead.  With it: injected crashes raise :class:`InjectedCrash`
+        (handled by checkpoint restore), injected stalls and real per-stage
+        timeouts surface as :class:`StageTimeoutError` and are retried with
+        bounded exponential backoff.  ``retryable=False`` (the sink, whose
+        step *donates* its channel state — re-invoking would read deleted
+        buffers) escalates a real timeout straight to restore; injected
+        stalls fire before dispatch and are always retryable.
+        """
+        if not self._resilient:
+            return thunk()
+        inj, rc = self._injector, self._rcfg
+        if inj is not None and inj.take("crash_stage", stage, seq):
+            raise InjectedCrash(stage, seq)
+        attempts = 0
+        while True:
+            try:
+                if inj is not None and inj.take("stall_stage", stage, seq):
+                    raise StageTimeoutError(
+                        stage, seq, rc.stage_timeout_s, injected=True)
+                out = thunk()
+                if rc.stage_timeout_s is not None and not wait_until_ready(
+                        out, rc.stage_timeout_s):
+                    raise StageTimeoutError(stage, seq, rc.stage_timeout_s)
+            except StageTimeoutError as err:
+                attempts += 1
+                if attempts > rc.max_retries or (
+                        not err.injected and not retryable):
+                    raise
+                self._rec["retries"] += 1
+                time.sleep(rc.backoff_s * (2 ** (attempts - 1)))
+                continue
+            return out
+
+    def _push_payload(self, stage: str, edge: str, seq: int, payload) -> None:
+        """Push a stage's outbound payload, subject to transport faults.
+
+        ``drop_payload`` skips both the push and the ledger — the host
+        ledger mirrors device truth, and the loss surfaces as a
+        :class:`ChannelDesyncError` when the sink's pre-pop audit compares
+        the ledger against the chunks in flight.  ``duplicate_payload``
+        pushes (and ledgers) twice — at-least-once transport without dedup.
+        """
+        inj = self._injector
+        if inj is not None and inj.take("drop_payload", stage, seq):
+            return
+        dev_payload = self._on_device(payload, self.final)
+        dup = inj is not None and inj.take("duplicate_payload", stage, seq)
+        for _ in range(2 if dup else 1):
+            if stage == "source":
+                self._agg_win_ch = channel.push_jit(
+                    self._agg_win_ch, dev_payload)
+            else:
+                self._out_ch[stage] = channel.push_jit(
+                    self._out_ch[stage], dev_payload)
+            self._edge_pushed(edge)
+
+    def _check_desync(self) -> None:
+        """Pre-pop audit: every edge must hold exactly one payload per chunk
+        in flight, or the sink would join mismatched windows."""
+        expected = self._in_flight
+        for edge in self._edges():
+            e = self._edge_stats[edge]
+            actual = e["pushes"] - e["pops"]
+            if actual != expected:
+                raise ChannelDesyncError(edge, actual, expected)
 
     def _pump(self) -> None:
         """Advance every stage whose outbound edge has room.
@@ -409,37 +529,51 @@ class PipelinedRuntime:
         tr = self.tracer
         src_edge = "source->%s" % self.final
         while self._src_q and self._edge_room(src_edge):
-            chunk = self._src_q.popleft()
+            seq, chunk = self._src_q.popleft()
             with span_or_null(tr, "stage:source") as sp:
-                sink_payload, op_payload = self._win_step(chunk)
+                sink_payload, op_payload = self._run_stage(
+                    "source", seq, lambda: self._win_step(chunk))
                 sp.fence(sink_payload)
             self._ensure_win_channel(sink_payload)
-            self._agg_win_ch = channel.push_jit(
-                self._agg_win_ch, self._on_device(sink_payload, self.final))
-            self._edge_pushed(src_edge)
+            self._push_payload("source", src_edge, seq, sink_payload)
             for name in self.upstream:
-                self._disp_q[name].append(op_payload)
+                self._disp_q[name].append((seq, op_payload))
             self._in_flight += 1
+            self._inflight_seqs.append(seq)
             self.depth_hw = max(self.depth_hw, self._in_flight)
         for name in self.upstream:
             edge = "%s->%s" % (name, self.final)
             q = self._disp_q[name]
             op = self.operators[name]
             while q and self._edge_room(edge):
-                payload = q.popleft()
+                seq, payload = q.popleft()
                 with span_or_null(tr, "stage:%s" % name) as sp:
-                    if self._collect:
-                        publication, stats = self._op_step_stats[name](
-                            self._on_device(payload, name), op.kb, op.env)
+                    def step(name=name, payload=payload, op=op):
+                        if self._collect:
+                            return self._op_step_stats[name](
+                                self._on_device(payload, name), op.kb, op.env)
+                        return self._op_step[name](
+                            self._on_device(payload, name), op.kb, op.env), None
+                    publication, stats = self._run_stage(name, seq, step)
+                    if stats is not None:
                         merge_stats(self._stats_acc[name], stats)
-                    else:
-                        publication = self._op_step[name](
-                            self._on_device(payload, name), op.kb, op.env)
                     sp.fence(publication)
-                self._out_ch[name] = channel.push_jit(
-                    self._out_ch[name],
-                    self._on_device(publication, self.final))
-                self._edge_pushed(edge)
+                self._push_payload(name, edge, seq, publication)
+
+    def _pump_guarded(self) -> None:
+        """``_pump`` under the recovery ladder: a stage fault during pumping
+        restores the last checkpoint and pumps again (bounded by the global
+        restart budget inside :meth:`_handle_fault`)."""
+        if not self._resilient:
+            self._pump()
+            return
+        while True:
+            try:
+                self._pump()
+                return
+            except (InjectedCrash, StageTimeoutError) as err:
+                self._handle_fault(getattr(err, "stage", None),
+                                   getattr(err, "seq", None))
 
     def feed(self, chunk: TripleBatch) -> None:
         """Accept one chunk and dispatch every stage with room (async).
@@ -447,9 +581,41 @@ class PipelinedRuntime:
         Never raises on a full pipeline: chunks beyond the channel capacity
         wait in the host-side source queue and are windowed/dispatched as
         ``drain()`` frees slots.  Nothing here blocks on device values.
+
+        With recovery enabled the chunk first passes the
+        :func:`~repro.core.faults.validate_chunk` ingest gate (a malformed
+        chunk raises :class:`ChunkRejectedError` and leaves the pipeline
+        untouched) and a pristine copy enters the bounded replay buffer
+        before the — possibly corrupted-in-transit — ingest copy is queued.
         """
-        self._src_q.append(chunk)
-        self._pump()
+        if not self._resilient:
+            self._src_q.append((self._next_seq, chunk))
+            self._next_seq += 1
+            self._pump()
+            return
+        rc = self._rcfg
+        if rc.validate:
+            reasons = validate_chunk(chunk, self.vocab, rc.max_graph_size)
+            if reasons:
+                self._rec["rejected"] += 1
+                raise ChunkRejectedError(reasons)
+        if self._ckpt is None:
+            self._take_checkpoint()       # clean-state checkpoint 0
+        seq = self._next_seq
+        self._next_seq += 1
+        self._retained[seq] = chunk       # pristine, pre-transit
+        ingest = chunk
+        inj = self._injector
+        if inj is not None and inj.take("corrupt_chunk", "ingest", seq):
+            ingest = corrupt_batch(chunk)
+        if ingest is not chunk and validate_chunk(
+                ingest, self.vocab, rc.max_graph_size):
+            # the gate caught in-transit corruption: recover the pristine
+            # replay-buffer copy instead of poisoning the jitted steps
+            self._rec["corrupt_recovered"] += 1
+            ingest = self._retained[seq]
+        self._src_q.append((seq, ingest))
+        self._pump_guarded()
 
     def drain(self) -> TripleBatch:
         """Dispatch the sink stage for the oldest in-flight chunk.
@@ -458,44 +624,327 @@ class PipelinedRuntime:
         when the host needs the values).  Per-operator overflow flags are
         accumulated device-side; read them with :meth:`overflow_totals`.
         """
+        if self._resilient:
+            return self._drain_resilient()
         self._pump()
         if self._in_flight == 0:
+            if self._src_q:
+                raise PipelineStalledError(self._stall_detail())
             raise RuntimeError("nothing in flight; feed() first")
+        _seq, out = self._drain_once()
+        self._pump()          # the pop freed a slot on every edge
+        return out
+
+    def _drain_once(self) -> Tuple[int, TripleBatch]:
+        """The sink dispatch shared by the plain and resilient drains:
+        pop every edge, join, accumulate overflow, retire the head seq."""
         # equal edge capacities guarantee the operator stages kept pace with
         # the source stage — the sink never pops an unmatched window
         assert all(not q for q in self._disp_q.values()), (
             "operator dispatch queues lag the window edge; per-edge "
             "capacities require a schedule-aware sink")
+        seq = self._inflight_seqs[0] if self._inflight_seqs else -1
         final_op = self.operators[self.final]
         with span_or_null(self.tracer, "stage:%s" % self.final) as sp:
-            if self._collect:
-                (self._agg_win_ch, self._out_ch, out, overflow,
-                 stats) = self._sink_step_stats(
-                    self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
+            def step():
+                if self._collect:
+                    return self._sink_step_stats(
+                        self._agg_win_ch, self._out_ch, final_op.kb,
+                        final_op.env)
+                return self._sink_step(
+                    self._agg_win_ch, self._out_ch, final_op.kb,
+                    final_op.env) + (None,)
+            res = self._run_stage(self.final, seq, step, retryable=False)
+            self._agg_win_ch, self._out_ch, out, overflow, stats = res
+            if stats is not None:
                 merge_stats(self._stats_acc[self.final], stats)
-            else:
-                self._agg_win_ch, self._out_ch, out, overflow = self._sink_step(
-                    self._agg_win_ch, self._out_ch, final_op.kb, final_op.env)
             sp.fence(out)
         for edge in self._edges():
             self._edge_popped(edge)
+        self._accumulate_overflow(overflow)
+        self._last_overflow = overflow
+        self._in_flight -= 1
+        if self._inflight_seqs:
+            self._inflight_seqs.pop(0)
+        return seq, out
+
+    def _accumulate_overflow(self, overflow: Dict[str, jax.Array]) -> None:
         for name, flags in overflow.items():
             self._overflow_acc[name] = (
                 self._overflow_acc[name] + jnp.sum(flags.astype(jnp.int32))
             )
-        self._last_overflow = overflow
-        self._in_flight -= 1
-        self._pump()          # the pop freed a slot on every edge
-        return out
+
+    def _drain_resilient(self) -> TripleBatch:
+        """Recovery-aware drain: emit the lowest pending seq exactly once.
+
+        Replayed drains of already-emitted seqs advance channel state and
+        re-accumulate their overflow (the accumulators were restored to the
+        checkpoint, so totals stay exact) but their outputs are *discarded*
+        — the sequence-number dedup that makes recovery bit-exact.
+        Degraded seqs bypass the channels entirely via the fallback program.
+        """
+        self._pump_guarded()
+        while True:
+            # flush degraded outputs whose seqs were already emitted
+            for s in [s for s in self._degraded_out
+                      if s <= self._emitted_hw]:
+                _out, ovf = self._degraded_out.pop(s)
+                self._accumulate_overflow(ovf)
+                self._rec["deduped"] += 1
+            cand = []
+            if self._inflight_seqs:
+                cand.append(self._inflight_seqs[0])
+            if self._degraded_out:
+                cand.append(min(self._degraded_out))
+            if not cand:
+                if self._src_q:
+                    raise PipelineStalledError(self._stall_detail())
+                raise RuntimeError("nothing in flight; feed() first")
+            s = min(cand)
+            if s in self._degraded_out and (
+                    not self._inflight_seqs or s < self._inflight_seqs[0]):
+                out, ovf = self._degraded_out.pop(s)
+                self._accumulate_overflow(ovf)
+                self._last_overflow = ovf
+                self._emitted_hw = s
+                self._maybe_checkpoint()
+                return out
+            try:
+                self._check_desync()
+                seq, out = self._drain_once()
+            except (InjectedCrash, StageTimeoutError,
+                    ChannelDesyncError) as err:
+                self._handle_fault(getattr(err, "stage", None),
+                                   getattr(err, "seq", None))
+                self._pump_guarded()
+                continue
+            if seq <= self._emitted_hw:
+                self._rec["deduped"] += 1     # replayed output: discard
+                self._pump_guarded()
+                continue
+            self._emitted_hw = seq
+            self._maybe_checkpoint()
+            self._pump_guarded()
+            return out
+
+    def _stall_detail(self) -> str:
+        blocked = [e for e in self._edges() if not self._edge_room(e)]
+        return (
+            "%d chunk(s) queued at the source but nothing is in flight to "
+            "drain and no stage can advance; blocked edge(s): %s"
+            % (len(self._src_q),
+               ", ".join(blocked) if blocked else
+               "none (driver accounting bug)"))
+
+    # -- checkpoint / restore ------------------------------------------------
+    def _take_checkpoint(self) -> None:
+        """Snapshot a consistent cut of driver + device state to host.
+
+        Channel rings are deep-copied (their buffers are donated to the next
+        step); queue payloads and raw chunks are produced by non-donating
+        steps, so references suffice.  The replay buffer is pruned to seqs
+        past the new checkpoint's emitted watermark.
+        """
+        ck = Checkpoint(
+            fed=self._next_seq,
+            emitted=self._emitted_hw,
+            in_flight=self._in_flight,
+            inflight_seqs=list(self._inflight_seqs),
+            src_q=list(self._src_q),
+            disp_q={n: list(q) for n, q in self._disp_q.items()},
+            win_ch=snapshot_tree(self._agg_win_ch),
+            win_sig=self._win_sig,
+            out_ch={n: snapshot_tree(c) for n, c in self._out_ch.items()},
+            overflow_acc=snapshot_tree(self._overflow_acc),
+            stats_acc=snapshot_stats_acc(self._stats_acc),
+            edge_stats=copy_edge_stats(self._edge_stats),
+            envs={n: op.state() for n, op in self.operators.items()},
+            degraded_out=dict(self._degraded_out),
+        )
+        ck.nbytes = (tree_bytes(ck.win_ch)
+                     + tree_bytes(list(ck.out_ch.values()))
+                     + tree_bytes(ck.envs))
+        self._ckpt = ck
+        self._rec["checkpoints"] += 1
+        self._rec["checkpoint_bytes"] = ck.nbytes
+        for s in [s for s in self._retained if s <= ck.emitted]:
+            del self._retained[s]
+
+    def _maybe_checkpoint(self) -> None:
+        ce = self._rcfg.checkpoint_every
+        if ce and (self._emitted_hw + 1) % ce == 0:
+            self._take_checkpoint()
+
+    def _final_device(self):
+        return self.placement[self.final] if self.placement else None
+
+    def _restore_common(self, ck: Checkpoint) -> None:
+        self._overflow_acc = restore_tree(ck.overflow_acc)
+        self._stats_acc = {
+            n: (dict(restore_tree(a)) if a else {})
+            for n, a in ck.stats_acc.items()
+        }
+        for n, op in self.operators.items():
+            op.restore_state(
+                ck.envs[n], self.placement[n] if self.placement else None)
+
+    def _restore_full(self, ck: Checkpoint) -> None:
+        """Restore the checkpoint state verbatim and re-feed every retained
+        chunk that entered after it — the plain restart path."""
+        fdev = self._final_device()
+        self._agg_win_ch = restore_tree(ck.win_ch, fdev)
+        self._win_sig = ck.win_sig
+        self._out_ch = {n: restore_tree(c, fdev)
+                        for n, c in ck.out_ch.items()}
+        self._edge_stats = copy_edge_stats(ck.edge_stats)
+        self._in_flight = ck.in_flight
+        self._inflight_seqs = list(ck.inflight_seqs)
+        self._src_q = deque(ck.src_q)
+        self._disp_q = {n: deque(q) for n, q in ck.disp_q.items()}
+        self._degraded_out = dict(ck.degraded_out)
+        self._restore_common(ck)
+        refed = sorted(s for s in self._retained
+                       if ck.fed <= s < self._next_seq)
+        for s in refed:
+            if s in self._degraded:
+                self._degraded_out[s] = self._run_fallback(s)
+            else:
+                self._src_q.append((s, self._retained[s]))
+        self._rec["replayed"] += len(refed)
+
+    def _rebuild_degraded(self, ck: Checkpoint) -> None:
+        """Restart with a degraded seq pending: the faulting chunk cannot be
+        allowed back into the channels (it would fault the same stage
+        again), so the channels are rebuilt empty, every non-emitted seq is
+        re-fed from the replay buffer, and degraded seqs are evaluated
+        through the channel-free fallback program instead."""
+        if self._win_example is None:
+            self._agg_win_ch = None          # lazy split-delta: re-sized on
+            self._win_sig = None             # the next source dispatch
+        else:
+            self._agg_win_ch = self._on_device(
+                channel.make_channel(self._win_example, self.channel_capacity),
+                self.final)
+        self._out_ch = {
+            n: self._on_device(
+                channel.make_channel(self._pub_examples[n],
+                                     self.channel_capacity), self.final)
+            for n in self.upstream
+        }
+        self._edge_stats = copy_edge_stats(ck.edge_stats)
+        for e in self._edge_stats.values():
+            e["pushes"] = e["pops"]          # rebuilt channels are empty
+        self._in_flight = 0
+        self._inflight_seqs = []
+        self._src_q = deque()
+        self._disp_q = {n: deque() for n in self.upstream}
+        self._degraded_out = {}
+        self._restore_common(ck)
+        pending = sorted(s for s in self._retained
+                         if ck.emitted < s < self._next_seq)
+        for s in pending:
+            if s in self._degraded:
+                self._degraded_out[s] = self._run_fallback(s)
+            else:
+                self._src_q.append((s, self._retained[s]))
+        self._rec["replayed"] += len(pending)
+
+    def _handle_fault(self, stage: Optional[str], seq: Optional[int]) -> None:
+        """One rung down the degradation ladder: account the failure to a
+        seq, degrade it once it exhausts ``max_restarts``, and restore the
+        last checkpoint (full restore, or the degraded rebuild when a
+        pending seq is being routed around the channels)."""
+        if self._ckpt is None:               # fault before any feed
+            raise RecoveryExhaustedError(
+                "fault in stage %r before any checkpoint exists" % stage)
+        self._restart_budget -= 1
+        if self._restart_budget < 0:
+            raise RecoveryExhaustedError(
+                "restart budget exhausted recovering stage %r (seq %s) — "
+                "the fault is persistent and not attributable to one chunk"
+                % (stage, seq))
+        key = seq if seq is not None and seq >= 0 else (
+            self._inflight_seqs[0] if self._inflight_seqs else -1)
+        if key >= 0:
+            self._fail_counts[key] = self._fail_counts.get(key, 0) + 1
+            if self._fail_counts[key] > self._rcfg.max_restarts:
+                self._degraded.add(key)
+        self._rec["restarts"] += 1
+        ck = self._ckpt
+        if any(s > ck.emitted for s in self._degraded):
+            self._rebuild_degraded(ck)
+        else:
+            self._restore_full(ck)
+
+    # -- graceful degradation: the channel-free fallback program --------------
+    def _fallback_impl(self, chunk: TripleBatch, kbs, envs):
+        """The pipeline's per-chunk computation with the channels cut out:
+        windows → every upstream step → sink join → publish, composed from
+        the *same* stage implementations in one program.  For a real chunk
+        every pop-validity mask in :meth:`_sink_impl` is True, so omitting
+        them here is value-identical — degraded output matches the piped
+        (and monolithic) bytes exactly."""
+        sink_payload, op_payload = self._windows_impl(chunk)
+        final_op = self.operators[self.final]
+        overflow: Dict[str, jax.Array] = {}
+        if self._split is not None:
+            tables: Dict[str, Any] = {}
+            for name in self.upstream:
+                table, ovf = self._op_impl(
+                    name, op_payload, kbs[name], envs[name])
+                tables[name] = table
+                overflow[name] = ovf
+            if self._split.delta:
+                out_w, ovf_f = final_op.process_sink_slides(
+                    sink_payload, tables, kbs[self.final], envs[self.final])
+            else:
+                out_w, ovf_f = final_op.process_sink_windows(
+                    sink_payload, tables, kbs[self.final], envs[self.final])
+        else:
+            upstream_out: Dict[str, TripleBatch] = {}
+            for name in self.upstream:
+                tb, ovf = self._op_impl(
+                    name, op_payload, kbs[name], envs[name])
+                upstream_out[name] = tb
+                overflow[name] = ovf
+            aug = augment_windows(self.dag, sink_payload, upstream_out)
+            out_w, ovf_f = final_op.process_windows(
+                aug, kbs[self.final], envs[self.final])
+        overflow[self.final] = ovf_f
+        out = final_op._publish(out_w)
+        return out, overflow
+
+    def _run_fallback(self, seq: int):
+        """Evaluate one degraded seq through the fallback program (compiled
+        on first degradation; the happy path never builds it)."""
+        if self._fallback_step is None:
+            self._fallback_step = jax.jit(self._fallback_impl)
+        chunk = self._retained[seq]
+        kbs = {n: op.kb for n, op in self.operators.items()}
+        envs = {n: op.env for n, op in self.operators.items()}
+        if self.placement is not None:
+            # one program cannot span devices: gather onto the sink's device
+            fdev = self._final_device()
+            chunk = jax.device_put(chunk, fdev)
+            kbs = {n: (jax.device_put(kb, fdev) if kb is not None else None)
+                   for n, kb in kbs.items()}
+            envs = jax.device_put(envs, fdev)
+        return self._fallback_step(chunk, kbs, envs)
+
+    def _pending_count(self) -> int:
+        """Chunks accepted but not yet emitted (drives the stream loops)."""
+        degraded_pending = sum(
+            1 for s in self._degraded_out if s > self._emitted_hw)
+        return self._in_flight + len(self._src_q) + degraded_pending
 
     def _require_idle(self, what: str) -> None:
         # the whole-stream entry points own the schedule end to end; chunks
         # left in flight by manual feed() calls would surface as *this*
         # call's outputs/overflow and break the per-call contract
-        if self._in_flight or self._src_q:
+        if self._pending_count():
             raise RuntimeError(
                 "%s with %d chunk(s) already in flight — drain() them first"
-                % (what, self._in_flight + len(self._src_q))
+                % (what, self._pending_count())
             )
 
     def process_chunk(self, chunk: TripleBatch) -> Tuple[TripleBatch, Dict[str, jax.Array]]:
@@ -531,10 +980,21 @@ class PipelinedRuntime:
             if self._in_flight >= target:
                 outs.append(self.drain())
             self.feed(c)
-        while self._in_flight or self._src_q:
+        while self._pending_count():
+            # no-progress watchdog: every drain must retire exactly one
+            # chunk; anything else would formerly spin this loop forever
+            pending = self._pending_count()
             outs.append(self.drain())
+            if self._pending_count() >= pending:
+                raise PipelineStalledError(
+                    "drain() retired no chunk (%d still pending) — "
+                    "wedged schedule; %s" % (pending, self._stall_detail()))
         if outs:
             jax.block_until_ready(outs[-1])  # sink-only synchronization
+        if self._resilient:
+            # stream-boundary checkpoint: prunes the replay buffer so
+            # retained chunks never outlive their usefulness
+            self._take_checkpoint()
         overflow = {
             n: int(self._overflow_acc[n] - before[n]) for n in self.operators
         }
@@ -575,3 +1035,21 @@ class PipelinedRuntime:
         """Finalized per-operator engine metric counters (empty unless the
         runtime was built with a metrics-collecting tracer)."""
         return {n: finalize_stats(a) for n, a in self._stats_acc.items() if a}
+
+    @property
+    def degraded(self) -> bool:
+        """True when any chunk was routed around the channels through the
+        lossless monolithic fallback (output still bit-exact)."""
+        return bool(self._degraded)
+
+    def recovery_stats(self) -> Dict[str, Any]:
+        """The uniform fault-tolerance surface (``last_stats["recovery"]``):
+        injected event counts per kind, retries/restarts/replays/dedups,
+        checkpoint cadence + bytes, degraded seqs, ingest rejections."""
+        st = empty_recovery_stats(self._resilient)
+        st.update(self._rec)
+        st["degraded_chunks"] = sorted(self._degraded)
+        if self._injector is not None:
+            st["injected"] = dict(self._injector.fired)
+            st["scheduled"] = self._injector.plan.counts()
+        return st

@@ -1,0 +1,248 @@
+"""Checkpoint/restart machinery for the pipelined dataflow runtime.
+
+The pipelined mode is the paper's deployment shape — independently scheduled
+operators over bounded queues — and therefore the mode where partial failure
+is a *normal* event, not an exception: a stage wedges, a channel payload is
+lost or delivered twice, a chunk arrives corrupted.  This module holds the
+host-side recovery primitives :class:`~repro.core.pipeline.PipelinedRuntime`
+drives:
+
+* :class:`RecoveryConfig` — the knobs (checkpoint cadence, stage timeout,
+  retry/backoff budget, restart budget, ingest validation);
+* :class:`Checkpoint` — a full host-side snapshot of the driver + device
+  state (channel rings, overflow/stat accumulators, dispatch queues,
+  sequence watermarks, per-operator env) taken every ``checkpoint_every``
+  emitted chunks;
+* the error ladder (:class:`StageTimeoutError` → retry/backoff,
+  :class:`ChannelDesyncError`/:class:`~repro.core.faults.InjectedCrash` →
+  checkpoint restore + replay, :class:`RecoveryExhaustedError` when the
+  budget is spent) plus the driver-misuse/ingest errors
+  (:class:`PipelineStalledError`, :class:`ChunkRejectedError`).
+
+Design invariant — **recovery is bit-exact**: a checkpoint captures every
+array the jitted steps read or donate, the replay buffer retains the pristine
+fed chunks past the checkpoint's emitted watermark, and the sink dedups
+replayed outputs by sequence number, so the recovered output stream is
+byte-identical to the fault-free run (tests/test_faults.py and the chaos
+differential property in tests/test_differential.py adjudicate).  None of
+this touches traced code: with ``faults=None`` and ``checkpoint_every=0`` the
+per-operator jaxprs are byte-identical to a build without this module.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    """Fault-tolerance knobs for the pipelined runtime (frozen/hashable so
+    it can ride inside :class:`~repro.core.session.ExecutionConfig`).
+
+    * ``checkpoint_every`` — snapshot the driver + device state every N
+      *emitted* chunks; ``0`` disables periodic checkpoints (the initial
+      clean-state checkpoint is still taken, so crash recovery replays from
+      the stream head — correct, just unbounded replay).
+    * ``stage_timeout_s`` — per-stage wall-clock budget; ``None`` disables
+      the watchdog (injected stalls still exercise the timeout path).
+    * ``max_retries``/``backoff_s`` — bounded exponential backoff for a
+      timed-out stage before escalating to a restart.
+    * ``max_restarts`` — checkpoint restores attributable to one chunk
+      before that chunk is *degraded*: re-evaluated through the channel-free
+      fallback program (same plan, same canonical order ⇒ same bytes).
+    * ``validate``/``max_graph_size`` — run the
+      :func:`~repro.core.faults.validate_chunk` ingest gate on every fed
+      chunk (``max_graph_size`` adds the optional per-event size cap).
+    """
+
+    checkpoint_every: int = 4
+    stage_timeout_s: Optional[float] = None
+    max_retries: int = 3
+    backoff_s: float = 0.01
+    max_restarts: int = 2
+    validate: bool = True
+    max_graph_size: Optional[int] = None
+
+    def __post_init__(self):
+        if self.checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if self.max_retries < 0 or self.max_restarts < 0:
+            raise ValueError("max_retries/max_restarts must be >= 0")
+        if self.stage_timeout_s is not None and self.stage_timeout_s <= 0:
+            raise ValueError("stage_timeout_s must be positive or None")
+
+
+# --------------------------------------------------------------------------
+# the error ladder
+# --------------------------------------------------------------------------
+
+class StageTimeoutError(RuntimeError):
+    """A stage's step exceeded its wall-clock budget (or an injected
+    ``stall_stage`` event simulated one).  First rung of the ladder: the
+    driver retries with exponential backoff up to ``max_retries``."""
+
+    def __init__(self, stage: str, seq: int, timeout_s: Optional[float],
+                 injected: bool = False):
+        kind = "injected stall" if injected else (
+            "no progress within %.3gs" % (timeout_s or 0.0))
+        super().__init__(
+            "stage %r timed out on chunk seq %d (%s)" % (stage, seq, kind))
+        self.stage = stage
+        self.seq = seq
+        self.injected = injected
+
+
+class ChannelDesyncError(RuntimeError):
+    """An edge's occupancy disagrees with the chunks in flight — a payload
+    was lost or duplicated in transport.  Detected before the sink pops
+    (popping unmatched edges would silently join wrong windows); recovered
+    by checkpoint restore + replay."""
+
+    def __init__(self, edge: str, actual: int, expected: int):
+        word = "lost" if actual < expected else "duplicated"
+        super().__init__(
+            "channel desync on edge %r: %d payload(s) queued where the "
+            "schedule expects %d (a payload was %s in transport)"
+            % (edge, actual, expected, word))
+        self.edge = edge
+        self.actual = actual
+        self.expected = expected
+
+
+class PipelineStalledError(RuntimeError):
+    """The driver made no progress: work is queued but no stage can run and
+    nothing is in flight to drain.  Diagnostic replacement for the former
+    infinite ``while self._in_flight or self._src_q`` spin."""
+
+    def __init__(self, detail: str):
+        super().__init__("pipeline stalled: %s" % detail)
+
+
+class ChunkRejectedError(ValueError):
+    """The ingest gate rejected a fed chunk (malformed ids/mask/geometry).
+    Carries the per-reason diagnostics; the pipeline state is untouched, so
+    the caller may drop the chunk and continue the stream."""
+
+    def __init__(self, reasons: List[str]):
+        super().__init__(
+            "chunk rejected at ingest: %s" % "; ".join(reasons))
+        self.reasons = list(reasons)
+
+
+class RecoveryExhaustedError(RuntimeError):
+    """The global restart budget is spent and the stream still cannot make
+    progress — the fault is persistent and not attributable to one chunk.
+    Final rung: surface to the caller instead of looping forever."""
+
+
+# --------------------------------------------------------------------------
+# snapshots
+# --------------------------------------------------------------------------
+
+def snapshot_tree(tree: Any) -> Any:
+    """Deep host copy of a pytree of device arrays (``None``-safe).
+
+    ``jax.device_get`` blocks until the arrays are ready and materializes
+    host ``ndarray``s — mandatory for channel state, whose buffers are
+    *donated* to the next step and would otherwise be deleted from under
+    the checkpoint."""
+    if tree is None:
+        return None
+    return jax.device_get(tree)
+
+
+def restore_tree(snap: Any, device=None) -> Any:
+    """Re-materialize a host snapshot on device (``None``-safe)."""
+    if snap is None:
+        return None
+    return jax.device_put(snap, device) if device is not None \
+        else jax.device_put(snap)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total payload bytes of a host snapshot (checkpoint size metric)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.asarray(leaf).nbytes)
+    return total
+
+
+@dataclasses.dataclass
+class Checkpoint:
+    """One consistent cut of the pipelined driver + device state.
+
+    ``fed``/``emitted`` are the sequence watermarks at snapshot time (seqs
+    < ``fed`` had entered the driver; seqs <= ``emitted`` had been emitted).
+    Channel rings and accumulators are host deep copies; queue payloads and
+    raw chunks are *references* — they are produced by non-donating steps,
+    so the arrays can never be freed from under the checkpoint.
+    """
+
+    fed: int
+    emitted: int
+    in_flight: int
+    inflight_seqs: List[int]
+    src_q: List[Tuple[int, Any]]
+    disp_q: Dict[str, List[Tuple[int, Any]]]
+    win_ch: Any                       # host snapshot (or None when lazy-unallocated)
+    win_sig: Any
+    out_ch: Dict[str, Any]            # host snapshots
+    overflow_acc: Dict[str, Any]      # host scalars
+    stats_acc: Dict[str, Dict[str, Any]]
+    edge_stats: Dict[str, Dict[str, int]]
+    envs: Dict[str, Any]              # per-operator env host snapshots
+    degraded_out: Dict[int, Any]      # seq -> (out, overflow) refs
+    nbytes: int = 0
+
+
+def wait_until_ready(out: Any, timeout_s: float) -> bool:
+    """Block on a step's outputs with a wall-clock budget.
+
+    ``jax.block_until_ready`` has no timeout, so the wait runs on a daemon
+    thread and the driver waits on an event: ``True`` = the arrays became
+    ready in time, ``False`` = the budget elapsed (the device computation
+    keeps running in the background — XLA dispatches cannot be cancelled —
+    but the driver is free to restore a checkpoint and move on)."""
+    done = threading.Event()
+
+    def _wait():
+        try:
+            jax.block_until_ready(out)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=_wait, daemon=True)
+    t.start()
+    return done.wait(timeout_s)
+
+
+def copy_edge_stats(edge_stats: Dict[str, Dict[str, int]]) -> Dict[str, Dict[str, int]]:
+    return {e: dict(v) for e, v in edge_stats.items()}
+
+
+def snapshot_stats_acc(stats_acc: Dict[str, Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+    return {n: dict(snapshot_tree(a)) if a else {} for n, a in stats_acc.items()}
+
+
+def empty_recovery_stats(enabled: bool = False) -> Dict[str, Any]:
+    """The uniform ``last_stats["recovery"]`` shape for runtimes without
+    fault machinery (monolithic / single-program) and for fresh pipelines."""
+    return {
+        "enabled": enabled,
+        "injected": {},
+        "scheduled": {},
+        "retries": 0,
+        "restarts": 0,
+        "replayed": 0,
+        "deduped": 0,
+        "checkpoints": 0,
+        "checkpoint_bytes": 0,
+        "degraded_chunks": [],
+        "rejected": 0,
+        "corrupt_recovered": 0,
+    }

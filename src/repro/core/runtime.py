@@ -22,7 +22,7 @@ import dataclasses
 import functools
 import threading
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -488,6 +488,17 @@ class DSCEPRuntime:
         runtime was built with a metrics-collecting tracer)."""
         return {n: finalize_stats(a) for n, a in self._stats_acc.items() if a}
 
+    @property
+    def degraded(self) -> bool:
+        """Single-program mode has no channels to degrade around."""
+        return False
+
+    def recovery_stats(self) -> Dict[str, Any]:
+        """Uniform recovery surface — fault machinery lives in the pipelined
+        runtime only (one XLA program has no partial-failure boundary)."""
+        from .recovery import empty_recovery_stats
+        return empty_recovery_stats(False)
+
 
 # --------------------------------------------------------------------------
 # monolithic reference runtime (paper's "one C-SPARQL query" baseline)
@@ -559,6 +570,15 @@ class MonolithicRuntime:
         if not self._stats_acc:
             return {}
         return {self.operator.name: finalize_stats(self._stats_acc)}
+
+    @property
+    def degraded(self) -> bool:
+        """The monolithic baseline *is* the degradation target — never set."""
+        return False
+
+    def recovery_stats(self) -> Dict[str, Any]:
+        from .recovery import empty_recovery_stats
+        return empty_recovery_stats(False)
 
 
 # --------------------------------------------------------------------------

@@ -36,8 +36,10 @@ from repro.obs.report import attach_saturation
 from repro.obs.trace import TraceConfig, Tracer, resolve_trace
 
 from . import query as Q
+from .faults import FaultPlan
 from .kb import KnowledgeBase, collect_kb_stats
 from .pipeline import PipelinedRuntime
+from .recovery import RecoveryConfig
 from .planner import OperatorDAG, decompose, explain_plan, plan_caps
 from .rdf import TripleBatch, Vocab
 from .runtime import (
@@ -105,6 +107,15 @@ class ExecutionConfig:
     # explicit repro.obs.TraceConfig.  Surfaced via RegisteredQuery.last_stats
     # and RegisteredQuery.explain().
     trace: Union[None, bool, TraceConfig] = None
+    # fault tolerance (pipelined mode only): ``faults`` is a seeded
+    # repro.core.faults.FaultPlan injected deterministically into the
+    # driver (chaos runs replay exactly); ``recovery`` tunes the
+    # checkpoint/retry/restart/degradation ladder
+    # (repro.core.recovery.RecoveryConfig — a FaultPlan alone implies the
+    # default ladder).  Both None = the fault machinery does not exist:
+    # per-operator programs are byte-identical (tests/test_faults.py pin).
+    faults: Optional[FaultPlan] = None
+    recovery: Optional[RecoveryConfig] = None
 
     def __post_init__(self):
         resolve_trace(self.trace)     # validates the field type eagerly
@@ -123,6 +134,21 @@ class ExecutionConfig:
             raise ValueError(
                 "window_step must be >= 1 (triples per slide), got %d"
                 % self.window_step)
+        if self.faults is not None and not isinstance(self.faults, FaultPlan):
+            raise TypeError(
+                "faults= takes a repro.core.faults.FaultPlan, got %r"
+                % type(self.faults).__name__)
+        if self.recovery is not None and not isinstance(
+                self.recovery, RecoveryConfig):
+            raise TypeError(
+                "recovery= takes a repro.core.recovery.RecoveryConfig, "
+                "got %r" % type(self.recovery).__name__)
+        if (self.faults is not None or self.recovery is not None) \
+                and self.mode != "pipelined":
+            raise ValueError(
+                "fault injection / recovery (faults=, recovery=) require "
+                "mode='pipelined' — the monolithic and single-program modes "
+                "run one XLA program with no partial-failure boundary")
 
     def runtime_config(self) -> RuntimeConfig:
         """The engine-level slice of this config (shared by every mode)."""
@@ -221,7 +247,9 @@ class RegisteredQuery:
             return PipelinedRuntime(self.dag, kb, vocab, rcfg,
                                     placement=placement,
                                     channel_capacity=cfg.channel_capacity,
-                                    tracer=self.tracer)
+                                    tracer=self.tracer,
+                                    faults=cfg.faults,
+                                    recovery=cfg.recovery)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -292,10 +320,10 @@ class RegisteredQuery:
                 if rt._in_flight >= depth:
                     yield rt.drain()
                 rt.feed(c)
-            while rt._in_flight or rt._src_q:
+            while rt._pending_count():
                 yield rt.drain()
         finally:
-            while rt._in_flight or rt._src_q:   # generator closed mid-stream
+            while rt._pending_count():          # generator closed mid-stream
                 rt.drain()
 
     def overflow_totals(self) -> Dict[str, int]:
@@ -323,10 +351,14 @@ class RegisteredQuery:
               "operators": {op: {"counters": ..., "caps": ...,
                                  "saturation": ...}, ...},
               "spans": {path: {"count", "first_s", "steady": {...}}, ...},
+              "recovery": {"enabled", "injected", "retries", ...},
+              "degraded": bool,
             }
 
         ``operators`` and ``spans`` fill in only when the session ran with
-        ``ExecutionConfig(trace=...)`` enabled; the rest is always live.
+        ``ExecutionConfig(trace=...)`` enabled; ``recovery`` carries live
+        counters only under pipelined ``faults=``/``recovery=``; the rest
+        is always live.
         """
         ops: Dict[str, Any] = {}
         for name, counters in self._runtime.op_metrics().items():
@@ -340,6 +372,8 @@ class RegisteredQuery:
             "channels": self._runtime.channel_stats(),
             "operators": ops,
             "spans": self.tracer.stats() if self.tracer is not None else {},
+            "recovery": self._runtime.recovery_stats(),
+            "degraded": self._runtime.degraded,
         }
 
     def explain(self) -> Dict[str, Any]:

@@ -25,6 +25,7 @@ instead of the interpreter (requires actual TPU hardware).
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -32,6 +33,7 @@ import numpy as np
 from repro.core import paper_queries as PQ
 from repro.core.rdf import Vocab, to_host_rows
 from repro.core.session import ExecutionConfig, MODES, Session
+from repro.core.sparql import SparqlError
 from repro.data.dbpedia import KBConfig, generate_kb
 from repro.data.tweets import (
     TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
@@ -96,9 +98,20 @@ def main(argv=None):
     ap.add_argument("--no-dedup", action="store_true",
                     help="serving mode: disable shared-plan dedup and "
                          "prefix sharing (the control arm)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="pipelined mode: inject a seeded fault plan "
+                         "(drops, duplicates, stalls, crashes, corruptions) "
+                         "and recover; prints the recovery table after the "
+                         "stream")
+    ap.add_argument("--checkpoint-every", type=int, default=4, metavar="N",
+                    help="chaos mode: operator-checkpoint cadence in "
+                         "emitted chunks (0 disables checkpointing)")
     args = ap.parse_args(argv)
     if args.mode == "pipelined" and args.channel_capacity < 2:
         ap.error("--channel-capacity must be >= 2 (double buffering)")
+    if args.chaos is not None and args.mode != "pipelined":
+        ap.error("--chaos requires --mode pipelined (fault injection needs "
+                 "per-operator failure boundaries)")
 
     vocab = Vocab()
     kbd = generate_kb(vocab, KBConfig(
@@ -110,6 +123,17 @@ def main(argv=None):
         num_tweets=args.tweets, mentions_min=2, mentions_max=4))
     chunks = list(stream_chunks(rows, 4 * args.window_cap))
 
+    faults = recovery = None
+    if args.chaos is not None:
+        from repro.core.faults import FaultPlan
+        from repro.core.recovery import RecoveryConfig
+
+        # every kind fires against "source" (corrupt_chunk auto-targets
+        # "ingest"), so the plan is complete without knowing the query DAG
+        faults = FaultPlan.seeded(args.chaos, ("source",),
+                                  num_chunks=len(chunks), n_events=5)
+        recovery = RecoveryConfig(checkpoint_every=args.checkpoint_every)
+
     cfg = ExecutionConfig(
         mode=args.mode, window_capacity=args.window_cap, max_windows=4,
         bind_cap=2048, scan_cap=512, out_cap=2048, kb_method=args.method,
@@ -118,12 +142,17 @@ def main(argv=None):
         placement=args.placement, channel_capacity=args.channel_capacity,
         window_from_query=args.window_from_query,
         trace=args.trace,
+        faults=faults, recovery=recovery,
     )
     session = Session(cfg, vocab=vocab, kb=kbd.kb)
     if args.serve:
         return _run_serve(session, chunks, args)
     if args.rq:
-        reg = session.register_file(args.rq)
+        try:
+            reg = session.register_file(args.rq)
+        except SparqlError as err:
+            _report_rq_error(args.rq, err)
+            sys.exit(2)
         qname = reg.query.name
     else:
         qname = args.query
@@ -169,6 +198,7 @@ def main(argv=None):
             print(f"    {edge:60s} size={st['size']} "
                   f"dropped={st['overflows']}")
         _report_trace(reg, args)
+        _report_recovery(reg)
         print(f"[dscep] done: {n_out} output triples, {t_total:.2f}s total")
         return n_out
 
@@ -277,6 +307,34 @@ def _run_serve(session, chunks, args):
     print(f"[serve] done: {n_out} output triples, "
           f"{clipped} overflowed windows")
     return n_out
+
+
+def _report_rq_error(path, err):
+    """Point at the offending ``.rq`` source line for a parse failure."""
+    print(f"[dscep] cannot parse {path}: {err}", file=sys.stderr)
+    if getattr(err, "line", 0):
+        try:
+            with open(path) as fh:
+                src = fh.read().splitlines()
+            bad = src[err.line - 1]
+        except (OSError, IndexError):
+            return
+        print(f"  {err.line:4d} | {bad}", file=sys.stderr)
+        print("       | " + " " * max(err.col - 1, 0) + "^", file=sys.stderr)
+
+
+def _report_recovery(reg):
+    """Print the recovery-event table for a fault-injected run."""
+    st = reg.last_stats
+    rec = st.get("recovery", {})
+    if not rec.get("enabled"):
+        return
+    from repro.obs.report import format_recovery_table
+    print(format_recovery_table(rec))
+    if st.get("degraded"):
+        print("[dscep] runtime is DEGRADED: chunks "
+              f"{rec['degraded_chunks']} took the lossless monolithic "
+              "fallback path")
 
 
 def _report_trace(reg, args):

@@ -48,6 +48,20 @@ CATALOG: Dict[str, str] = {
     "n_retract": "bindings eagerly retracted by the delta evaluator",
 }
 
+# recovery-counter legend (repro.core.recovery): host-side facts surfaced
+# through last_stats["recovery"], not device accumulators — listed here so
+# report.py renders them with the same one-line meanings as engine metrics
+RECOVERY_CATALOG: Dict[str, str] = {
+    "retries": "stage dispatches retried after a timeout (with backoff)",
+    "restarts": "checkpoint restores (crash / exhausted retries / desync)",
+    "replayed": "chunks re-fed from the replay buffer during restores",
+    "deduped": "replayed outputs discarded by sequence-number dedup",
+    "checkpoints": "checkpoints taken (cadence: checkpoint_every emissions)",
+    "checkpoint_bytes": "bytes in the latest checkpoint's device snapshots",
+    "rejected": "chunks refused by the ingest validation gate",
+    "corrupt_recovered": "in-transit corruptions healed from the replay buffer",
+}
+
 # the capacity each high-water gauge saturates against
 _SATURATES_AGAINST = {
     "hw_bind": "bind_cap",

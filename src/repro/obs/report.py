@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
-from .metrics import CATALOG, saturation
+from .metrics import CATALOG, RECOVERY_CATALOG, saturation
 
 
 def _table(title: str, headers: Sequence[str], rows: List[List[Any]]) -> str:
@@ -115,6 +115,32 @@ def format_explain(artifact: Mapping[str, Any]) -> str:
         lines.append(_table("join order", ["#", "step", "pattern", "method",
                                            "k_max", "est fan-out"], rows))
     return "\n".join(lines)
+
+
+def format_recovery_table(recovery: Mapping[str, Any],
+                          title: str = "recovery") -> str:
+    """Render ``last_stats["recovery"]`` as a counter table.
+
+    Injected-fault counts appear as ``injected:<kind>`` rows (with the
+    scheduled count alongside, so a divergence — an event that never found
+    its stage/chunk — is visible); the ladder counters carry their
+    :data:`~repro.obs.metrics.RECOVERY_CATALOG` legends."""
+    rows: List[List[Any]] = []
+    scheduled = recovery.get("scheduled", {})
+    for kind in sorted(recovery.get("injected", {})):
+        fired = recovery["injected"][kind]
+        want = scheduled.get(kind, 0)
+        if fired or want:
+            rows.append(["injected:%s" % kind, fired,
+                         "scheduled %d" % want])
+    for key in sorted(RECOVERY_CATALOG):
+        if key in recovery:
+            rows.append([key, recovery[key], RECOVERY_CATALOG[key]])
+    degraded = recovery.get("degraded_chunks", [])
+    rows.append(["degraded_chunks", len(degraded),
+                 ("seqs %s (lossless monolithic fallback)" % degraded)
+                 if degraded else "none"])
+    return _table(title, ["event", "count", "meaning"], rows)
 
 
 def to_json(last_stats: Mapping[str, Any],

@@ -16,6 +16,13 @@ lanes in :class:`repro.serve.lm.ContinuousBatcher`, whose slot lifecycle
 * **round-robin ticks** — each ``tick`` drains one chunk from the next
   non-empty tenant queue through ``engine.process_chunk``, so no tenant can
   starve the others however fast it produces.
+* **validation + quarantine** — an optional ingest ``validator`` (defaulted
+  by :meth:`repro.serve.engine.ServeEngine.admission` to
+  :func:`repro.core.faults.validate_chunk` over the session vocab) rejects
+  malformed chunks at the queue boundary with counted per-tenant reasons,
+  and a tenant whose ticks *fault* ``max_tenant_faults`` times in a row is
+  quarantined — its queries retired, its queue dropped, further traffic
+  refused — instead of taking the whole :class:`ServeEngine` down.
 
 Everything here is host-side bookkeeping; the device work happens inside
 the engine's deduplicated/batched step functions.
@@ -25,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 
 @dataclasses.dataclass
@@ -47,7 +54,9 @@ class QueryAdmission:
     """Slot-based admission + per-tenant chunk queues over a ServeEngine."""
 
     def __init__(self, engine, num_slots: int = 64,
-                 queue_cap: int = 256, chunk_queue_cap: int = 8):
+                 queue_cap: int = 256, chunk_queue_cap: int = 8,
+                 validator: Optional[Callable[[Any], List[str]]] = None,
+                 max_tenant_faults: int = 3):
         self.engine = engine
         self.num_slots = num_slots
         self.slots = [QuerySlot() for _ in range(num_slots)]
@@ -57,17 +66,31 @@ class QueryAdmission:
         self.chunk_queues: Dict[str, Deque] = {}
         self._rr: List[str] = []          # round-robin tenant order
         self._rr_next = 0
+        # ingest gate: chunk -> list of rejection reasons ([] = valid)
+        self.validator = validator
+        # consecutive *faulting* ticks (engine exceptions) a tenant is
+        # allowed before quarantine; successes reset the count
+        self.max_tenant_faults = max_tenant_faults
+        self.quarantined: Set[str] = set()
+        self._consec_faults: Dict[str, int] = {}
+        self.invalid_reasons: Dict[str, List[str]] = {}   # last per tenant
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "retired": 0,
             "rejected_queries": 0, "chunks_offered": 0,
             "chunks_rejected": 0, "chunks_processed": 0,
             "chunks_dropped": 0, "ticks": 0,
+            "chunks_invalid": 0, "tenant_faults": 0,
+            "quarantined_tenants": 0,
         }
 
     # -- query lifecycle -----------------------------------------------------
     def submit(self, req: QueryRequest, admit: bool = True) -> bool:
-        """Queue a standing-query registration; ``False`` = queue full."""
+        """Queue a standing-query registration; ``False`` = queue full (or
+        the tenant is quarantined)."""
         self.counters["submitted"] += 1
+        if req.tenant in self.quarantined:
+            self.counters["rejected_queries"] += 1
+            return False
         if len(self.queue) >= self.queue_cap:
             self.counters["rejected_queries"] += 1
             return False
@@ -151,8 +174,19 @@ class QueryAdmission:
 
     # -- chunk feed ------------------------------------------------------------
     def offer_chunk(self, chunk, tenant: str = "default") -> bool:
-        """Bounded per-tenant enqueue; ``False`` = backpressure (counted)."""
+        """Bounded per-tenant enqueue; ``False`` = backpressure, a
+        quarantined tenant, or a chunk the ingest validator rejected
+        (each counted separately)."""
         self.counters["chunks_offered"] += 1
+        if tenant in self.quarantined:
+            self.counters["chunks_rejected"] += 1
+            return False
+        if self.validator is not None:
+            reasons = self.validator(chunk)
+            if reasons:
+                self.counters["chunks_invalid"] += 1
+                self.invalid_reasons[tenant] = list(reasons)
+                return False
         q = self.chunk_queues.get(tenant)
         if q is None:
             q = self.chunk_queues[tenant] = deque()
@@ -170,6 +204,13 @@ class QueryAdmission:
         """One engine tick: pop one chunk from the next non-empty tenant
         queue (round-robin) and push it through every admitted query.
         Returns ``(tenant, outputs)`` or ``None`` when all queues are empty.
+
+        A tick that *faults* (the engine raises on this tenant's chunk) is
+        contained: the exception is counted against the tenant, and after
+        ``max_tenant_faults`` consecutive faults the tenant is quarantined
+        — its standing queries retired, its queued chunks dropped, further
+        traffic refused — so one poisoned feed cannot take down the shared
+        engine.  Successful ticks reset the tenant's fault count.
         """
         self.counters["ticks"] += 1
         for _ in range(len(self._rr)):
@@ -178,10 +219,42 @@ class QueryAdmission:
             q = self.chunk_queues[tenant]
             if q:
                 chunk = q.popleft()
-                outs = self.engine.process_chunk(chunk)
+                try:
+                    outs = self.engine.process_chunk(chunk)
+                except Exception:
+                    self.counters["tenant_faults"] += 1
+                    n = self._consec_faults.get(tenant, 0) + 1
+                    self._consec_faults[tenant] = n
+                    if n >= self.max_tenant_faults:
+                        self.quarantine(tenant)
+                    return None
+                self._consec_faults[tenant] = 0
                 self.counters["chunks_processed"] += 1
                 return tenant, outs
         return None
+
+    def quarantine(self, tenant: str) -> None:
+        """Isolate a repeatedly-faulting tenant: retire its admitted
+        queries (without draining — its chunks are suspect), purge its
+        waiting registrations, drop its queue, and refuse future traffic."""
+        if tenant in self.quarantined:
+            return
+        self.quarantined.add(tenant)
+        self.counters["quarantined_tenants"] += 1
+        # purge waiting registrations first so retire()'s last-query check
+        # sees no pending work for the tenant and tears its queue down
+        purged = [r for r in self.queue if r.tenant == tenant]
+        for r in purged:
+            self.queue.remove(r)
+            self.counters["rejected_queries"] += 1
+        for name in [s.name for s in self.slots
+                     if s.request is not None and s.request.tenant == tenant
+                     and s.name is not None]:
+            self.retire(name, drain=False)
+        # a tenant with chunks but no admitted query: tear down directly
+        if tenant in self.chunk_queues:
+            self._teardown_tenant(tenant, drain=False)
+        self._consec_faults.pop(tenant, None)
 
     def drain(self) -> List[Tuple[str, Dict[str, Any]]]:
         """Tick until every tenant queue is empty."""
@@ -202,6 +275,9 @@ class QueryAdmission:
             "chunk_queue_depths": {
                 t: len(q) for t, q in self.chunk_queues.items()
             },
+            "quarantined": sorted(self.quarantined),
+            "invalid_reasons": {t: list(r)
+                                for t, r in self.invalid_reasons.items()},
         }
 
 

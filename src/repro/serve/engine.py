@@ -542,9 +542,20 @@ class ServeEngine:
     def admission(self, **opts):
         """A :class:`~repro.serve.batcher.QueryAdmission` front-end bound to
         this engine (slot-based admission, per-tenant chunk queues,
-        backpressure counters)."""
+        backpressure counters, ingest validation + tenant quarantine).
+
+        Unless the caller supplies a ``validator``, the front-end gates
+        chunks with :func:`repro.core.faults.validate_chunk` bound to this
+        session's vocab, so malformed ingest is refused at the boundary
+        instead of poisoning the shared engine."""
+        import functools
+
+        from ..core.faults import validate_chunk
         from .batcher import QueryAdmission
 
+        if "validator" not in opts:
+            opts["validator"] = functools.partial(
+                validate_chunk, vocab=self.session.vocab)
         self._admission = QueryAdmission(self, **opts)
         return self._admission
 

@@ -34,9 +34,11 @@ from repro.core import query as Q
 from repro.core.engine import KBJoin
 from repro.core.kb import kb_from_triples
 from repro.core.planner import closure_path_specs, compile_query
+from repro.core.faults import FaultPlan
 from repro.core.rdf import (
     CLOSURE_PRED_BASE, NUM_BASE, ROW_BASE, Vocab, make_triples, to_host_rows,
 )
+from repro.core.recovery import RecoveryConfig
 from repro.core.session import ExecutionConfig, MODES, Session
 
 from strategies import incremental_configs, sliding_geometries
@@ -568,6 +570,53 @@ def test_modes_bit_identical_on_generated_queries(q, seed, method, depth):
     except AssertionError:
         _dump_failure("cross_mode", "seed=%d method=%s depth=%d\nquery=%r"
                       % (seed, method, depth, q))
+        raise
+
+
+@settings(max_examples=max(2, N_EXAMPLES // 2), deadline=None,
+          derandomize=True)
+@given(q=exec_queries(), seed=st.integers(0, 2**16),
+       checkpoint_every=st.sampled_from((0, 1, 2)))
+def test_chaos_recovery_bit_identical_to_fault_free(q, seed,
+                                                    checkpoint_every):
+    """Seeded chaos differential — the robustness acceptance gate.
+
+    A random FaultPlan (drawn over all five kinds; every non-corrupt event
+    targets the ``source`` stage so the schedule is complete without
+    knowing the generated query's DAG) is injected into a pipelined run of
+    a *generated* query.  The recovered output must be byte-identical to
+    the fault-free monolithic run — zero lost rows, zero duplicated rows —
+    and ``last_stats`` must account for every scheduled event exactly.
+    ``checkpoint_every`` sweeps 0 (replay from the stream head, heavy
+    sequence-number dedup), 1 (checkpoint per emission, no dedup) and 2."""
+    _, chunks = _chunks_for(seed)
+    plan = FaultPlan.seeded(seed, ("source",), num_chunks=len(chunks),
+                            n_events=3)
+    try:
+        mono = Session(CFG.replace(mode="monolithic"),
+                       vocab=DW.vocab, kb=DW.kb).register(q)
+        base, base_ovf = mono.run(chunks)
+        assert not any(base_ovf.values()), base_ovf
+        reg = Session(
+            CFG.replace(mode="pipelined", faults=plan,
+                        recovery=RecoveryConfig(
+                            checkpoint_every=checkpoint_every)),
+            vocab=DW.vocab, kb=DW.kb).register(q)
+        outs, ovf = reg.run(chunks)
+        assert not any(ovf.values()), ovf
+        assert len(outs) == len(base)
+        for i, (a, b) in enumerate(zip(base, outs)):
+            for col, ca, cb in zip(a._fields, a, b):
+                assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                    "chaos output diverges from fault-free", i, col)
+        rec = reg.last_stats["recovery"]
+        assert rec["enabled"]
+        assert rec["injected"] == plan.counts() == rec["scheduled"], (
+            "scheduled faults must fire exactly", rec)
+        assert rec["checkpoints"] >= 1       # at least the clean-state cut
+    except AssertionError:
+        _dump_failure("chaos", "seed=%d checkpoint_every=%d plan=%r\nquery=%r"
+                      % (seed, checkpoint_every, plan, q))
         raise
 
 

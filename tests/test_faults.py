@@ -1,0 +1,473 @@
+"""Fault injection, checkpoint/restart and graceful degradation.
+
+The robustness acceptance gates:
+
+* **chaos bit-exactness** — a pipelined run under a seeded
+  :class:`~repro.core.faults.FaultPlan` covering all five fault kinds must
+  publish byte-identical outputs (and overflow counts) to the fault-free
+  single-program run, with every scheduled event actually fired and zero
+  lost or duplicated sink rows;
+* **graceful degradation** — a chunk past ``max_restarts`` is routed
+  through the channel-free monolithic fallback, still bit-exact, with
+  ``last_stats["degraded"]`` raised;
+* **zero overhead** — with ``faults=None`` the per-stage jaxprs are
+  byte-identical to a build with the chaos machinery enabled (everything is
+  host-side);
+* **diagnosable stalls** — a wedged schedule raises
+  :class:`~repro.core.recovery.PipelineStalledError` naming the blocked
+  edge instead of spinning;
+* **ingest hygiene** — malformed chunks are rejected at the gate
+  (:class:`~repro.core.recovery.ChunkRejectedError`), a malformed ``.rq``
+  file exits the launcher with code 2 + line/column context, and a
+  repeatedly-faulting serving tenant is quarantined without taking the
+  engine down.
+"""
+import functools
+import os
+import subprocess
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as chmod
+from repro.core import paper_queries as PQ
+from repro.core.faults import (
+    FAULT_KINDS, FaultEvent, FaultInjector, FaultPlan, corrupt_batch,
+    validate_chunk,
+)
+from repro.core.recovery import (
+    ChunkRejectedError, PipelineStalledError, RecoveryConfig,
+    empty_recovery_stats,
+)
+from repro.core.rdf import Vocab
+from repro.core.session import ExecutionConfig, Session
+from repro.data.dbpedia import KBConfig, generate_kb
+from repro.data.tweets import (
+    TweetSchema, TweetStreamConfig, generate_tweets, stream_chunks,
+)
+from repro.obs.report import format_recovery_table
+from repro.serve.batcher import QueryAdmission, QueryRequest
+
+CFG = ExecutionConfig(window_capacity=96, max_windows=4, bind_cap=1024,
+                      scan_cap=128, out_cap=1024, intermediate_cap=512)
+
+
+class ChaosWorld:
+    """Multi-chunk co-mention stream (same shape the pipeline tests use)."""
+
+    def __init__(self, num_tweets=36, seed=0):
+        self.vocab = Vocab()
+        self.kbd = generate_kb(
+            self.vocab,
+            KBConfig(num_artists=24, num_shows=12, filler_triples=80,
+                     seed=seed),
+        )
+        self.tweets = TweetSchema.create(self.vocab)
+        pool = np.concatenate([self.kbd.artist_ids, self.kbd.show_ids])
+        self.rows = generate_tweets(
+            self.vocab, self.tweets, pool,
+            TweetStreamConfig(num_tweets=num_tweets, mentions_min=2,
+                              mentions_max=3, seed=seed),
+        )
+        self.chunks = list(stream_chunks(self.rows, 96))
+
+    def session(self, **over):
+        cfg = CFG.replace(**over) if over else CFG
+        return Session(cfg, vocab=self.vocab, kb=self.kbd.kb)
+
+
+@pytest.fixture(scope="module")
+def world():
+    w = ChaosWorld()
+    assert len(w.chunks) >= 3, "need a multi-chunk stream for chaos"
+    return w
+
+
+@pytest.fixture(scope="module")
+def baseline(world):
+    """Fault-free single-program run of q15 — the bit-exactness referee."""
+    q = PQ.q15(world.vocab, world.tweets, world.kbd.schema)
+    reg = world.session(mode="single_program").register(q)
+    outs, ovf = reg.run(world.chunks)
+    return q, reg, outs, ovf
+
+
+def assert_bit_identical(outs_a, outs_b, tag=""):
+    assert len(outs_a) == len(outs_b), tag
+    for i, (a, b) in enumerate(zip(outs_a, outs_b)):
+        for col, ca, cb in zip(a._fields, a, b):
+            assert bool(np.all(np.asarray(ca) == np.asarray(cb))), (
+                f"{tag} chunk {i} col {col} diverges")
+
+
+# --------------------------------------------------------------------------
+# the plan / injector / validator layer (pure host, no jit)
+# --------------------------------------------------------------------------
+
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(7, ("source", "opA"), num_chunks=5, n_events=6)
+    b = FaultPlan.seeded(7, ("source", "opA"), num_chunks=5, n_events=6)
+    c = FaultPlan.seeded(8, ("source", "opA"), num_chunks=5, n_events=6)
+    assert a == b and a.events == b.events
+    assert a != c
+    assert sum(a.counts().values()) == 6
+    for ev in a.events:
+        assert ev.kind in FAULT_KINDS
+        assert 0 <= ev.chunk < 5
+        if ev.kind == "corrupt_chunk":
+            assert ev.stage == "ingest"
+        else:
+            assert ev.stage in ("source", "opA")
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("explode", "source", 0)
+    with pytest.raises(ValueError):
+        FaultEvent("crash_stage", "source", -1)
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(0, ("source",), num_chunks=0)
+
+
+def test_fault_injector_fires_each_event_once():
+    plan = FaultPlan((FaultEvent("crash_stage", "s", 1),
+                      FaultEvent("corrupt_chunk", "ingest", 2)))
+    inj = FaultInjector(plan)
+    assert not inj.take("crash_stage", "s", 0)      # wrong chunk
+    assert not inj.take("crash_stage", "t", 1)      # wrong stage
+    assert inj.take("crash_stage", "s", 1)
+    assert not inj.take("crash_stage", "s", 1)      # fires once
+    # corrupt_chunk matches regardless of the stage the caller names
+    assert inj.take("corrupt_chunk", "whatever", 2)
+    assert inj.pending() == 0
+    assert inj.fired == {"crash_stage": 1, "corrupt_chunk": 1,
+                         "drop_payload": 0, "duplicate_payload": 0,
+                         "stall_stage": 0}
+    assert inj.fired_total() == 2
+
+
+def test_validate_chunk_and_corrupt_batch(world):
+    chunk = world.chunks[0]
+    assert validate_chunk(chunk, world.vocab) == []
+    bad = corrupt_batch(chunk)
+    reasons = validate_chunk(bad, world.vocab)
+    assert reasons, "corrupt_batch must trip the gate"
+    assert any("predicate" in r for r in reasons)
+    assert any("row-node" in r for r in reasons)
+    # the gate also works without a vocab (structural band bounds)
+    assert validate_chunk(bad) != []
+    # a non-boolean valid mask is rejected outright
+    intmask = chunk._replace(valid=chunk.valid.astype(jnp.int32))
+    assert validate_chunk(intmask, world.vocab) == [
+        "valid mask must be boolean, got dtype int32"]
+    # per-event size cap: every graph in this stream is small
+    assert validate_chunk(chunk, world.vocab, max_graph_size=1) != []
+
+
+def test_channel_snapshot_restore_roundtrip():
+    example = {"x": jnp.zeros((4,), jnp.int32)}
+    ch = chmod.make_channel(example, 3)
+    ch = chmod.push_jit(ch, {"x": jnp.arange(4, dtype=jnp.int32)})
+    snap = chmod.snapshot(ch)
+    assert isinstance(np.asarray(jax.tree.leaves(snap)[0]), np.ndarray)
+    restored = chmod.restore(snap)
+    restored, payload, ok = chmod.pop_jit(restored)
+    assert bool(ok)
+    assert np.array_equal(np.asarray(payload["x"]), np.arange(4))
+    assert int(restored.size) == 0
+
+
+# --------------------------------------------------------------------------
+# chaos: every fault kind, recovered bit-exact
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos(world, baseline):
+    """One pipelined run under a plan covering all five fault kinds."""
+    q, reg_s, _, _ = baseline
+    dag = reg_s.dag
+    up = [n for n in dag.subqueries if n != dag.final]
+    drop_stage = up[0] if up else "source"
+    plan = FaultPlan((
+        FaultEvent("corrupt_chunk", "ingest", 0),
+        FaultEvent("stall_stage", dag.final, 0),
+        FaultEvent("drop_payload", drop_stage, 1),
+        FaultEvent("crash_stage", "source", 2),
+        FaultEvent("duplicate_payload", "source", 2),
+    ))
+    reg_p = world.session(
+        mode="pipelined", faults=plan,
+        recovery=RecoveryConfig(checkpoint_every=2),
+    ).register(q)
+    outs, ovf = reg_p.run(world.chunks)
+    return plan, reg_p, outs, ovf
+
+
+def test_chaos_all_kinds_recover_bit_exact(baseline, chaos):
+    _, _, outs_s, ovf_s = baseline
+    plan, reg_p, outs_p, ovf_p = chaos
+    assert_bit_identical(outs_s, outs_p, "chaos vs fault-free")
+    assert ovf_p == ovf_s
+
+
+def test_chaos_exercises_every_scheduled_event(chaos):
+    plan, reg_p, _, _ = chaos
+    rec = reg_p.last_stats["recovery"]
+    assert rec["enabled"]
+    assert rec["injected"] == plan.counts() == rec["scheduled"], (
+        "every scheduled fault must fire exactly once")
+    assert rec["retries"] >= 1          # the injected stall was retried
+    assert rec["restarts"] >= 2         # crash + at least one desync restore
+    assert rec["replayed"] >= 1
+    assert rec["checkpoints"] >= 2      # initial + cadence/boundary
+    assert rec["checkpoint_bytes"] > 0
+    assert rec["corrupt_recovered"] == 1
+    assert rec["degraded_chunks"] == []
+    assert reg_p.last_stats["degraded"] is False
+
+
+def test_chaos_leaves_channels_drained(chaos):
+    _, reg_p, _, _ = chaos
+    for edge, st in reg_p.runtime.channel_stats().items():
+        assert st["size"] == 0, edge
+        assert st["overflows"] == 0, edge
+        assert st["pushes"] >= st["pops"], edge
+
+
+def test_recovery_table_renders(chaos):
+    _, reg_p, _, _ = chaos
+    txt = format_recovery_table(reg_p.last_stats["recovery"])
+    assert "injected:crash_stage" in txt
+    assert "restarts" in txt and "deduped" in txt
+    # the empty surface renders too (monolithic/single-program sessions)
+    assert "degraded_chunks" in format_recovery_table(empty_recovery_stats())
+
+
+def test_resilient_runtime_rejects_malformed_ingest(chaos, world):
+    _, reg_p, _, _ = chaos
+    rt = reg_p.runtime
+    before = rt.recovery_stats()["rejected"]
+    with pytest.raises(ChunkRejectedError) as ei:
+        rt.feed(corrupt_batch(world.chunks[0]))
+    assert ei.value.reasons
+    assert rt.recovery_stats()["rejected"] == before + 1
+    assert rt._pending_count() == 0, "a rejected chunk must leave no state"
+
+
+def test_degraded_chunk_takes_lossless_fallback(world, baseline):
+    """max_restarts=0: the first fault attributable to a chunk degrades it;
+    the fallback program must still publish the exact fault-free bytes."""
+    q, _, outs_s, ovf_s = baseline
+    plan = FaultPlan((FaultEvent("crash_stage", "source", 1),))
+    reg = world.session(
+        mode="pipelined", faults=plan,
+        recovery=RecoveryConfig(checkpoint_every=0, max_restarts=0),
+    ).register(q)
+    outs, ovf = reg.run(world.chunks)
+    assert_bit_identical(outs_s, outs, "degraded vs fault-free")
+    assert ovf == ovf_s
+    st = reg.last_stats
+    assert st["degraded"] is True
+    rec = st["recovery"]
+    assert rec["degraded_chunks"] == [1]
+    assert rec["restarts"] >= 1
+    assert rec["injected"]["crash_stage"] == 1
+
+
+def test_operator_state_roundtrip(chaos):
+    _, reg_p, _, _ = chaos
+    for op in reg_p.runtime.operators.values():
+        snap = op.state()
+        for leaf in jax.tree.leaves(snap):
+            assert isinstance(np.asarray(leaf), np.ndarray)
+        before = jax.device_get(op.env)
+        op.restore_state(snap)
+        after = jax.device_get(op.env)
+        ba, aa = jax.tree.leaves(before), jax.tree.leaves(after)
+        assert all(np.array_equal(x, y) for x, y in zip(ba, aa))
+
+
+# --------------------------------------------------------------------------
+# zero-overhead pin: faults-off stage programs == faults-on stage programs
+# --------------------------------------------------------------------------
+
+def test_fault_machinery_never_touches_traced_programs(world, baseline,
+                                                       chaos):
+    """The per-stage jaxprs must be byte-identical whether or not the chaos
+    machinery is enabled — all of it lives on the host driver."""
+    q = baseline[0]
+    plain = world.session(mode="pipelined").register(q).runtime
+    chaotic = chaos[1].runtime
+    chunk = world.chunks[0]
+
+    def jp(fn, *args):
+        return str(jax.make_jaxpr(fn)(*args))
+
+    assert jp(plain._windows_impl, chunk) == jp(chaotic._windows_impl, chunk)
+    _, opp_shape = jax.eval_shape(plain._windows_impl, chunk)
+    op_payload = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                              opp_shape)
+    for name in plain.upstream:
+        pa, pb = plain.operators[name], chaotic.operators[name]
+        assert jp(functools.partial(plain._op_impl, name),
+                  op_payload, pa.kb, pa.env) == \
+               jp(functools.partial(chaotic._op_impl, name),
+                  op_payload, pb.kb, pb.env), name
+    if plain._agg_win_ch is not None and chaotic._agg_win_ch is not None:
+        fa = plain.operators[plain.final]
+        fb = chaotic.operators[chaotic.final]
+        assert jp(plain._sink_impl, plain._agg_win_ch, plain._out_ch,
+                  fa.kb, fa.env) == \
+               jp(chaotic._sink_impl, chaotic._agg_win_ch, chaotic._out_ch,
+                  fb.kb, fb.env)
+
+
+# --------------------------------------------------------------------------
+# no-progress watchdog
+# --------------------------------------------------------------------------
+
+def test_stalled_pipeline_raises_diagnostic_not_spin(world, baseline):
+    """A wedged edge must surface as PipelineStalledError naming the edge,
+    not an infinite drain loop."""
+    q = baseline[0]
+    rt = world.session(mode="pipelined").register(q).runtime
+    edge = "source->%s" % rt.final
+    # wedge the source edge: the ledger says it is full, so _pump cannot
+    # window the fed chunk and nothing ever enters flight
+    rt._edge_stats[edge]["pushes"] += rt.channel_capacity
+    rt.feed(world.chunks[0])
+    assert rt._in_flight == 0 and len(rt._src_q) == 1
+    with pytest.raises(PipelineStalledError) as ei:
+        rt.drain()
+    assert edge in str(ei.value)
+    # an idle pipeline still reports plain driver misuse, not a stall
+    idle = world.session(mode="pipelined").register(q).runtime
+    with pytest.raises(RuntimeError, match="feed"):
+        idle.drain()
+
+
+def test_config_rejects_faults_outside_pipelined():
+    plan = FaultPlan((FaultEvent("crash_stage", "source", 0),))
+    with pytest.raises(ValueError, match="pipelined"):
+        ExecutionConfig(mode="monolithic", faults=plan)
+    with pytest.raises(ValueError, match="pipelined"):
+        ExecutionConfig(mode="single_program", recovery=RecoveryConfig())
+    with pytest.raises(TypeError):
+        ExecutionConfig(mode="pipelined", faults="not a plan")
+    with pytest.raises(TypeError):
+        ExecutionConfig(mode="pipelined", recovery="not a config")
+    with pytest.raises(ValueError):
+        RecoveryConfig(checkpoint_every=-1)
+    with pytest.raises(ValueError):
+        RecoveryConfig(stage_timeout_s=0.0)
+
+
+def test_nonpipelined_modes_report_inert_recovery_surface(baseline):
+    st = baseline[1].last_stats
+    assert st["recovery"] == empty_recovery_stats(enabled=False)
+    assert st["degraded"] is False
+
+
+# --------------------------------------------------------------------------
+# serving-layer quarantine (host-only stub engine)
+# --------------------------------------------------------------------------
+
+class _StubEngine:
+    """The four methods QueryAdmission needs, with poison-chunk faults."""
+
+    def __init__(self):
+        self.registered = {}
+        self.processed = []
+        self._n = 0
+
+    def register(self, query, name=None):
+        self._n += 1
+        nm = name or "q%d" % self._n
+        self.registered[nm] = query
+        return types.SimpleNamespace(name=nm)
+
+    def unregister(self, name):
+        del self.registered[name]
+
+    def process_chunk(self, chunk):
+        if chunk == "poison":
+            raise RuntimeError("poisoned feed")
+        self.processed.append(chunk)
+        return {}
+
+
+def test_admission_quarantines_repeatedly_faulting_tenant():
+    eng = _StubEngine()
+    adm = QueryAdmission(eng, num_slots=4, max_tenant_faults=2)
+    assert adm.submit(QueryRequest("qa", tenant="a", name="qa"))
+    assert adm.submit(QueryRequest("qb", tenant="b", name="qb"))
+    for _ in range(2):
+        assert adm.offer_chunk("poison", tenant="a")
+    assert adm.offer_chunk("good", tenant="b")
+    while adm.pending_chunks() and "a" not in adm.quarantined:
+        adm.tick()
+    assert "a" in adm.quarantined
+    assert adm.counters["tenant_faults"] == 2
+    assert adm.counters["quarantined_tenants"] == 1
+    # a's standing query is retired, b keeps running
+    assert set(eng.registered) == {"qb"}
+    assert adm.drain() == [("b", {})] or "good" in eng.processed
+    # further traffic from a is refused at both boundaries
+    assert not adm.offer_chunk("good", tenant="a")
+    assert not adm.submit(QueryRequest("qa2", tenant="a"))
+    st = adm.stats()
+    assert st["quarantined"] == ["a"]
+
+
+def test_admission_validator_rejects_and_counts():
+    eng = _StubEngine()
+    adm = QueryAdmission(
+        eng, validator=lambda c: ["bad band"] if c == "bad" else [])
+    assert adm.submit(QueryRequest("qa", tenant="t"))
+    assert not adm.offer_chunk("bad", tenant="t")
+    assert adm.offer_chunk("ok", tenant="t")
+    assert adm.counters["chunks_invalid"] == 1
+    assert adm.stats()["invalid_reasons"] == {"t": ["bad band"]}
+    adm.drain()
+    assert eng.processed == ["ok"]
+    # a success resets the consecutive-fault count: no quarantine
+    assert adm.quarantined == set()
+
+
+def test_serve_engine_defaults_ingest_validator(world):
+    eng = world.session(mode="monolithic").serve()
+    adm = eng.admission(num_slots=2)
+    assert adm.validator is not None
+    assert not adm.offer_chunk(corrupt_batch(world.chunks[0]), tenant="t")
+    assert adm.counters["chunks_invalid"] == 1
+    assert adm.offer_chunk(world.chunks[0], tenant="t")
+
+
+# --------------------------------------------------------------------------
+# launcher: malformed .rq exits 2 with line/column + offending source line
+# --------------------------------------------------------------------------
+
+def test_malformed_rq_exits_with_code_2(tmp_path):
+    bad = tmp_path / "bad.rq"
+    bad.write_text(
+        "REGISTER QUERY broken AS\n"
+        "CONSTRUCT { ?t §oops }\n"
+        "FROM STREAM <stream> [RANGE TRIPLES 8 STEP 8]\n"
+        "WHERE { ?t ds:mentions ?e . }\n"
+    )
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dscep_run", "--rq", str(bad),
+         "--tweets", "8", "--artists", "4", "--shows", "2", "--filler", "10"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 2, res.stdout + "\n" + res.stderr
+    assert "line 2" in res.stderr, res.stderr
+    assert "§oops" in res.stderr, res.stderr      # the offending source line
+    assert "^" in res.stderr, res.stderr

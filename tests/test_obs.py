@@ -227,8 +227,10 @@ def test_last_stats_uniform_across_modes_trace_off(oworld):
         reg.run(oworld.chunks)
         stats = reg.last_stats
         assert set(stats) == {"query", "mode", "overflow_totals", "channels",
-                              "operators", "spans"}
+                              "operators", "spans", "recovery", "degraded"}
         assert stats["mode"] == mode
+        assert stats["recovery"]["enabled"] is False
+        assert stats["degraded"] is False
         assert stats["operators"] == {}    # metrics need trace= enabled
         assert stats["spans"] == {}
         assert all(v == 0 for v in stats["overflow_totals"].values())
